@@ -1,0 +1,75 @@
+"""Subprocess: real wall-clock 8-device AllReduce sweep (default vs policy
+vs deliberately-bad).  Prints one JSON per row."""
+
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.collectives.dispatch import reset_dispatcher
+from repro.core.runtime import PolicyRuntime
+from repro.policies import bad_channels, ring_mid_v2
+
+SIZES_MIB = [1, 4, 8, 16, 32]
+REPS = 20
+
+
+def timeit(fn, x):
+    fn(x).block_until_ready()          # compile+warm
+    fn(x).block_until_ready()
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), float(np.std(ts) / np.mean(ts))
+
+
+def main():
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(8), ("x",))
+    rng = np.random.RandomState(0)
+
+    for mib in SIZES_MIB:
+        n_elems = mib * (1 << 20) // 4
+        x = rng.randn(8, n_elems).astype(np.float32)
+        busbytes = 2 * 7 / 8 * (mib << 20)
+
+        def spmd(fn):
+            return jax.jit(shard_map(fn, mesh=mesh, in_specs=P("x"),
+                                     out_specs=P("x")))
+
+        t_def, cv_def = timeit(spmd(lambda v: lax.psum(v, "x")), x)
+
+        rt = PolicyRuntime()
+        rt.load(ring_mid_v2.program)
+        disp = reset_dispatcher(runtime=rt)
+        t_pol, cv_pol = timeit(spmd(lambda v: disp.all_reduce(v, "x")), x)
+        d = disp.decisions[-1]
+
+        rt.reload(bad_channels.program)
+        disp2 = reset_dispatcher(runtime=rt)
+        t_bad, _ = timeit(spmd(lambda v: disp2.all_reduce(v, "x")), x)
+
+        print(json.dumps({
+            "name": f"{mib}MiB",
+            "default_ms": round(t_def * 1e3, 3),
+            "policy_ms": round(t_pol * 1e3, 3),
+            "bad_policy_ms": round(t_bad * 1e3, 3),
+            "policy_choice": f"algo={d.algo} proto={d.proto} ch={d.channels}",
+            "policy_vs_default_pct": round(100 * (t_def / t_pol - 1), 1),
+            "bad_degradation_pct": round(100 * (1 - t_def / t_bad), 1),
+            "default_busbw_gbs": round(busbytes / t_def / 1e9, 2),
+            "cv_default": round(cv_def, 4), "cv_policy": round(cv_pol, 4),
+        }), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""§5.2 hot-reload reproduction: swap latency + zero lost calls under
+continuous invocation (paper: 1.07 µs swap, ~9.4 ms total, 0 lost/400k)."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import PolicyRuntime, make_ctx
+from repro.policies import bad_channels, ring_mid_v2, static_override
+
+N_CALLS = 400_000
+N_THREADS = 4
+
+
+def run(report):
+    rt = PolicyRuntime()
+    rt.load(static_override.program)
+
+    # swap latency distribution over 200 reloads
+    swaps = []
+    totals = []
+    for i in range(200):
+        prog = bad_channels.program if i % 2 == 0 else ring_mid_v2.program
+        t0 = time.perf_counter_ns()
+        rt.reload(prog)
+        totals.append((time.perf_counter_ns() - t0) / 1e3)
+        swaps.append(rt.stats.swap_ns_last / 1e3)
+    report("hot_reload", "swap_latency",
+           swap_us_p50=float(np.percentile(swaps, 50)),
+           swap_us_p99=float(np.percentile(swaps, 99)),
+           total_reload_us_p50=float(np.percentile(totals, 50)),
+           paper="swap 1.07 us, total ~9.4 ms (verify+LLVM JIT)")
+
+    # zero lost calls across 400k invocations with concurrent reloads
+    rt2 = PolicyRuntime()
+    rt2.load(static_override.program)
+    per_thread = N_CALLS // N_THREADS
+    lost = [0] * N_THREADS
+    stop = threading.Event()
+
+    def invoker(t):
+        bad = 0
+        for _ in range(per_thread):
+            ctx = make_ctx("tuner", msg_size=8 << 20)
+            r = rt2.invoke("tuner", ctx)
+            if r is None or ctx["n_channels"] not in (8, 1, 32):
+                bad += 1
+        lost[t] = bad
+
+    def reloader():
+        i = 0
+        while not stop.is_set():
+            rt2.reload(bad_channels.program if i % 2 == 0
+                       else static_override.program)
+            i += 1
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=invoker, args=(t,))
+               for t in range(N_THREADS)]
+    rl = threading.Thread(target=reloader)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    rl.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rl.join()
+    dt = time.perf_counter() - t0
+    report("hot_reload", "lost_calls",
+           invocations=N_CALLS, lost=sum(lost),
+           reloads_during=rt2.stats.reloads, wall_s=round(dt, 2),
+           paper="0 lost across 400k")

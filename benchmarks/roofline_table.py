@@ -1,0 +1,43 @@
+"""Aggregate the dry-run campaign JSONs into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def run(report):
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        report("roofline", "missing",
+               note=f"no dry-run results under {RESULTS}; run "
+                    "scripts/run_dryrun_all.sh first")
+        return
+    ok = err = skip = 0
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r["status"] == "error":
+            err += 1
+            report("roofline", f"{r['arch']}|{r['shape']}|{r['mesh']}",
+                   status="ERROR", error=r.get("error", "?")[:120])
+            continue
+        if r["status"] == "skipped":
+            skip += 1
+            report("roofline", f"{r['arch']}|{r['shape']}|{r['mesh']}",
+                   status="SKIP", reason=r.get("reason", "")[:80])
+            continue
+        ok += 1
+        report("roofline", f"{r['arch']}|{r['shape']}|{r['mesh']}",
+               t_compute_ms=round(r["t_compute_s"] * 1e3, 3),
+               t_memory_ms=round(r["t_memory_s"] * 1e3, 3),
+               t_collective_ms=round(r["t_collective_s"] * 1e3, 3),
+               dominant=r["dominant"],
+               useful_flops_ratio=round(r["useful_flops_ratio"], 3),
+               coll_gb=round(r["collective_wire_bytes_per_dev"] / 1e9, 3),
+               compile_s=r.get("compile_s"))
+    report("roofline", "summary", ok=ok, errors=err, skipped=skip)

@@ -1,0 +1,69 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table1 table2
+
+Prints ``section,name,key=value,...`` CSV-ish lines and writes
+results/bench.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+SUITES = {
+    "table1": ("benchmarks.table1_overhead", "Table 1: per-decision overhead"),
+    "safety": ("benchmarks.safety_suite", "5.2: 7 safe / 7 unsafe"),
+    "hot_reload": ("benchmarks.hot_reload", "5.2: atomic hot-reload"),
+    "table2": ("benchmarks.table2_allreduce", "Table 2/Fig 2: AllReduce sweep"),
+    "composability": ("benchmarks.composability", "5.3: profiler->tuner loop"),
+    "net": ("benchmarks.net_overhead", "5.3: net plugin overhead"),
+    "roofline": ("benchmarks.roofline_table", "Dry-run roofline table"),
+}
+
+RESULTS = []
+
+
+def report(section: str, name: str, **kv):
+    rec = {"section": section, "name": name, **kv}
+    RESULTS.append(rec)
+    parts = [f"{k}={v}" for k, v in kv.items()]
+    print(f"{section},{name}," + ",".join(parts), flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*", default=[])
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args()
+    picks = args.suites or list(SUITES)
+
+    failures = 0
+    for key in picks:
+        mod_name, desc = SUITES[key]
+        print(f"\n=== {key}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run(report)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            report(key, "SUITE_ERROR", error=traceback.format_exc()[-200:])
+        print(f"--- {key} done in {time.time() - t0:.1f}s", flush=True)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(RESULTS, f, indent=1, default=str)
+    print(f"\nwrote {len(RESULTS)} records to {args.out}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

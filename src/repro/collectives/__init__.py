@@ -1,0 +1,22 @@
+"""Collective algorithms, protocols, cost model, and policy-driven dispatch.
+
+This is the substrate the paper's policies govern: every collective the
+framework emits flows through :mod:`dispatch`, which consults the verified
+tuner policy exactly like NCCL's getCollInfo consults a tuner plugin.
+"""
+
+from .algorithms import (all_gather_ring, all_to_all_chunked,
+                         allreduce_bidir_ring, allreduce_native,
+                         allreduce_ring, allreduce_tree,
+                         reduce_scatter_ring)
+from .cost_model import CostModel, TPU_V5E, NVLINK_B300
+from .dispatch import (CollectiveDispatcher, DispatchConfig, dispatcher,
+                       reset_dispatcher)
+
+__all__ = [
+    "all_gather_ring", "all_to_all_chunked", "allreduce_bidir_ring",
+    "allreduce_native", "allreduce_ring", "allreduce_tree",
+    "reduce_scatter_ring", "CostModel", "TPU_V5E", "NVLINK_B300",
+    "CollectiveDispatcher", "DispatchConfig", "dispatcher",
+    "reset_dispatcher",
+]

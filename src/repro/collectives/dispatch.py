@@ -1,0 +1,282 @@
+"""Policy-driven collective dispatch — the getCollInfo() integration point.
+
+Every collective the framework emits calls into :class:`CollectiveDispatcher`,
+which mirrors NCCL's tuner-plugin flow:
+
+  1. build a ``policy_context`` (collective type, message bytes, rank count,
+     communicator id, axis kind, dtype, max channels)
+  2. invoke the attached verified tuner program (host tier) — falling back
+     to the framework default (DEFAULT algorithm, like NCCL defaulting to
+     NVLS) when no policy is attached or the policy defers
+  3. translate the decision through a tuner-v5-style cost table: the
+     policy's choice zeroes its (algo, proto) cost; infeasible combinations
+     keep sentinel cost so dispatch falls back gracefully
+  4. clamp channels to the framework's max (NCCL passes maxChannels the
+     tuner must respect)
+  5. emit the chosen algorithm's ops
+
+Decisions happen at **trace time** (shapes are static under jit — the same
+information getCollInfo sees per call).  The dispatcher records a decision
+log; the policy *epoch* participates in the step-cache key so hot-reload
+retraces exactly once per swap (§T3: in-flight steps finish on the old
+policy).
+
+The net-plugin hook (§5.3) interposes here too: when a net program is
+attached, each dispatch invokes it with (op, bytes, peer) — the data-plane
+accounting path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.context import Algo, AxisKind, CollType, Proto, make_ctx
+from ..core.runtime import PolicyRuntime, global_runtime
+from . import algorithms as alg
+from .cost_model import CostModel, HwProfile, TPU_V5E
+
+SENTINEL_COST = 1e9
+MAX_CHANNELS = 32
+
+
+@dataclasses.dataclass
+class Decision:
+    coll: int
+    algo: int
+    proto: int
+    channels: int
+    size_bytes: int
+    n_ranks: int
+    axis_kind: int
+    comm_id: int
+    from_policy: bool
+
+    def key(self) -> Tuple:
+        return (self.coll, self.algo, self.proto, self.channels)
+
+
+@dataclasses.dataclass
+class DispatchConfig:
+    hw: HwProfile = TPU_V5E
+    default_algo: int = Algo.DEFAULT
+    default_proto: int = Proto.SIMPLE
+    default_channels: int = 8
+    max_channels: int = MAX_CHANNELS
+    enable_net_hook: bool = True
+
+
+def _comm_id(axis_name: str, n: int) -> int:
+    """Stable communicator hash (the paper derives one from the context
+    pointer; we derive one from the axis identity)."""
+    h = hashlib.sha1(f"{axis_name}:{n}".encode()).digest()
+    return int.from_bytes(h[:4], "little") & 0x7FFFFFFF
+
+
+_ALGO_FNS: Dict[Tuple[int, int], Callable] = {}
+
+
+def _algo_fn(coll: int, algo: int) -> Callable:
+    if coll == CollType.ALL_REDUCE:
+        return {
+            Algo.DEFAULT: alg.allreduce_native,
+            Algo.RING: alg.allreduce_ring,
+            Algo.TREE: alg.allreduce_tree,
+            Algo.BIDIR_RING: alg.allreduce_bidir_ring,
+        }[algo]
+    if coll == CollType.ALL_TO_ALL:
+        return {
+            Algo.DEFAULT: alg.all_to_all_native,
+            Algo.RING: alg.all_to_all_chunked,
+            Algo.TREE: alg.all_to_all_chunked,
+            Algo.BIDIR_RING: alg.all_to_all_chunked,
+        }[algo]
+    if coll == CollType.REDUCE_SCATTER:
+        if algo == Algo.DEFAULT:
+            return lambda x, a, **kw: lax.psum_scatter(x, a, tiled=True)
+        return alg.reduce_scatter_ring
+    if coll == CollType.ALL_GATHER:
+        if algo == Algo.DEFAULT:
+            return lambda x, a, **kw: lax.all_gather(x, a, tiled=True)
+        return alg.all_gather_ring
+    raise KeyError(f"no implementation for coll {coll} algo {algo}")
+
+
+class CollectiveDispatcher:
+    def __init__(self, runtime: Optional[PolicyRuntime] = None,
+                 config: Optional[DispatchConfig] = None):
+        self.runtime = runtime or global_runtime()
+        self.config = config or DispatchConfig()
+        self.cost_model = CostModel(self.config.hw)
+        self.decisions: List[Decision] = []
+        self._lock = threading.Lock()
+        self.net_calls = 0
+        self.net_bytes = 0
+        self._apply_env_plugin()
+
+    def _apply_env_plugin(self, *, n_devices: int = 0, tp: int = 0,
+                          dp: int = 0, n_pods: int = 1) -> None:
+        """Init-time hook (NCCL env plugin analogue): a verified env
+        program may override the framework's default knobs."""
+        if self.runtime.attached("env") is None:
+            return
+        ctx = make_ctx("env", n_devices=n_devices, tp=tp, dp=dp,
+                       n_pods=n_pods, topo_links=self.config.hw.n_links)
+        self.runtime.invoke("env", ctx)
+        cfg = self.config
+        if ctx["default_algorithm"]:
+            cfg.default_algo = int(ctx["default_algorithm"])
+        if ctx["default_protocol"]:
+            cfg.default_proto = int(ctx["default_protocol"])
+        if ctx["default_channels"]:
+            cfg.default_channels = min(int(ctx["default_channels"]),
+                                       MAX_CHANNELS)
+        if ctx["max_channels"]:
+            cfg.max_channels = min(int(ctx["max_channels"]), MAX_CHANNELS)
+
+    # ------------------------------------------------------------------
+    def decide(self, coll: int, size_bytes: int, n: int, *,
+               axis_kind: int = AxisKind.DATA, dtype_bytes: int = 4,
+               axis_name: str = "?") -> Decision:
+        cfg = self.config
+        cid = _comm_id(axis_name, n)
+        ctx = make_ctx(
+            "tuner",
+            coll_type=coll, msg_size=size_bytes, n_ranks=n, comm_id=cid,
+            axis_kind=axis_kind, dtype_bytes=dtype_bytes,
+            max_channels=cfg.max_channels, topo_links=cfg.hw.n_links,
+            algorithm=0, protocol=0, n_channels=0,
+        )
+        ret = self.runtime.invoke("tuner", ctx)
+        from_policy = ret is not None
+        algo = ctx["algorithm"]
+        proto = ctx["protocol"]
+        channels = ctx["n_channels"]
+
+        if not from_policy or (algo == 0 and proto == 0 and channels == 0):
+            # no policy attached, or policy deferred: framework default
+            algo, proto = cfg.default_algo, cfg.default_proto
+            channels = cfg.default_channels
+            from_policy = False
+
+        # --- tuner-v5 cost-table translation + graceful fallback ----------
+        table = self.cost_model.cost_table(coll, size_bytes, n,
+                                           channels=max(channels, 1))
+        if algo >= Algo.COUNT or proto >= Proto.COUNT:
+            # unavailable combination: sentinel cost -> framework default
+            algo, proto = cfg.default_algo, cfg.default_proto
+            channels = cfg.default_channels
+        table[algo][proto] = 0.0
+        best = min(
+            ((a, p) for a in range(Algo.COUNT) for p in range(Proto.COUNT)),
+            key=lambda ap: table[ap[0]][ap[1]],
+        )
+        algo, proto = best
+
+        # --- clamp channels (NCCL maxChannels contract) --------------------
+        channels = max(1, min(int(channels) or cfg.default_channels,
+                              cfg.max_channels))
+
+        d = Decision(coll=coll, algo=algo, proto=proto, channels=channels,
+                     size_bytes=size_bytes, n_ranks=n, axis_kind=axis_kind,
+                     comm_id=cid, from_policy=from_policy)
+        with self._lock:
+            self.decisions.append(d)
+        self._net_hook(d)
+        return d
+
+    def _net_hook(self, d: Decision) -> None:
+        if not self.config.enable_net_hook:
+            return
+        if self.runtime.attached("net") is None:
+            return
+        nctx = make_ctx("net", op=0, bytes=d.size_bytes,
+                        peer=(d.comm_id + 1) % max(d.n_ranks, 1),
+                        comm_id=d.comm_id, conn_id=d.coll)
+        self.runtime.invoke("net", nctx)
+        self.net_calls += 1
+        self.net_bytes += d.size_bytes
+
+    # ------------------------------------------------------------------
+    # collective entry points (call inside shard_map)
+    # ------------------------------------------------------------------
+    def _dispatch(self, coll: int, x, axis_name: str, axis_kind: int,
+                  **kw):
+        n = lax.axis_size(axis_name)
+        if n == 1 and coll in (CollType.ALL_REDUCE,):
+            return x
+        size_bytes = int(x.size) * x.dtype.itemsize
+        d = self.decide(coll, size_bytes, n, axis_kind=axis_kind,
+                        dtype_bytes=x.dtype.itemsize, axis_name=axis_name)
+        fn = _algo_fn(coll, d.algo)
+        return fn(x, axis_name, n_channels=d.channels, protocol=d.proto, **kw)
+
+    def all_reduce(self, x, axis_name: str, *,
+                   axis_kind: int = AxisKind.DATA):
+        return self._dispatch(CollType.ALL_REDUCE, x, axis_name, axis_kind)
+
+    # psum-compatible alias used throughout the model code
+    def psum(self, x, axis_name: str, *, axis_kind: int = AxisKind.DATA):
+        return self.all_reduce(x, axis_name, axis_kind=axis_kind)
+
+    def reduce_scatter(self, x, axis_name: str, *,
+                       axis_kind: int = AxisKind.DATA):
+        return self._dispatch(CollType.REDUCE_SCATTER, x, axis_name,
+                              axis_kind)
+
+    def all_gather(self, x, axis_name: str, *,
+                   axis_kind: int = AxisKind.MODEL):
+        return self._dispatch(CollType.ALL_GATHER, x, axis_name, axis_kind)
+
+    def all_to_all(self, x, axis_name: str, *,
+                   axis_kind: int = AxisKind.EXPERT, **kw):
+        return self._dispatch(CollType.ALL_TO_ALL, x, axis_name, axis_kind,
+                              **kw)
+
+    # ------------------------------------------------------------------
+    def profiler_feed(self, comm_id: int, latency_ns: int, *, coll: int = 0,
+                      msg_size: int = 0, channels: int = 0, algo: int = 0,
+                      ts_ns: int = 0) -> None:
+        """Deliver a latency observation to the attached profiler program."""
+        if self.runtime.attached("profiler") is None:
+            return
+        pctx = make_ctx("profiler", event_type=1, coll_type=coll,
+                        msg_size=msg_size, comm_id=comm_id,
+                        latency_ns=latency_ns, n_channels=channels,
+                        algorithm=algo, timestamp_ns=ts_ns)
+        self.runtime.invoke("profiler", pctx)
+
+    @property
+    def epoch(self) -> int:
+        """Policy epoch — include in jit cache keys; bumps on hot-reload."""
+        return self.runtime.epoch
+
+    def clear_log(self) -> None:
+        with self._lock:
+            self.decisions.clear()
+
+
+_DISPATCHER: Optional[CollectiveDispatcher] = None
+_DISPATCHER_LOCK = threading.Lock()
+
+
+def dispatcher() -> CollectiveDispatcher:
+    global _DISPATCHER
+    with _DISPATCHER_LOCK:
+        if _DISPATCHER is None:
+            _DISPATCHER = CollectiveDispatcher()
+        return _DISPATCHER
+
+
+def reset_dispatcher(config: Optional[DispatchConfig] = None,
+                     runtime: Optional[PolicyRuntime] = None
+                     ) -> CollectiveDispatcher:
+    global _DISPATCHER
+    with _DISPATCHER_LOCK:
+        _DISPATCHER = CollectiveDispatcher(runtime=runtime, config=config)
+        return _DISPATCHER

@@ -1,0 +1,31 @@
+"""repro.core — verified, composable policy execution (the paper's contribution).
+
+Layers:
+  isa / asm / frontend   — bytecode, assembler, restricted-Python compiler
+  verifier               — PREVAIL-style load-time static verification
+  vm / jit / jaxc        — interpreter (oracle), host JIT, in-graph JAX tier
+  maps                   — typed cross-plugin state (composability substrate)
+  runtime                — load/attach/hot-reload lifecycle
+"""
+
+from .asm import AsmError, assemble
+from .context import (Algo, AxisKind, CollType, PolicyContextValues,
+                      ProfEvent, Proto, make_ctx)
+from .frontend import CompileError, compile_policy, map_decl, policy
+from .isa import Insn
+from .maps import ArrayMap, BpfMap, HashMap, MapRegistry, PerCpuArrayMap
+from .program import MapDecl, Program
+from .runtime import (LoadedProgram, PolicyRuntime, global_runtime,
+                      reset_global_runtime)
+from .verifier import VerifierError, verify
+from .vm import VM, VMError
+
+__all__ = [
+    "AsmError", "assemble", "Algo", "AxisKind", "CollType",
+    "PolicyContextValues", "ProfEvent", "Proto", "make_ctx",
+    "CompileError", "compile_policy", "map_decl", "policy", "Insn",
+    "ArrayMap", "BpfMap", "HashMap", "MapRegistry", "PerCpuArrayMap",
+    "MapDecl", "Program", "LoadedProgram", "PolicyRuntime",
+    "global_runtime", "reset_global_runtime", "VerifierError", "verify",
+    "VM", "VMError",
+]

@@ -1,0 +1,79 @@
+"""Helper function registry and per-program-type whitelists.
+
+Helpers are the only way a policy program touches the outside world.  The
+verifier checks (a) the helper id is whitelisted for the program's section
+type, (b) argument registers carry the right abstract types (map pointer,
+stack pointer to an initialized buffer of key/value size, scalar).
+
+Ids follow the kernel where the helper exists there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Tuple
+
+# Argument type tags used by the verifier's call checker.
+ARG_MAP_PTR = "map_ptr"
+ARG_STACK_KEY = "stack_key"      # pointer to initialized key_size bytes
+ARG_STACK_VALUE = "stack_value"  # pointer to initialized value_size bytes
+ARG_SCALAR = "scalar"
+ARG_ANYTHING = "any"
+
+RET_MAP_VALUE_OR_NULL = "map_value_or_null"
+RET_SCALAR = "scalar"
+
+
+@dataclasses.dataclass(frozen=True)
+class Helper:
+    hid: int
+    name: str
+    args: Tuple[str, ...]
+    ret: str
+
+
+HELPERS = {
+    1: Helper(1, "map_lookup_elem", (ARG_MAP_PTR, ARG_STACK_KEY), RET_MAP_VALUE_OR_NULL),
+    2: Helper(2, "map_update_elem", (ARG_MAP_PTR, ARG_STACK_KEY, ARG_STACK_VALUE, ARG_SCALAR), RET_SCALAR),
+    3: Helper(3, "map_delete_elem", (ARG_MAP_PTR, ARG_STACK_KEY), RET_SCALAR),
+    5: Helper(5, "ktime_get_ns", (), RET_SCALAR),
+    6: Helper(6, "trace_printk", (ARG_SCALAR,), RET_SCALAR),
+    7: Helper(7, "get_prandom_u32", (), RET_SCALAR),
+    # repro-specific: smoothed exponential moving average update helper —
+    # new = (old*(w-1) + sample)/w, atomic on an 8-byte map slot.  Exists so
+    # adaptive policies don't burn their insn budget on fixed-point math.
+    64: Helper(64, "ema_update", (ARG_MAP_PTR, ARG_STACK_KEY, ARG_SCALAR, ARG_SCALAR), RET_SCALAR),
+}
+
+HELPER_IDS = {h.name: h.hid for h in HELPERS.values()}
+
+# Per-section whitelists (the "illegal helper" bug class rejects e.g. a
+# profiler-only helper used from a tuner program).
+WHITELISTS = {
+    "tuner": {1, 2, 3, 5, 7, 64},
+    "profiler": {1, 2, 3, 5, 6, 7, 64},
+    "net": {1, 2, 5, 7},
+    "env": {1, 2, 5},
+}
+
+
+def helper_allowed(section: str, hid: int) -> bool:
+    return hid in WHITELISTS.get(section, set())
+
+
+def ktime_get_ns() -> int:
+    return time.monotonic_ns()
+
+
+_PRNG_STATE = [0x853C49E6748FEA9B]
+
+
+def get_prandom_u32() -> int:
+    # xorshift64*; deterministic across runs is fine for policies.
+    x = _PRNG_STATE[0]
+    x ^= (x >> 12) & ((1 << 64) - 1)
+    x = (x ^ (x << 25)) & ((1 << 64) - 1)
+    x ^= x >> 27
+    _PRNG_STATE[0] = x
+    return (x * 0x2545F4914F6CDD1D >> 32) & 0xFFFFFFFF

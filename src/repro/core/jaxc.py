@@ -1,0 +1,386 @@
+"""jaxc — verified policy bytecode compiled to pure JAX (the in-graph tier).
+
+This tier goes beyond the paper: NCCLbpf's policies execute on the host
+around each collective launch; on TPU the step function is one fused XLA
+program, so we *if-convert* the verified policy into jnp ops and run it
+INSIDE the compiled program.  Closed-loop adaptation (profiler map ->
+tuner decision -> ``lax.switch`` branch) then happens per step with zero
+host round-trips and zero retraces.
+
+Why verification makes this possible:
+  * the CFG is a forward-only DAG  -> classic if-conversion: execute every
+    instruction under a predicate, writes select via ``jnp.where``
+  * every memory insn has a statically known region (ctx / stack / one
+    specific map)  -> each load/store lowers to a typed gather/scatter
+  * bounded stack, no unbounded loops -> fixed-size traced state
+
+Supported surface (JaxcError otherwise): ALU64/32, jumps, ctx loads/stores
+(8-byte fields), stack loads/stores (static or dynamic offset), ARRAY maps
+(u64-slot granularity), helpers map_lookup_elem / map_update_elem /
+ema_update.  Hash maps and wall-clock helpers are host-tier-only.
+
+State threading: the compiled function has signature
+
+    fn(ctx: uint32[n_fields*2] as u64 pairs? NO — see below]
+
+We pass ctx and maps as uint64 arrays under ``jax.enable_x64(True)``
+(scoped to the policy body; the surrounding model code stays 32-bit).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import helpers as H
+from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
+                  is_imm_form, is_jump_cond, is_load, is_store, jump_base,
+                  mem_size)
+from .maps import ArrayMap, BpfMap
+from .program import Program
+from .verifier import verify_with_info
+
+M64 = (1 << 64) - 1
+
+
+class JaxcError(Exception):
+    pass
+
+
+# pointer encoding (mirrors the host JIT):
+#   stack: 1<<32 | byte_off
+#   ctx:   2<<32 | byte_off
+#   map value (array map mi): (16+mi)<<40 | key<<8 ... key fits 32 bits?
+# we need key (u32) and offset; use: (16+mi)<<56 | key<<24 | byte_off
+# (byte_off < 2^24, key < 2^32 truncated to 2^32... keep key<=2^31)
+_STACK_TAG = 1 << 32
+_CTX_TAG = 2 << 32
+
+
+def _map_tag(mi: int):
+    return (16 + mi) << 56
+
+
+def check_supported(prog: Program) -> None:
+    for d in prog.maps:
+        if d.kind != "array":
+            raise JaxcError(
+                f"map '{d.name}' is {d.kind}; in-graph tier supports array "
+                "maps only (hash maps live on the host tier)")
+        if d.value_size % 8:
+            raise JaxcError(f"map '{d.name}': value_size must be 8-aligned")
+    for pc, insn in enumerate(prog.insns):
+        if insn.op == "call" and insn.imm not in (1, 2, 64):
+            raise JaxcError(
+                f"helper {H.HELPERS[insn.imm].name} (insn {pc}) is not "
+                "available in-graph")
+
+
+def compile_jax(prog: Program):
+    """Return (fn, map_names).
+
+    ``fn(ctx_vec, map_arrays) -> (ret, ctx_vec_out, map_arrays_out)`` where
+    ``ctx_vec`` is uint64[n_fields] and ``map_arrays`` is a dict
+    name -> uint64[max_entries, value_slots].  Pure; jit/vmap/scan-safe.
+    """
+    check_supported(prog)
+    vinfo = verify_with_info(prog)
+    insns = prog.insns
+    decls = list(prog.maps)
+    map_index = {d.name: i for i, d in enumerate(decls)}
+    n_fields = prog.ctx_type.size // 8
+
+    def u64(x):
+        return jnp.asarray(x, jnp.uint64)
+
+    def run(ctx_vec, map_arrays: Dict[str, jnp.ndarray]):
+        with jax.enable_x64(True):
+            ctx = jnp.asarray(ctx_vec, jnp.uint64)
+            maps = {k: jnp.asarray(v, jnp.uint64) for k, v in map_arrays.items()}
+            regs: List[jnp.ndarray] = [u64(0)] * 11
+            regs[1] = u64(_CTX_TAG)
+            regs[FP_REG] = u64(_STACK_TAG | STACK_SIZE)
+            stack = jnp.zeros(STACK_SIZE // 8, jnp.uint64)  # u64 slots
+
+            true_ = jnp.asarray(True)
+            false_ = jnp.asarray(False)
+            # incoming predicates per pc
+            incoming: Dict[int, List[jnp.ndarray]] = {0: [true_]}
+            ret = u64(0)
+            done = false_
+
+            def pred_or(ps):
+                p = ps[0]
+                for q in ps[1:]:
+                    p = jnp.logical_or(p, q)
+                return p
+
+            def sel(p, new, old):
+                return jnp.where(p, new, old)
+
+            def wreg(p, idx, val):
+                regs[idx] = sel(p, jnp.asarray(val, jnp.uint64), regs[idx])
+
+            def stack_load(ptr, size):
+                # u64-slot stack: require 8-aligned 8-byte access for dynamic
+                slot = ((ptr & jnp.uint64(0xFFFFFFFF)) >> 3).astype(jnp.int32)
+                word = stack[slot]
+                if size == 8:
+                    return word
+                sh = ((ptr & jnp.uint64(7)) * 8).astype(jnp.uint64)
+                mask = jnp.uint64((1 << (8 * size)) - 1)
+                return (word >> sh) & mask
+
+            def stack_store(p, ptr, size, val):
+                nonlocal stack
+                off = ptr & jnp.uint64(0xFFFFFFFF)
+                slot = (off >> 3).astype(jnp.int32)
+                word = stack[slot]
+                if size == 8:
+                    new = jnp.asarray(val, jnp.uint64)
+                else:
+                    sh = ((off & jnp.uint64(7)) * 8).astype(jnp.uint64)
+                    mask = jnp.uint64((1 << (8 * size)) - 1)
+                    new = (word & ~(mask << sh)) | ((jnp.asarray(val, jnp.uint64) & mask) << sh)
+                stack = stack.at[slot].set(sel(p, new, word))
+
+            def mapval_decode(ptr):
+                mi = ((ptr >> jnp.uint64(56)) - 16).astype(jnp.int32)
+                key = ((ptr >> jnp.uint64(24)) & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32)
+                off = (ptr & jnp.uint64(0xFFFFFF))
+                return mi, key, off
+
+            for pc, insn in enumerate(insns):
+                ps = incoming.get(pc)
+                if ps is None:
+                    continue  # statically unreachable
+                P = pred_or(ps)
+                op = insn.op
+
+                def flow_to(tgt, p):
+                    incoming.setdefault(tgt, []).append(p)
+
+                if op == "exit":
+                    take = jnp.logical_and(P, jnp.logical_not(done))
+                    ret = sel(take, regs[0], ret)
+                    done = jnp.logical_or(done, P)
+                    continue
+                if op == "ja":
+                    flow_to(pc + 1 + insn.off, P)
+                    continue
+                if op == "lddw":
+                    wreg(P, insn.dst, jnp.uint64(insn.imm & M64))
+                    flow_to(pc + 1, P)
+                    continue
+                if op == "ldmap":
+                    mi = map_index[insn.map_name]
+                    wreg(P, insn.dst, jnp.uint64(_map_tag(mi)))
+                    flow_to(pc + 1, P)
+                    continue
+                if op == "call":
+                    self_ret = self_call(pc, insn, P, regs, stack_load,
+                                         maps, decls)
+                    wreg(P, 0, self_ret)
+                    for r in (1, 2, 3, 4, 5):
+                        wreg(P, r, jnp.uint64(0))
+                    flow_to(pc + 1, P)
+                    continue
+                if is_alu(op):
+                    width = alu_width(op)
+                    base = alu_base(op)
+                    a = regs[insn.dst]
+                    b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+                        else regs[insn.src]
+                    wreg(P, insn.dst, _alu_jax(base, width, a, b))
+                    flow_to(pc + 1, P)
+                    continue
+                if is_jump_cond(op):
+                    base = jump_base(op)
+                    a = regs[insn.dst]
+                    b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+                        else regs[insn.src]
+                    c = _cmp_jax(base, a, b)
+                    flow_to(pc + 1 + insn.off, jnp.logical_and(P, c))
+                    flow_to(pc + 1, jnp.logical_and(P, jnp.logical_not(c)))
+                    continue
+                if is_load(op):
+                    size = mem_size(op)
+                    region, mname, base = vinfo.mem_info[pc]
+                    ptr = regs[insn.src] + jnp.uint64(insn.off & M64)
+                    if region == "ctx":
+                        off = base + insn.off  # static (verified)
+                        val = ctx[off // 8]
+                        if size < 8:
+                            val = val & jnp.uint64((1 << (8 * size)) - 1)
+                    elif region == "stack":
+                        val = stack_load(ptr, size)
+                    else:  # mapval
+                        mi, key, off = mapval_decode(ptr)
+                        slot = (off >> jnp.uint64(3)).astype(jnp.int32)
+                        val = maps[mname][key, slot]
+                        if size < 8:
+                            val = val & jnp.uint64((1 << (8 * size)) - 1)
+                    wreg(P, insn.dst, val)
+                    flow_to(pc + 1, P)
+                    continue
+                if is_store(op):
+                    size = mem_size(op)
+                    region, mname, base = vinfo.mem_info[pc]
+                    val = jnp.uint64(insn.imm & M64) if not op.startswith("stx") \
+                        else regs[insn.src]
+                    ptr = regs[insn.dst] + jnp.uint64(insn.off & M64)
+                    if region == "ctx":
+                        slot = (base + insn.off) // 8
+                        ctx = ctx.at[slot].set(sel(P, val, ctx[slot]))
+                    elif region == "stack":
+                        stack_store(P, ptr, size, val)
+                    else:  # mapval
+                        mi, key, off = mapval_decode(ptr)
+                        slot = (off >> jnp.uint64(3)).astype(jnp.int32)
+                        old = maps[mname][key, slot]
+                        maps[mname] = maps[mname].at[key, slot].set(
+                            sel(P, val, old))
+                    flow_to(pc + 1, P)
+                    continue
+                raise JaxcError(f"unhandled op {op}")
+
+            ret32 = ret
+            return ret32, ctx, maps
+
+    def self_call(pc: int, insn: Insn, P, regs, stack_load, maps, decls):
+        hid = insn.imm
+        # the verifier proved exactly which map reaches this call site
+        mname = vinfo.call_map[pc]
+        if mname is None:
+            raise JaxcError(f"helper at insn {pc} has no static map binding")
+        mi_static = map_index[mname]
+        d = decls[mi_static]
+        key = stack_load(regs[2], d.key_size).astype(jnp.uint64)
+        valid = key < jnp.uint64(d.max_entries)
+        ki = jnp.minimum(key, jnp.uint64(d.max_entries - 1)).astype(jnp.int32)
+        if hid == 1:  # map_lookup_elem(map, key*)
+            enc = (jnp.uint64(_map_tag(mi_static))
+                   | ((key & jnp.uint64(0xFFFFFFFF)) << jnp.uint64(24)))
+            return jnp.where(valid, enc, jnp.uint64(0))
+        if hid == 2:  # map_update_elem(map, key*, value*, flags)
+            n_slots = d.value_size // 8
+            row = [stack_load(regs[3] + jnp.uint64(8 * s), 8)
+                   for s in range(n_slots)]
+            newrow = jnp.stack(row)
+            old = maps[d.name][ki]
+            take = jnp.logical_and(P, valid)
+            maps[d.name] = maps[d.name].at[ki].set(
+                jnp.where(take, newrow, old))
+            return jnp.where(valid, jnp.uint64(0), jnp.uint64(M64))
+        if hid == 64:  # ema_update(map, key*, sample, weight)
+            w = jnp.maximum(regs[4], jnp.uint64(1))
+            old = maps[d.name][ki, 0]
+            new = (old * (w - jnp.uint64(1)) + regs[3]) // w
+            take = jnp.logical_and(P, valid)
+            maps[d.name] = maps[d.name].at[ki, 0].set(
+                jnp.where(take, new, old))
+            return new
+        raise JaxcError(f"helper {hid} not supported in-graph")
+
+    return run, [d.name for d in decls]
+
+
+def _alu_jax(base: str, width: int, a, b):
+    mask32 = jnp.uint64(0xFFFFFFFF)
+    if width == 32:
+        a = a & mask32
+        b = b & mask32
+
+    def fin(x):
+        return (x & mask32) if width == 32 else x
+
+    if base == "mov":
+        return fin(b)
+    if base == "add":
+        return fin(a + b)
+    if base == "sub":
+        return fin(a - b)
+    if base == "mul":
+        return fin(a * b)
+    if base == "div":
+        return fin(a // jnp.maximum(b, jnp.uint64(1)))  # b!=0 verified
+    if base == "mod":
+        return fin(a % jnp.maximum(b, jnp.uint64(1)))
+    if base == "and":
+        return a & b
+    if base == "or":
+        return fin(a | b)
+    if base == "xor":
+        return fin(a ^ b)
+    sh = b & jnp.uint64(width - 1)
+    if base == "lsh":
+        return fin(a << sh)
+    if base == "rsh":
+        return fin(a >> sh)
+    if base == "arsh":
+        sa = a.astype(jnp.int64) if width == 64 else \
+            (a & mask32).astype(jnp.uint32).astype(jnp.int32)
+        return fin((sa >> sh.astype(sa.dtype)).astype(jnp.int64).astype(jnp.uint64))
+    if base == "neg":
+        return fin(jnp.uint64(0) - a)
+    raise JaxcError(f"ALU base {base}")
+
+
+def _cmp_jax(base: str, a, b):
+    if base in ("jeq",):
+        return a == b
+    if base == "jne":
+        return a != b
+    if base == "jgt":
+        return a > b
+    if base == "jge":
+        return a >= b
+    if base == "jlt":
+        return a < b
+    if base == "jle":
+        return a <= b
+    if base == "jset":
+        return (a & b) != 0
+    sa, sb = a.astype(jnp.int64), b.astype(jnp.int64)
+    return {"jsgt": sa > sb, "jsge": sa >= sb,
+            "jslt": sa < sb, "jsle": sa <= sb}[base]
+
+
+# ---------------------------------------------------------------------------
+# Host <-> device map state conversion
+# ---------------------------------------------------------------------------
+
+def map_to_array(m: BpfMap) -> jnp.ndarray:
+    """ArrayMap -> uint64[max_entries, slots] (for donating into the step)."""
+    if not isinstance(m, ArrayMap):
+        raise JaxcError(f"map {m.name} is not an array map")
+    import numpy as np
+    slots = m.value_size // 8
+    out = np.zeros((m.max_entries, slots), dtype=np.uint64)
+    for i in range(m.max_entries):
+        buf = m.lookup(i.to_bytes(4, "little"))
+        out[i] = np.frombuffer(bytes(buf), dtype="<u8")
+    with jax.enable_x64(True):
+        return jnp.asarray(out)
+
+
+def array_to_map(arr, m: BpfMap) -> None:
+    """Write device map state back into the host map (after a step)."""
+    import numpy as np
+    host = np.asarray(arr, dtype=np.uint64)
+    for i in range(m.max_entries):
+        m.update(i.to_bytes(4, "little"), host[i].tobytes())
+
+
+def ctx_to_vec(ctx_buf: bytearray) -> jnp.ndarray:
+    import numpy as np
+    with jax.enable_x64(True):
+        return jnp.asarray(np.frombuffer(bytes(ctx_buf), dtype="<u8"))
+
+
+def compile_jax_jit(prog: Program):
+    fn, names = compile_jax(prog)
+    return jax.jit(fn), names

@@ -1,0 +1,241 @@
+"""Typed eBPF maps: structured, concurrent cross-plugin state.
+
+This is the composability substrate of the paper (§3, T2): profiler programs
+write telemetry, tuner programs read it, through *typed* maps with atomic
+access semantics — no ad hoc shared memory, no locking bugs in policy code.
+
+Map kinds (mirroring the kernel):
+  * ARRAY   — fixed number of slots, u32 key = index, preallocated values.
+  * HASH    — bounded-capacity hash map, fixed-size keys.
+  * PERCPU_ARRAY — one array per "cpu" (here: per host thread slot), for
+    contention-free counters aggregated on read.
+
+Keys and values are fixed-size byte strings; the verifier checks that policy
+programs pass correctly-sized stack buffers.  Host-side code uses the typed
+``lookup_u64``/``update_u64`` convenience accessors.
+
+Concurrency: a lock-striped design — updates take a per-stripe mutex;
+lookups return an immutable bytes snapshot.  Policy programs receive a
+*pointer* to the value slot (mutable view) exactly like kernel eBPF; per the
+kernel model, racing element writes are allowed and tear-free per 8-byte
+slot (guaranteed here by the GIL + bytearray slice assignment).
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+from typing import Dict, Iterator, Optional
+
+U64 = (1 << 64) - 1
+
+
+class MapError(Exception):
+    pass
+
+
+class BpfMap:
+    """Base class.  Values live in one backing bytearray per element."""
+
+    kind = "base"
+
+    def __init__(self, name: str, key_size: int, value_size: int, max_entries: int):
+        if key_size <= 0 or value_size <= 0 or max_entries <= 0:
+            raise MapError(f"map {name}: sizes must be positive")
+        self.name = name
+        self.key_size = key_size
+        self.value_size = value_size
+        self.max_entries = max_entries
+        # reentrant: typed accessors (update_u64) compose lookup+update
+        # under one critical section
+        self._lock = threading.RLock()
+
+    # -- raw interface used by the VM/JIT tiers ---------------------------
+    def lookup(self, key: bytes) -> Optional[bytearray]:
+        raise NotImplementedError
+
+    def update(self, key: bytes, value: bytes) -> int:
+        raise NotImplementedError
+
+    def delete(self, key: bytes) -> int:
+        raise NotImplementedError
+
+    def keys(self) -> Iterator[bytes]:
+        raise NotImplementedError
+
+    def _check_key(self, key: bytes) -> None:
+        if len(key) != self.key_size:
+            raise MapError(
+                f"map {self.name}: key size {len(key)} != {self.key_size}")
+
+    def _check_value(self, value: bytes) -> None:
+        if len(value) != self.value_size:
+            raise MapError(
+                f"map {self.name}: value size {len(value)} != {self.value_size}")
+
+    # -- typed convenience (host side) -------------------------------------
+    def lookup_u64(self, key: int, slot: int = 0) -> Optional[int]:
+        v = self.lookup(struct.pack("<I", key) if self.key_size == 4
+                        else struct.pack("<Q", key))
+        if v is None:
+            return None
+        return struct.unpack_from("<Q", v, slot * 8)[0]
+
+    def update_u64(self, key: int, value: int, slot: int = 0) -> None:
+        kb = struct.pack("<I", key) if self.key_size == 4 else struct.pack("<Q", key)
+        with self._lock:
+            v = self.lookup(kb)
+            if v is None:
+                buf = bytearray(self.value_size)
+                struct.pack_into("<Q", buf, slot * 8, value & U64)
+                self.update(kb, bytes(buf))
+            else:
+                struct.pack_into("<Q", v, slot * 8, value & U64)
+
+    def snapshot(self) -> Dict[bytes, bytes]:
+        with self._lock:
+            return {bytes(k): bytes(self.lookup(k)) for k in list(self.keys())}
+
+
+class ArrayMap(BpfMap):
+    kind = "array"
+
+    def __init__(self, name: str, value_size: int, max_entries: int):
+        super().__init__(name, 4, value_size, max_entries)
+        self._slots = [bytearray(value_size) for _ in range(max_entries)]
+
+    def _index(self, key: bytes) -> Optional[int]:
+        self._check_key(key)
+        idx = struct.unpack("<I", key)[0]
+        return idx if idx < self.max_entries else None
+
+    def lookup(self, key: bytes) -> Optional[bytearray]:
+        idx = self._index(key)
+        return None if idx is None else self._slots[idx]
+
+    def update(self, key: bytes, value: bytes) -> int:
+        self._check_value(value)
+        idx = self._index(key)
+        if idx is None:
+            return -1
+        self._slots[idx][:] = value
+        return 0
+
+    def delete(self, key: bytes) -> int:
+        # Array maps cannot delete (kernel semantics: -EINVAL).
+        return -1
+
+    def keys(self) -> Iterator[bytes]:
+        for i in range(self.max_entries):
+            yield struct.pack("<I", i)
+
+
+class HashMap(BpfMap):
+    kind = "hash"
+
+    def __init__(self, name: str, key_size: int, value_size: int, max_entries: int):
+        super().__init__(name, key_size, value_size, max_entries)
+        self._table: Dict[bytes, bytearray] = {}
+
+    def lookup(self, key: bytes) -> Optional[bytearray]:
+        self._check_key(key)
+        return self._table.get(bytes(key))
+
+    def update(self, key: bytes, value: bytes) -> int:
+        self._check_key(key)
+        self._check_value(value)
+        kb = bytes(key)
+        with self._lock:
+            if kb not in self._table and len(self._table) >= self.max_entries:
+                return -1  # E2BIG
+            slot = self._table.setdefault(kb, bytearray(self.value_size))
+            slot[:] = value
+        return 0
+
+    def delete(self, key: bytes) -> int:
+        self._check_key(key)
+        with self._lock:
+            return 0 if self._table.pop(bytes(key), None) is not None else -1
+
+    def keys(self) -> Iterator[bytes]:
+        return iter(list(self._table.keys()))
+
+
+class PerCpuArrayMap(ArrayMap):
+    """Per-thread-slot array; reads aggregate by sum (counter idiom)."""
+
+    kind = "percpu_array"
+    N_SLOTS = 8
+
+    def __init__(self, name: str, value_size: int, max_entries: int):
+        super().__init__(name, value_size, max_entries)
+        self._cpu_slots = [
+            [bytearray(value_size) for _ in range(max_entries)]
+            for _ in range(self.N_SLOTS)
+        ]
+        self._tls = threading.local()
+
+    def _cpu(self) -> int:
+        cpu = getattr(self._tls, "cpu", None)
+        if cpu is None:
+            cpu = threading.get_ident() % self.N_SLOTS
+            self._tls.cpu = cpu
+        return cpu
+
+    def lookup(self, key: bytes) -> Optional[bytearray]:
+        idx = self._index(key)
+        return None if idx is None else self._cpu_slots[self._cpu()][idx]
+
+    def aggregate_u64(self, key: int, slot: int = 0) -> int:
+        idx = struct.unpack("<I", struct.pack("<I", key))[0]
+        if idx >= self.max_entries:
+            raise MapError(f"{self.name}: key {key} out of range")
+        total = 0
+        for cpu in range(self.N_SLOTS):
+            total += struct.unpack_from("<Q", self._cpu_slots[cpu][idx], slot * 8)[0]
+        return total & U64
+
+
+MAP_KINDS = {
+    "array": ArrayMap,
+    "hash": HashMap,
+    "percpu_array": PerCpuArrayMap,
+}
+
+
+class MapRegistry:
+    """Named maps shared across programs — the composability namespace."""
+
+    def __init__(self):
+        self._maps: Dict[str, BpfMap] = {}
+        self._lock = threading.Lock()
+
+    def create(self, name: str, kind: str, *, key_size: int = 4,
+               value_size: int = 8, max_entries: int = 64) -> BpfMap:
+        with self._lock:
+            if name in self._maps:
+                m = self._maps[name]
+                if (m.kind, m.key_size, m.value_size, m.max_entries) != (
+                        kind, key_size if kind == "hash" else 4, value_size, max_entries):
+                    raise MapError(f"map {name}: redefinition with different shape")
+                return m
+            if kind == "hash":
+                m = HashMap(name, key_size, value_size, max_entries)
+            elif kind in ("array", "percpu_array"):
+                m = MAP_KINDS[kind](name, value_size, max_entries)
+            else:
+                raise MapError(f"unknown map kind {kind!r}")
+            self._maps[name] = m
+            return m
+
+    def get(self, name: str) -> BpfMap:
+        try:
+            return self._maps[name]
+        except KeyError:
+            raise MapError(f"map {name!r} not found") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._maps
+
+    def names(self):
+        return list(self._maps)

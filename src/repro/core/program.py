@@ -1,0 +1,55 @@
+"""Program container — the "BPF ELF object" analogue.
+
+A :class:`Program` bundles a section type (tuner/profiler/net), the
+instruction list, and declared map dependencies.  Loading a program into the
+runtime verifies it against its declared section's context type and resolves
+map names against the shared registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .context import CTX_TYPES, CtxType
+from .isa import Insn, validate_insn
+
+
+@dataclasses.dataclass(frozen=True)
+class MapDecl:
+    name: str
+    kind: str               # array | hash | percpu_array
+    key_size: int = 4
+    value_size: int = 8
+    max_entries: int = 64
+
+
+@dataclasses.dataclass
+class Program:
+    name: str
+    section: str            # tuner | profiler | net
+    insns: List[Insn]
+    maps: Tuple[MapDecl, ...] = ()
+    source: Optional[str] = None   # original restricted-Python/asm text
+
+    def __post_init__(self):
+        if self.section not in CTX_TYPES:
+            raise ValueError(f"unknown section {self.section!r}")
+        for i, insn in enumerate(self.insns):
+            validate_insn(insn, i)
+
+    @property
+    def ctx_type(self) -> CtxType:
+        return CTX_TYPES[self.section]
+
+    def map_decl(self, name: str) -> MapDecl:
+        for d in self.maps:
+            if d.name == name:
+                return d
+        raise KeyError(f"program {self.name}: map {name!r} not declared")
+
+    def disasm(self) -> str:
+        return "\n".join(f"{i:4d}: {insn!r}" for i, insn in enumerate(self.insns))
+
+    def __len__(self) -> int:
+        return len(self.insns)

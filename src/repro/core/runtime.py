@@ -1,0 +1,185 @@
+"""PolicyRuntime — load/verify/JIT/attach/hot-reload, the bpftime analogue.
+
+Lifecycle of a policy (paper §4):
+
+    load(program)  ->  verify (PREVAIL-style)  ->  JIT  ->  attach
+    reload(name, program) -> verify new -> JIT new -> atomic swap
+                             (failure leaves the old policy running)
+
+Atomicity: the active entry is swapped by a single reference assignment
+(atomic under the GIL — the CPython analogue of the paper's compare-and-
+swap on a function pointer).  In-flight invocations keep using the old
+closure they already read; no call is ever lost.  An epoch counter bumps on
+every swap so trace-time consumers (the jit-cache key in the collectives
+dispatch layer) can notice policy changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from .context import CTX_TYPES, PolicyContextValues
+from .jit import compile_program
+from .maps import BpfMap, MapRegistry
+from .program import Program
+from .verifier import VerifierError, verify
+from .vm import VM
+
+
+@dataclasses.dataclass
+class LoadedProgram:
+    program: Program
+    fn: Callable[[bytearray], int]      # JIT'd closure
+    epoch: int
+    verify_ms: float
+    jit_ms: float
+    loaded_at: float
+
+    @property
+    def name(self) -> str:
+        return self.program.name
+
+    @property
+    def section(self) -> str:
+        return self.program.section
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    loads: int = 0
+    reloads: int = 0
+    rejected: int = 0
+    invocations: int = 0
+    swap_ns_last: int = 0
+
+
+class PolicyRuntime:
+    """One runtime per process, holding maps + attached programs by section."""
+
+    def __init__(self, *, use_interpreter: bool = False):
+        self.maps = MapRegistry()
+        self._attached: Dict[str, Optional[LoadedProgram]] = {
+            s: None for s in CTX_TYPES}
+        self._epoch = 0
+        self._load_lock = threading.Lock()
+        self.stats = RuntimeStats()
+        self.use_interpreter = use_interpreter
+        self._printk_log: List[int] = []
+
+    # ---- loading ---------------------------------------------------------
+    def load(self, program: Program) -> LoadedProgram:
+        """Verify + JIT + attach.  Raises VerifierError on rejection."""
+        with self._load_lock:
+            lp = self._prepare(program)
+            self._attach(lp)
+            self.stats.loads += 1
+            return lp
+
+    def reload(self, program: Program) -> LoadedProgram:
+        """Atomic hot-reload of the program attached at ``program.section``.
+
+        If verification fails the old policy keeps running (never an
+        unverified state)."""
+        with self._load_lock:
+            try:
+                lp = self._prepare(program)
+            except VerifierError:
+                self.stats.rejected += 1
+                raise
+            t0 = time.perf_counter_ns()
+            self._attach(lp)                     # the atomic swap
+            self.stats.swap_ns_last = time.perf_counter_ns() - t0
+            self.stats.reloads += 1
+            return lp
+
+    def try_reload(self, program: Program) -> Optional[VerifierError]:
+        """Reload; on rejection return the error instead of raising."""
+        try:
+            self.reload(program)
+            return None
+        except VerifierError as e:
+            return e
+
+    def _prepare(self, program: Program) -> LoadedProgram:
+        t0 = time.perf_counter()
+        try:
+            verify(program)
+        except VerifierError:
+            self.stats.rejected += 1
+            raise
+        t1 = time.perf_counter()
+        resolved = self._resolve_maps(program)
+        if self.use_interpreter:
+            vm = VM(program.insns, resolved, printk=self._printk_log.append)
+            fn = vm.run
+        else:
+            fn = compile_program(program, resolved,
+                                 printk=self._printk_log.append)
+        t2 = time.perf_counter()
+        self._epoch += 1
+        return LoadedProgram(program=program, fn=fn, epoch=self._epoch,
+                             verify_ms=(t1 - t0) * 1e3, jit_ms=(t2 - t1) * 1e3,
+                             loaded_at=time.time())
+
+    def _resolve_maps(self, program: Program) -> Dict[str, BpfMap]:
+        out = {}
+        for d in program.maps:
+            out[d.name] = self.maps.create(
+                d.name, d.kind, key_size=d.key_size,
+                value_size=d.value_size, max_entries=d.max_entries)
+        return out
+
+    def _attach(self, lp: LoadedProgram) -> None:
+        # single reference assignment = the CAS of the paper
+        self._attached[lp.section] = lp
+
+    def detach(self, section: str) -> None:
+        self._attached[section] = None
+
+    # ---- invocation --------------------------------------------------------
+    def attached(self, section: str) -> Optional[LoadedProgram]:
+        return self._attached[section]
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def invoke(self, section: str, ctx: PolicyContextValues) -> Optional[int]:
+        """Run the attached program for ``section``; None if nothing attached."""
+        lp = self._attached[section]    # atomic read
+        if lp is None:
+            return None
+        self.stats.invocations += 1
+        return lp.fn(ctx.buf)
+
+    def invoke_fn(self, section: str) -> Optional[Callable[[bytearray], int]]:
+        """Grab the raw closure (hot-path callers cache nothing across calls:
+        each call re-reads the attached slot, so hot-reload takes effect on
+        the next call — T3 semantics)."""
+        lp = self._attached[section]
+        return None if lp is None else lp.fn
+
+    # ---- convenience -------------------------------------------------------
+    def printk_log(self) -> List[int]:
+        return list(self._printk_log)
+
+
+_GLOBAL_RUNTIME: Optional[PolicyRuntime] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def global_runtime() -> PolicyRuntime:
+    global _GLOBAL_RUNTIME
+    with _GLOBAL_LOCK:
+        if _GLOBAL_RUNTIME is None:
+            _GLOBAL_RUNTIME = PolicyRuntime()
+        return _GLOBAL_RUNTIME
+
+
+def reset_global_runtime() -> None:
+    global _GLOBAL_RUNTIME
+    with _GLOBAL_LOCK:
+        _GLOBAL_RUNTIME = None

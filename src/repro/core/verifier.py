@@ -1,0 +1,579 @@
+"""PREVAIL-style load-time static verifier.
+
+Abstract interpretation over a register-type × unsigned-interval domain with
+branch refinement.  Guarantees (before any policy executes):
+
+  * memory safety — every load/store proven in-bounds for its region
+    (ctx struct, 512-byte stack, map value of declared size)
+  * null safety — ``map_lookup_elem`` results are ``map_value_or_null`` and
+    must be branch-tested against NULL before dereference
+  * bounded execution — the CFG must be forward-only (a DAG); loops must be
+    compile-time unrolled by the frontend (classic eBPF discipline).  Any
+    back edge is rejected as a potentially unbounded loop.
+  * ctx field permissions — input fields are read-only; writing one is
+    rejected (the paper's "input-field write" bug class)
+  * division safety — a divisor whose abstract interval contains 0 rejects
+  * helper discipline — whitelisted per section, argument types checked
+    (map pointer, initialized stack buffer of exactly key/value size)
+  * stack hygiene — reads require initialized bytes; r10 is read-only;
+    accesses beyond the 512-byte frame reject ("stack overflow")
+  * no pointer leaks — r0 at exit must be a scalar
+
+The error messages are deliberately actionable, matching the paper's
+examples, e.g.::
+
+    R0 is a pointer to map_value_or_null; must check != NULL before
+    dereference at insn 7
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from . import helpers as H
+from .context import CtxType
+from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
+                  is_imm_form, is_jump_cond, is_load, is_store, jump_base,
+                  mem_size, s64, u64)
+from .program import MapDecl, Program
+
+U64_MAX = (1 << 64) - 1
+
+
+class VerifierError(Exception):
+    """Load-time rejection.  ``.insn`` is the offending instruction index."""
+
+    def __init__(self, msg: str, insn: Optional[int] = None):
+        self.insn = insn
+        super().__init__(msg if insn is None else f"{msg} at insn {insn}")
+
+
+# ---------------------------------------------------------------------------
+# Abstract values
+# ---------------------------------------------------------------------------
+
+UNINIT = "uninit"
+SCALAR = "scalar"
+CTX = "ctx"
+STACK = "stack"
+MAPVAL = "mapval"
+MAPVAL_OR_NULL = "mapval_or_null"
+MAPPTR = "map"
+
+_null_ids = itertools.count(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AVal:
+    kind: str = UNINIT
+    lo: int = 0              # unsigned interval (scalar) / offset interval (ptr)
+    hi: int = U64_MAX
+    map_name: Optional[str] = None
+    null_id: int = 0         # groups copies of one lookup result
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def scalar(lo: int = 0, hi: int = U64_MAX) -> "AVal":
+        return AVal(SCALAR, lo, hi)
+
+    @staticmethod
+    def const(v: int) -> "AVal":
+        v = u64(v)
+        return AVal(SCALAR, v, v)
+
+    @property
+    def is_const(self) -> bool:
+        return self.kind == SCALAR and self.lo == self.hi
+
+    @property
+    def is_ptr(self) -> bool:
+        return self.kind in (CTX, STACK, MAPVAL, MAPVAL_OR_NULL, MAPPTR)
+
+    def name(self) -> str:
+        if self.kind == MAPVAL_OR_NULL:
+            return "pointer to map_value_or_null"
+        return {UNINIT: "uninitialized value", SCALAR: "scalar",
+                CTX: "pointer to ctx", STACK: "pointer to stack",
+                MAPVAL: "pointer to map value",
+                MAPPTR: "pointer to map"}[self.kind]
+
+
+def join_vals(a: AVal, b: AVal) -> AVal:
+    if a == b:
+        return a
+    if a.kind != b.kind or a.map_name != b.map_name:
+        return AVal(UNINIT)
+    if a.kind in (SCALAR, CTX, STACK, MAPVAL):
+        return AVal(a.kind, min(a.lo, b.lo), max(a.hi, b.hi), a.map_name)
+    if a.kind == MAPVAL_OR_NULL:
+        # different lookups joined: keep or-null with fresh id
+        return AVal(MAPVAL_OR_NULL, 0, 0, a.map_name, next(_null_ids))
+    return AVal(UNINIT)
+
+
+@dataclasses.dataclass(frozen=True)
+class AState:
+    regs: Tuple[AVal, ...]
+    stack_init: int          # bitmask of initialized stack bytes (512 bits)
+
+    def with_reg(self, i: int, v: AVal) -> "AState":
+        regs = list(self.regs)
+        regs[i] = v
+        return AState(tuple(regs), self.stack_init)
+
+
+def join_states(a: AState, b: AState) -> AState:
+    return AState(tuple(join_vals(x, y) for x, y in zip(a.regs, b.regs)),
+                  a.stack_init & b.stack_init)
+
+
+# ---------------------------------------------------------------------------
+# Interval arithmetic (unsigned, conservative)
+# ---------------------------------------------------------------------------
+
+def _ival_alu(base: str, width: int, a: AVal, b: AVal, pc: int) -> AVal:
+    TOP = AVal.scalar()
+    mask = U64_MAX if width == 64 else 0xFFFFFFFF
+    if base == "mov":
+        if width == 32:
+            if b.is_ptr:
+                raise VerifierError("32-bit mov of a pointer truncates it", pc)
+            return AVal(SCALAR, b.lo, b.hi) if b.hi <= mask else AVal(SCALAR, 0, mask)
+        return b
+    if a.kind != SCALAR or b.kind != SCALAR:
+        return TOP
+    alo, ahi, blo, bhi = a.lo, a.hi, b.lo, b.hi
+    if base == "add":
+        lo, hi = alo + blo, ahi + bhi
+        return AVal(SCALAR, lo, hi) if hi <= mask else TOP
+    if base == "sub":
+        if alo >= bhi:
+            return AVal(SCALAR, alo - bhi, ahi - blo)
+        return TOP
+    if base == "mul":
+        hi = ahi * bhi
+        return AVal(SCALAR, alo * blo, hi) if hi <= mask else TOP
+    if base in ("div", "mod"):
+        if blo == 0:
+            raise VerifierError(
+                f"div/mod by zero: divisor interval [{blo},{bhi}] contains 0", pc)
+        if base == "div":
+            return AVal(SCALAR, alo // bhi, ahi // blo)
+        return AVal(SCALAR, 0, min(ahi, bhi - 1))
+    if base == "and":
+        return AVal(SCALAR, 0, min(ahi, bhi))
+    if base == "or":
+        if ahi | bhi <= mask:
+            return AVal(SCALAR, max(alo, blo), min(mask, _or_upper(ahi, bhi)))
+        return TOP
+    if base == "xor":
+        return AVal(SCALAR, 0, min(mask, _or_upper(ahi, bhi)))
+    if base == "lsh":
+        if b.is_const:
+            sh = b.lo & (width - 1)  # hardware masks the shift amount
+            if ahi << sh <= mask:
+                return AVal(SCALAR, alo << sh, ahi << sh)
+        return TOP
+    if base == "rsh":
+        if b.is_const:
+            sh = b.lo & (width - 1)
+            return AVal(SCALAR, alo >> sh, ahi >> sh)
+        return AVal(SCALAR, 0, ahi)
+    if base == "arsh":
+        return TOP
+    if base == "neg":
+        return TOP
+    return TOP
+
+
+def _or_upper(a: int, b: int) -> int:
+    m = a | b
+    # round up to all-ones of same bit length
+    return (1 << m.bit_length()) - 1 if m else 0
+
+
+# ---------------------------------------------------------------------------
+# Verifier
+# ---------------------------------------------------------------------------
+
+class Verifier:
+    def __init__(self, program: Program):
+        self.prog = program
+        self.ctx: CtxType = program.ctx_type
+        self.map_decls: Dict[str, MapDecl] = {d.name: d for d in program.maps}
+        # pc -> (region kind, map_name) for every memory insn, and
+        # pc -> map_name for every helper call; consumed by jaxc, which
+        # needs static region types for if-converted codegen.
+        self.mem_info: Dict[int, Tuple[str, Optional[str]]] = {}
+        self.call_map: Dict[int, Optional[str]] = {}
+
+    # -- public -------------------------------------------------------------
+    def verify(self) -> None:
+        insns = self.prog.insns
+        if not insns:
+            raise VerifierError("empty program")
+        self._check_cfg(insns)
+
+        init_regs = [AVal(UNINIT)] * 11
+        init_regs[1] = AVal(CTX, 0, 0)
+        init_regs[FP_REG] = AVal(STACK, STACK_SIZE, STACK_SIZE)
+        states: Dict[int, AState] = {0: AState(tuple(init_regs), 0)}
+
+        exits = 0
+        for pc in range(len(insns)):
+            st = states.get(pc)
+            if st is None:
+                continue  # unreachable
+            for tgt, nst in self._step(pc, insns[pc], st):
+                if tgt == -1:
+                    exits += 1
+                    continue
+                if tgt >= len(insns):
+                    raise VerifierError("jump falls off the end of the program", pc)
+                states[tgt] = nst if tgt not in states else join_states(states[tgt], nst)
+        if exits == 0:
+            raise VerifierError("no reachable exit instruction")
+
+    # -- CFG ----------------------------------------------------------------
+    def _check_cfg(self, insns: List[Insn]) -> None:
+        for pc, insn in enumerate(insns):
+            if insn.op == "ja" or is_jump_cond(insn.op):
+                tgt = pc + 1 + insn.off
+                if tgt <= pc:
+                    raise VerifierError(
+                        "back-edge detected: potentially unbounded loop "
+                        "(loops must be unrolled with a compile-time bound)", pc)
+                if tgt > len(insns):
+                    raise VerifierError("jump out of program bounds", pc)
+        last = insns[-1]
+        if last.op not in ("exit", "ja") and not is_jump_cond(last.op):
+            raise VerifierError("program may fall through past the last insn",
+                                len(insns) - 1)
+        if is_jump_cond(last.op):
+            raise VerifierError("program may fall through past the last insn",
+                                len(insns) - 1)
+
+    # -- single abstract step ------------------------------------------------
+    def _step(self, pc: int, insn: Insn, st: AState):
+        op = insn.op
+        out = []
+        if op == "exit":
+            r0 = st.regs[0]
+            if r0.kind == UNINIT:
+                raise VerifierError("R0 is uninitialized at exit", pc)
+            if r0.is_ptr:
+                raise VerifierError(
+                    f"R0 is a {r0.name()}; returning a pointer leaks memory", pc)
+            return [(-1, st)]
+        if op == "ja":
+            return [(pc + 1 + insn.off, st)]
+        if op == "lddw":
+            self._no_fp_write(insn.dst, pc)
+            return [(pc + 1, st.with_reg(insn.dst, AVal.const(insn.imm)))]
+        if op == "ldmap":
+            self._no_fp_write(insn.dst, pc)
+            if insn.map_name not in self.map_decls:
+                raise VerifierError(
+                    f"reference to undeclared map '{insn.map_name}'", pc)
+            return [(pc + 1, st.with_reg(
+                insn.dst, AVal(MAPPTR, 0, 0, insn.map_name)))]
+        if op == "call":
+            return [(pc + 1, self._check_call(pc, insn.imm, st))]
+        if is_alu(op):
+            return [(pc + 1, self._alu(pc, insn, st))]
+        if is_jump_cond(op):
+            return self._branch(pc, insn, st)
+        if is_load(op):
+            return [(pc + 1, self._load(pc, insn, st))]
+        if is_store(op):
+            return [(pc + 1, self._store(pc, insn, st))]
+        raise VerifierError(f"unknown opcode {op!r}", pc)
+
+    def _no_fp_write(self, dst: int, pc: int) -> None:
+        if dst == FP_REG:
+            raise VerifierError("write to frame pointer R10 is forbidden", pc)
+
+    # -- ALU ------------------------------------------------------------------
+    def _alu(self, pc: int, insn: Insn, st: AState) -> AState:
+        self._no_fp_write(insn.dst, pc)
+        width = alu_width(insn.op)
+        base = alu_base(insn.op)
+        a = st.regs[insn.dst]
+        b = AVal.const(insn.imm) if is_imm_form(insn.op) else st.regs[insn.src]
+        if base != "mov" and a.kind == UNINIT:
+            raise VerifierError(f"R{insn.dst} is uninitialized", pc)
+        if base == "mov" and b.kind == UNINIT:
+            raise VerifierError(f"R{insn.src} is uninitialized", pc)
+        if not is_imm_form(insn.op) and base not in ("mov", "neg") \
+                and b.kind == UNINIT:
+            raise VerifierError(f"R{insn.src} is uninitialized", pc)
+
+        # pointer arithmetic
+        if base == "mov":
+            return st.with_reg(insn.dst, _ival_alu("mov", width, a, b, pc))
+        if a.is_ptr or b.is_ptr:
+            return st.with_reg(insn.dst, self._ptr_alu(pc, base, width, a, b))
+        return st.with_reg(insn.dst, _ival_alu(base, width, a, b, pc))
+
+    def _ptr_alu(self, pc: int, base: str, width: int, a: AVal, b: AVal) -> AVal:
+        if width != 64:
+            raise VerifierError("32-bit arithmetic on a pointer", pc)
+        if a.kind == MAPVAL_OR_NULL or b.kind == MAPVAL_OR_NULL:
+            raise VerifierError(
+                "arithmetic on map_value_or_null pointer; "
+                "must check != NULL first", pc)
+        if base == "add" and a.is_ptr and b.kind == SCALAR:
+            return AVal(a.kind, a.lo + s64(b.lo), a.hi + s64(b.hi), a.map_name)
+        if base == "add" and b.is_ptr and a.kind == SCALAR:
+            return AVal(b.kind, b.lo + s64(a.lo), b.hi + s64(a.hi), b.map_name)
+        if base == "sub" and a.is_ptr and b.kind == SCALAR:
+            return AVal(a.kind, a.lo - s64(b.hi), a.hi - s64(b.lo), a.map_name)
+        if base == "sub" and a.is_ptr and b.is_ptr and a.kind == b.kind \
+                and a.map_name == b.map_name:
+            return AVal.scalar()
+        raise VerifierError(f"illegal pointer arithmetic: {base} on "
+                            f"{a.name()} and {b.name()}", pc)
+
+    # -- branches with refinement ----------------------------------------------
+    def _branch(self, pc: int, insn: Insn, st: AState):
+        base = jump_base(insn.op)
+        a = st.regs[insn.dst]
+        b = AVal.const(insn.imm) if is_imm_form(insn.op) else st.regs[insn.src]
+        if a.kind == UNINIT:
+            raise VerifierError(f"R{insn.dst} is uninitialized in branch", pc)
+        if not is_imm_form(insn.op) and b.kind == UNINIT:
+            raise VerifierError(f"R{insn.src} is uninitialized in branch", pc)
+
+        taken_tgt = pc + 1 + insn.off
+        fall_tgt = pc + 1
+
+        # NULL-check refinement for map_value_or_null
+        if a.kind == MAPVAL_OR_NULL and base in ("jeq", "jne") \
+                and b.is_const and b.lo == 0:
+            null_st = self._refine_null(st, a.null_id, to_null=True)
+            ok_st = self._refine_null(st, a.null_id, to_null=False)
+            if base == "jeq":   # taken => null
+                return [(taken_tgt, null_st), (fall_tgt, ok_st)]
+            return [(taken_tgt, ok_st), (fall_tgt, null_st)]
+
+        if a.is_ptr and base not in ("jeq", "jne"):
+            raise VerifierError(
+                f"ordered comparison on {a.name()} is not allowed", pc)
+        if b.is_ptr and not a.is_ptr:
+            raise VerifierError(
+                f"comparison of scalar with {b.name()}", pc)
+
+        # scalar interval refinement (imm comparisons only, unsigned)
+        if a.kind == SCALAR and b.kind == SCALAR and b.is_const and not a.is_ptr:
+            k = b.lo
+            t, f = self._refine_scalar(a, base, k)
+            states = []
+            if t is not None:
+                states.append((taken_tgt, st.with_reg(insn.dst, t)))
+            if f is not None:
+                states.append((fall_tgt, st.with_reg(insn.dst, f)))
+            if not states:
+                raise VerifierError("branch with empty feasible set", pc)
+            return states
+        return [(taken_tgt, st), (fall_tgt, st)]
+
+    @staticmethod
+    def _refine_scalar(a: AVal, base: str, k: int):
+        """Return (taken_val, fall_val); None = infeasible edge (pruned)."""
+        lo, hi = a.lo, a.hi
+
+        def iv(l, h):
+            return None if l > h else AVal(SCALAR, l, h)
+
+        def without_k():
+            """a with endpoint k trimmed (interval can't exclude interior)."""
+            if lo == hi == k:
+                return None
+            if k == lo:
+                return iv(lo + 1, hi)
+            if k == hi:
+                return iv(lo, hi - 1)
+            return a
+
+        if base == "jeq":
+            return (iv(max(lo, k), min(hi, k)), without_k())
+        if base == "jne":
+            return (without_k(), iv(max(lo, k), min(hi, k)))
+        if base == "jgt":
+            return (iv(max(lo, k + 1), hi), iv(lo, min(hi, k)))
+        if base == "jge":
+            return (iv(max(lo, k), hi), iv(lo, min(hi, k - 1)))
+        if base == "jlt":
+            return (iv(lo, min(hi, k - 1)), iv(max(lo, k), hi))
+        if base == "jle":
+            return (iv(lo, min(hi, k)), iv(max(lo, k + 1), hi))
+        # signed / jset: no refinement
+        return (a, a)
+
+    @staticmethod
+    def _refine_null(st: AState, null_id: int, *, to_null: bool) -> AState:
+        regs = []
+        for v in st.regs:
+            if v.kind == MAPVAL_OR_NULL and v.null_id == null_id:
+                regs.append(AVal.const(0) if to_null
+                            else AVal(MAPVAL, 0, 0, v.map_name))
+            else:
+                regs.append(v)
+        return AState(tuple(regs), st.stack_init)
+
+    # -- memory -------------------------------------------------------------
+    def _record_mem(self, pc: int, v: AVal) -> None:
+        prev = self.mem_info.get(pc)
+        cur = (v.kind, v.map_name, v.lo if v.lo == v.hi else None)
+        # joins can revisit a pc; region identity must be unique (it is for
+        # accepted programs — ambiguous regions fail _mem_region)
+        if prev is None or prev == cur:
+            self.mem_info[pc] = cur
+
+    def _mem_region(self, pc: int, reg_idx: int, v: AVal, off: int, size: int,
+                    *, is_write: bool) -> None:
+        if v.kind == UNINIT:
+            raise VerifierError(f"R{reg_idx} is uninitialized", pc)
+        if v.kind == SCALAR:
+            if v.is_const and v.lo == 0:
+                raise VerifierError(
+                    f"R{reg_idx} is NULL; null-pointer dereference", pc)
+            raise VerifierError(
+                f"R{reg_idx} is a scalar; memory access needs a pointer", pc)
+        if v.kind == MAPVAL_OR_NULL:
+            raise VerifierError(
+                f"R{reg_idx} is a pointer to map_value_or_null; "
+                "must check != NULL before dereference", pc)
+        if v.kind == MAPPTR:
+            raise VerifierError(
+                f"R{reg_idx} is a raw map pointer; direct access is forbidden "
+                "(use map_lookup_elem)", pc)
+
+        lo, hi = v.lo + off, v.hi + off
+        if v.kind == CTX:
+            if lo != hi:
+                raise VerifierError("variable-offset ctx access", pc)
+            try:
+                field = self.ctx.field_at(lo, size)
+            except KeyError:
+                raise VerifierError(
+                    f"out-of-bounds ctx access: offset {lo} size {size} "
+                    f"(ctx '{self.ctx.name}' is {self.ctx.size} bytes)", pc)
+            if is_write and not field.writable:
+                raise VerifierError(
+                    f"write to read-only input field '{field.name}' "
+                    f"of {self.ctx.name}", pc)
+        elif v.kind == STACK:
+            if lo < 0 or hi + size > STACK_SIZE:
+                raise VerifierError(
+                    f"stack access out of bounds: [{lo - STACK_SIZE},"
+                    f"{hi + size - STACK_SIZE}) exceeds the 512-byte frame "
+                    "(stack overflow)", pc)
+        elif v.kind == MAPVAL:
+            vs = self.map_decls[v.map_name].value_size
+            if lo < 0 or hi + size > vs:
+                raise VerifierError(
+                    f"out-of-bounds map value access: offset {lo}..{hi}+{size} "
+                    f"exceeds value_size {vs} of map '{v.map_name}'", pc)
+        else:
+            raise VerifierError(f"R{reg_idx} ({v.name()}) is not accessible", pc)
+
+    def _load(self, pc: int, insn: Insn, st: AState) -> AState:
+        self._no_fp_write(insn.dst, pc)
+        v = st.regs[insn.src]
+        size = mem_size(insn.op)
+        self._mem_region(pc, insn.src, v, insn.off, size, is_write=False)
+        self._record_mem(pc, v)
+        if v.kind == STACK:
+            lo, hi = v.lo + insn.off, v.hi + insn.off
+            for byte in range(lo, hi + size):
+                if not (st.stack_init >> byte) & 1:
+                    raise VerifierError(
+                        f"read of uninitialized stack byte fp{byte - STACK_SIZE:+d}", pc)
+        maxv = (1 << (8 * size)) - 1
+        return st.with_reg(insn.dst, AVal(SCALAR, 0, maxv))
+
+    def _store(self, pc: int, insn: Insn, st: AState) -> AState:
+        v = st.regs[insn.dst]
+        size = mem_size(insn.op)
+        is_stx = insn.op.startswith("stx")
+        if is_stx:
+            sv = st.regs[insn.src]
+            if sv.kind == UNINIT:
+                raise VerifierError(f"R{insn.src} is uninitialized", pc)
+            if sv.is_ptr and not (v.kind == STACK and size == 8):
+                raise VerifierError(
+                    f"pointer spill of {sv.name()} outside stack", pc)
+            if sv.is_ptr:
+                raise VerifierError(
+                    "pointer spill to stack is not supported by this verifier "
+                    "(keep pointers in registers)", pc)
+        self._mem_region(pc, insn.dst, v, insn.off, size, is_write=True)
+        self._record_mem(pc, v)
+        if v.kind == STACK and v.lo == v.hi:
+            lo = v.lo + insn.off
+            mask = ((1 << size) - 1) << lo
+            return AState(st.regs, st.stack_init | mask)
+        return st
+
+    # -- helper calls ----------------------------------------------------------
+    def _check_call(self, pc: int, hid: int, st: AState) -> AState:
+        h = H.HELPERS.get(hid)
+        if h is None:
+            raise VerifierError(f"unknown helper id {hid}", pc)
+        if not H.helper_allowed(self.prog.section, hid):
+            raise VerifierError(
+                f"illegal helper '{h.name}' for section '{self.prog.section}'", pc)
+
+        map_decl: Optional[MapDecl] = None
+        for argi, argt in enumerate(h.args, start=1):
+            v = st.regs[argi]
+            if argt == H.ARG_MAP_PTR:
+                if v.kind != MAPPTR:
+                    raise VerifierError(
+                        f"{h.name}: R{argi} must be a map pointer, got {v.name()}", pc)
+                map_decl = self.map_decls[v.map_name]
+            elif argt in (H.ARG_STACK_KEY, H.ARG_STACK_VALUE):
+                need = (map_decl.key_size if argt == H.ARG_STACK_KEY
+                        else map_decl.value_size) if map_decl else 8
+                if v.kind == MAPVAL and argt == H.ARG_STACK_VALUE:
+                    self._mem_region(pc, argi, v, 0, need, is_write=False)
+                    continue
+                if v.kind != STACK:
+                    raise VerifierError(
+                        f"{h.name}: R{argi} must point to the stack, got {v.name()}", pc)
+                self._mem_region(pc, argi, v, 0, need, is_write=False)
+                for byte in range(v.lo, v.hi + need):
+                    if not (st.stack_init >> byte) & 1:
+                        raise VerifierError(
+                            f"{h.name}: R{argi} buffer byte fp{byte - STACK_SIZE:+d} "
+                            "is uninitialized", pc)
+            elif argt == H.ARG_SCALAR:
+                if v.kind != SCALAR:
+                    raise VerifierError(
+                        f"{h.name}: R{argi} must be a scalar, got {v.name()}", pc)
+            # ARG_ANYTHING: no check
+
+        self.call_map[pc] = map_decl.name if map_decl else None
+        regs = list(st.regs)
+        if h.ret == H.RET_MAP_VALUE_OR_NULL:
+            regs[0] = AVal(MAPVAL_OR_NULL, 0, 0, map_decl.name, next(_null_ids))
+        else:
+            regs[0] = AVal.scalar()
+        for r in (1, 2, 3, 4, 5):
+            regs[r] = AVal(UNINIT)
+        return AState(tuple(regs), st.stack_init)
+
+
+def verify(program: Program) -> None:
+    """Raise :class:`VerifierError` if the program is unsafe."""
+    Verifier(program).verify()
+
+
+def verify_with_info(program: Program) -> Verifier:
+    """Verify and return the Verifier with per-insn region info (for jaxc)."""
+    v = Verifier(program)
+    v.verify()
+    return v

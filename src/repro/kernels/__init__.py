@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper with shape handling + fallbacks
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels are validated with interpret=True (the
+kernel body executes in Python); on TPU the same BlockSpecs drive MXU/VMEM
+tiling.  These are *framework* hot-spots, not paper contributions — the
+paper's contribution (policy execution) is host/XLA-level; DESIGN.md §2.
+"""
+
+from .flash_attention.ops import flash_attention
+from .grouped_matmul.ops import grouped_matmul
+from .rmsnorm.ops import fused_rmsnorm
+
+__all__ = ["flash_attention", "grouped_matmul", "fused_rmsnorm"]

@@ -1,0 +1,36 @@
+"""Public flash-attention op: GQA head expansion + backend selection."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_tpu
+from .ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "backend", "bq",
+                                   "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "pallas", bq: int = 128, bk: int = 128):
+    """q: (B, H, S, d); k/v: (B, KV, T, d) with H % KV == 0.
+
+    backend: 'pallas' (interpret on CPU, compiled on TPU) | 'ref'.
+    """
+    B, H, S, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    if H != KV:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if backend == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, T, d)
+    vf = v.reshape(B * H, T, d)
+    on_tpu = jax.devices()[0].platform == "tpu"
+    out = flash_attention_tpu(qf, kf, vf, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=not on_tpu)
+    return out.reshape(B, H, S, d)

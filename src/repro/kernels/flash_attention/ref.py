@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window GQA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B, H, S, d); k/v: (B, H, T, d).  Heads already kv-expanded.
+    Returns (B, H, S, d) in q.dtype; math in f32."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pq = jnp.arange(S)[:, None] + (T - S)   # align last query to last key
+    pk = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = pk <= pq
+    if window > 0:
+        mask = mask & (pk > pq - window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""MoE grouped matmul Pallas kernel.
+
+Computes per-expert (C, D) @ (D, F) with one kernel launch.  TPU
+adaptation: instead of CUDA's persistent thread-blocks with a work-stealing
+queue over ragged groups, the TPU grid iterates (expert, C-tile, F-tile,
+D-tile) with the D (contraction) axis innermost, accumulating each (bc, bf)
+output tile in VMEM scratch across D-steps — MXU-aligned 128×128 tiles.
+Capacity-padded MoE buffers make groups rectangular (E × C), so no ragged
+handling is needed (the dispatch layer pads to capacity; DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    dk = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(dk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)      # (bd, bf)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(dk == nd - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_tpu(x, w, *, bc: int = 128, bf: int = 128,
+                       bd: int = 512, interpret: bool = True):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bd = min(bc, C), min(bf, F), min(bd, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0
+
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=(E, C // bc, F // bf, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

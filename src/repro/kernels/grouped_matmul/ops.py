@@ -1,0 +1,21 @@
+"""Public grouped-matmul op."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import grouped_matmul_tpu
+from .ref import grouped_matmul_ref
+
+
+@partial(jax.jit, static_argnames=("backend", "bc", "bf", "bd"))
+def grouped_matmul(x, w, *, backend: str = "pallas", bc: int = 128,
+                   bf: int = 128, bd: int = 512):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    if backend == "ref":
+        return grouped_matmul_ref(x, w)
+    on_tpu = jax.devices()[0].platform == "tpu"
+    return grouped_matmul_tpu(x, w, bc=bc, bf=bf, bd=bd,
+                              interpret=not on_tpu)

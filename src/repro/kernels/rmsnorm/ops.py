@@ -1,0 +1,27 @@
+"""Public fused-rmsnorm op."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import fused_rmsnorm_tpu
+from .ref import fused_rmsnorm_ref
+
+
+@partial(jax.jit, static_argnames=("eps", "backend", "bt"))
+def fused_rmsnorm(x, scale, residual=None, *, eps: float = 1e-6,
+                  backend: str = "pallas", bt: int = 128):
+    """x: (..., D) flattened internally; returns (normed, residual_stream)."""
+    if backend == "ref":
+        return fused_rmsnorm_ref(x, scale, residual, eps=eps)
+    shape = x.shape
+    D = shape[-1]
+    xf = x.reshape(-1, D)
+    rf = residual.reshape(-1, D) if residual is not None else None
+    on_tpu = jax.devices()[0].platform == "tpu"
+    y, res = fused_rmsnorm_tpu(xf, scale, rf, eps=eps,
+                               bt=min(bt, xf.shape[0]),
+                               interpret=not on_tpu)
+    return y.reshape(shape), res.reshape(shape)

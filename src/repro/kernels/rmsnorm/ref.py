@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused RMSNorm (+ optional residual add)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def fused_rmsnorm_ref(x, scale, residual=None, *, eps: float = 1e-6):
+    """x: (..., D); scale: (D,).  Returns (y, new_residual_stream)."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = (xf * lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+    return y, x

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Proves the distribution config is coherent without hardware:
+  * jit(step).lower(ShapeDtypeStructs).compile() must succeed on the
+    single-pod (16×16, 256-chip) AND multi-pod (2×16×16, 512-chip) meshes
+  * memory_analysis() proves the per-device working set fits
+  * cost_analysis() + HLO collective parsing feed §Roofline
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k \
+      --mesh pod [--policy ring_mid_v2] [--bucketed] [--out out.json]
+  python -m repro.launch.dryrun --all --out results/
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, get_config, serving_config, shape_supported
+from ..configs.registry import ARCH_IDS
+from ..core.runtime import PolicyRuntime
+from ..collectives.dispatch import DispatchConfig, reset_dispatcher
+from .mesh import make_production_mesh, mesh_axes
+from .roofline import analyze_compiled
+from .specs import (batch_shapes, cache_shapes_and_specs, opt_shapes,
+                    param_shapes_and_specs)
+
+
+def _load_policy(name):
+    rt = PolicyRuntime()
+    if name and name != "none":
+        import repro.policies as pol
+        rt.load(getattr(pol, name).program)
+    reset_dispatcher(runtime=rt)
+    return rt
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                policy: str = "none", bucketed: bool = False,
+                gather_bf16: bool = False, capacity_factor: float = 0.0,
+                remat: bool = True, remat_policy: str = "none",
+                mlstm_chunk: int = 0, serve_bf16: bool = False):
+    """Returns a result dict (lowered/compiled + roofline inputs)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..train.step import (TrainStepConfig, batch_specs, make_serve_step,
+                              make_train_step)
+
+    shape = SHAPES[shape_name]
+    skip = shape_supported(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2pod" if multi_pod else "pod",
+                "status": "skipped", "reason": skip}
+
+    _load_policy(policy)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    is_train = shape.kind == "train"
+    ax = mesh_axes(mesh, fsdp=is_train, gather_bf16=gather_bf16)
+
+    cfg = serving_config(arch, shape_name)
+    if is_train:
+        cfg = cfg.with_overrides(remat=remat, remat_policy=remat_policy)
+    if capacity_factor:
+        cfg = cfg.with_overrides(capacity_factor=capacity_factor)
+    if mlstm_chunk:
+        cfg = cfg.with_overrides(mlstm_chunk=mlstm_chunk)
+    # long-context decode needs context >= seq_len in the ring buffer
+    t0 = time.time()
+
+    params_sds, param_specs = param_shapes_and_specs(cfg, ax)
+    if serve_bf16 and not is_train:
+        # serving-time bf16 parameter residency: halves the dominant
+        # param-read traffic of decode (models cast per-op regardless)
+        import jax.numpy as _jnp
+        params_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, _jnp.bfloat16)
+            if a.dtype == _jnp.float32 else a, params_sds)
+
+    if is_train:
+        opt_sds = opt_shapes(params_sds)
+        step_fn, _ = make_train_step(
+            cfg, ax, mesh, param_specs,
+            TrainStepConfig(bucketed_grad_sync=bucketed))
+        b_sds = batch_shapes(cfg, shape.global_batch, shape.seq_len,
+                             kind="train")
+        lowered = step_fn.lower(params_sds, opt_sds, b_sds)
+    elif shape.kind == "prefill":
+        step_fn = make_serve_step(cfg, ax, mesh, param_specs, None,
+                                  mode="prefill")
+        b_sds = batch_shapes(cfg, shape.global_batch, shape.seq_len,
+                             kind="prefill")
+        b_sds.pop("labels")
+        lowered = step_fn.lower(params_sds, b_sds)
+    else:  # decode
+        import jax.numpy as jnp
+        B = shape.global_batch
+        world_dp = ax.dp * ax.n_pods
+        replicate = B < world_dp or B % world_dp != 0
+        dp_axes = None if replicate else (
+            ("pod", "data") if ax.pod else "data")
+        cache_sds, cache_specs = cache_shapes_and_specs(
+            cfg, B, shape.seq_len, ax, dp_axes)
+        step_fn = make_serve_step(cfg, ax, mesh, param_specs, cache_specs,
+                                  mode="decode", replicate_batch=replicate)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        lowered = step_fn.lower(params_sds, tok, cache_sds, pos)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    result = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                              mesh="2pod" if multi_pod else "pod",
+                              cfg=cfg, n_devices=mesh.devices.size,
+                              kind=shape.kind)
+    result.update({"status": "ok", "policy": policy, "bucketed": bucketed,
+                   "lower_s": round(t_lower, 1),
+                   "compile_s": round(t_compile, 1)})
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "2pod", "both"],
+                    default="pod")
+    ap.add_argument("--policy", default="none")
+    ap.add_argument("--bucketed", action="store_true")
+    ap.add_argument("--gather-bf16", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", default="none")
+    ap.add_argument("--mlstm-chunk", type=int, default=0)
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "2pod"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    results = []
+    for a, s, m in combos:
+        key = f"{a}|{s}|{m}|{args.policy}|{int(args.bucketed)}"
+        if args.tag:
+            key += f"|{args.tag}"
+        out_path = None
+        if args.out:
+            os.makedirs(args.out, exist_ok=True) if not args.out.endswith(
+                ".json") else None
+            out_path = (os.path.join(
+                args.out, key.replace("|", "__") + ".json")
+                if not args.out.endswith(".json") else args.out)
+            if out_path and os.path.exists(out_path):
+                print(f"SKIP (cached) {key}", flush=True)
+                continue
+        print(f"=== {key}", flush=True)
+        try:
+            r = lower_combo(a, s, multi_pod=(m == "2pod"),
+                            policy=args.policy, bucketed=args.bucketed,
+                            gather_bf16=args.gather_bf16,
+                            capacity_factor=args.capacity_factor,
+                            remat=not args.no_remat,
+                            remat_policy=args.remat_policy,
+                            mlstm_chunk=args.mlstm_chunk,
+                            serve_bf16=args.serve_bf16)
+        except Exception as e:
+            traceback.print_exc()
+            r = {"arch": a, "shape": s, "mesh": m, "status": "error",
+                 "error": f"{type(e).__name__}: {e}"}
+        results.append(r)
+        print(json.dumps({k: v for k, v in r.items()
+                          if k != "hlo_collectives"}, indent=None),
+              flush=True)
+        if out_path:
+            with open(out_path, "w") as f:
+                json.dump(r, f, indent=1)
+
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"DONE {len(results)} combos, {n_err} errors", flush=True)
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — only dryrun.py (which sets
+XLA_FLAGS first) asks for the 256/512-device meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..models.layers import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh, *, fsdp: bool = True,
+              gather_bf16: bool = False) -> MeshAxes:
+    """Derive the MeshAxes descriptor from a mesh."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    return MeshAxes(
+        data="data", model="model",
+        pod="pod" if "pod" in names else None,
+        fsdp=fsdp, gather_bf16=gather_bf16,
+        tp=sizes.get("model", 1),
+        dp=sizes.get("data", 1),
+        n_pods=sizes.get("pod", 1),
+    )
+
+
+def make_host_mesh(n: int = 1):
+    """Small mesh over real host devices (tests/examples)."""
+    import numpy as np
+    devs = jax.devices()[:n]
+    return jax.sharding.Mesh(np.array(devs).reshape(1, len(devs)),
+                             ("data", "model"))

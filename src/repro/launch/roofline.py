@@ -1,0 +1,370 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (per device)
+  memory     = HLO_bytes / HBM_bw               (per device)
+  collective = collective_wire_bytes / (links × link_bw)
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+under-counts scanned layer stacks by n_periods×.  We therefore parse the
+post-SPMD HLO text into its computation call graph, propagate execution
+multiplicity through ``while`` ops (XLA annotates ``known_trip_count``),
+resolve operand shapes through a per-computation symbol table, and
+accumulate:
+
+  * FLOPs      — from ``dot`` ops: 2 · result_elems · contraction_size
+                 (elementwise flops ignored — matmul-dominated; the raw
+                 cost_analysis numbers are reported alongside)
+  * HBM bytes  — result + resolved-operand bytes of top-level instructions
+                 (fusion internals excluded: a fusion's HBM traffic is its
+                 own operands/result)
+  * wire bytes — per collective with g = replica-group size:
+                   all-reduce          2·(g-1)/g · S
+                   all-gather          (g-1)/g · S_result
+                   reduce-scatter      (g-1) · S_result  (= (g-1)/g · S_in)
+                   all-to-all          (g-1)/g · S
+                   collective-permute  S
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 4 links/chip.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+N_LINKS = 4                  # usable ICI links per chip (v5e 2D torus)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_TOK = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_VIEW_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_dims(text: str) -> List[int]:
+    m = _SHAPE_TOK.search(text)
+    return [int(d) for d in m.group(2).split(",") if d] if m else []
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+class Instr:
+    __slots__ = ("name", "op", "result", "operands", "line")
+
+    def __init__(self, name, op, result, operands, line):
+        self.name = name
+        self.op = op            # base op token
+        self.result = result    # result type text (before op token)
+        self.operands = operands  # operand name list
+        self.line = line
+
+
+class Computation:
+    __slots__ = ("name", "instrs", "edges", "is_fusion_callee")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[Instr] = []
+        self.edges: List[Tuple[str, float]] = []
+        self.is_fusion_callee = False
+
+
+_OP_SPLIT = re.compile(
+    r"^((?:\([^=]*?\)|[\w\[\],{}\. ]+?)?)\s*([\w\-]+)\(")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # split "<result type> <op>(" — find the op token right before '('
+    mo = re.search(r"([\w\-]+)\(", rhs)
+    if not mo:
+        return None
+    op = mo.group(1)
+    result = rhs[:mo.start()]
+    # operand names: inside the eventual ')' (names only, no nested parens)
+    args = rhs[mo.end():]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = re.findall(r"%([\w.\-]+)", args[:end])
+    return Instr(name, op, result, operands, line)
+
+
+def parse_hlo(txt: str, n_devices: int
+              ) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+
+    for raw in txt.splitlines():
+        if raw and not raw[0].isspace() and " -> " in raw and \
+                raw.rstrip().endswith("{"):
+            is_entry = raw.startswith("ENTRY")
+            name_tok = raw.split("(")[0].replace("ENTRY", "").strip()
+            name = name_tok.lstrip("%").strip()
+            cur = comps.setdefault(name, Computation(name))
+            if is_entry:
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        ins = _parse_instr(raw)
+        if ins is None:
+            continue
+        cur.instrs.append(ins)
+        line = ins.line
+        if ins.op == "while":
+            mt = _TRIP_RE.search(line)
+            trip = float(mt.group(1)) if mt else 1.0
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            mc = re.search(r"condition=%?([\w.\-]+)", line)
+            if mb:
+                cur.edges.append((mb.group(1), trip))
+            if mc:
+                cur.edges.append((mc.group(1), trip + 1))
+        elif ins.op == "fusion":
+            mf = re.search(r"calls=%?([\w.\-]+)", line)
+            if mf:
+                cur.edges.append((mf.group(1), 1.0))
+                comps.setdefault(mf.group(1), Computation(mf.group(1))
+                                 ).is_fusion_callee = True
+        elif ins.op in ("call", "async-start"):
+            mf = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if mf:
+                cur.edges.append((mf.group(1), 1.0))
+        elif ins.op == "conditional" and "branch_computations" in line:
+            tail = line.split("branch_computations", 1)[1]
+            tail = tail.split("}", 1)[0]
+            for nm in re.findall(r"%([\w.\-]+)", tail):
+                cur.edges.append((nm, 1.0))
+    return comps, entry
+
+
+def multiplicities(comps: Dict[str, Computation], entry: str
+                   ) -> Dict[str, float]:
+    """Execution count per computation: Jacobi fixed point over the call
+    DAG (m[x] = Σ_callers m[caller]·k); converges within depth passes."""
+    prev: Dict[str, float] = {entry: 1.0}
+    for _ in range(128):
+        new: Dict[str, float] = defaultdict(float)
+        new[entry] = 1.0
+        for name, c in comps.items():
+            m = prev.get(name, 0.0)
+            if m <= 0:
+                continue
+            for callee, k in c.edges:
+                new[callee] += m * k
+        new[entry] = 1.0
+        keys = set(new) | set(prev)
+        if all(abs(new.get(k, 0.0) - prev.get(k, 0.0)) <= 1e-9 *
+               max(1.0, abs(prev.get(k, 0.0))) for k in keys):
+            return dict(new)
+        prev = dict(new)
+    return prev
+
+
+def _analyze_comp(c: Computation, n_devices: int):
+    """(flops, hbm_bytes, coll_records) for one computation."""
+    symtab = {i.name: i.result for i in c.instrs}
+    flops = 0.0
+    hbm = 0.0
+    colls = []
+    for i in c.instrs:
+        base = i.op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+
+        if base in ("dot", "dot-general"):
+            result_elems = 1
+            for d in _first_dims(i.result):
+                result_elems *= d
+            k = 1
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.line)
+            if mc and i.operands:
+                lhs_dims = _first_dims(symtab.get(i.operands[0], ""))
+                for idx in mc.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+            flops += 2.0 * result_elems * k
+
+        if base in _COLL_OPS and not i.op.endswith("-done"):
+            rb = _shapes_bytes(i.result)
+            g = _group_size(i.line, n_devices)
+            if g > 1 and rb:
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * rb
+                elif base == "all-gather":
+                    wire = (g - 1) / g * rb
+                elif base == "reduce-scatter":
+                    wire = float(g - 1) * rb          # operand = g·result
+                elif base == "all-to-all":
+                    wire = (g - 1) / g * rb
+                else:                                  # collective-permute
+                    wire = float(rb)
+                colls.append({"op": base, "group": g, "wire_bytes": wire})
+
+        # ---- HBM traffic model -------------------------------------------
+        if i.op.endswith("-done") or base in _VIEW_OPS:
+            pass
+        elif base in ("while", "conditional", "call", "custom-call",
+                      "async-start", "async-done", "optimization-barrier"):
+            pass  # control flow: traffic lives in the callee computations
+        elif base == "dynamic-slice":
+            hbm += _shapes_bytes(i.result)           # reads only the slice
+        elif base == "dynamic-update-slice":
+            # reads + writes the update region (buffer updated in place)
+            upd = symtab.get(i.operands[1], "") if len(i.operands) > 1 else ""
+            hbm += 2 * _shapes_bytes(upd)
+        else:
+            hbm += _shapes_bytes(i.result)
+            for nm in i.operands:
+                hbm += _shapes_bytes(symtab.get(nm, ""))
+    return flops, hbm, colls
+
+
+def aggregate(comps: Dict[str, Computation], mult: Dict[str, float],
+              n_devices: int):
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    by_op: Dict[str, Dict] = {}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        f, h, colls = _analyze_comp(c, n_devices)
+        flops += m * f
+        if not c.is_fusion_callee:
+            hbm += m * h
+        for rec in colls:
+            wire += m * rec["wire_bytes"]
+            d = by_op.setdefault(rec["op"], {"count": 0.0,
+                                             "wire_bytes": 0.0})
+            d["count"] += m
+            d["wire_bytes"] += m * rec["wire_bytes"]
+    return flops, hbm, wire, by_op
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6·N·D (train) or 2·N·D (fwd) with N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    tokens = batch * seq if kind != "decode" else batch * 1
+    return mult * n_active * tokens
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh: str, cfg,
+                     n_devices: int, kind: str) -> Dict:
+    ca = compiled.cost_analysis() or {}
+    ca_flops = float(ca.get("flops", 0.0))
+    ca_bytes = float(ca.get("bytes accessed", 0.0))
+
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    comps, entry = parse_hlo(hlo, n_devices)
+    if entry:
+        mult = multiplicities(comps, entry)
+        flops, hbm_bytes, wire, by_op = aggregate(comps, mult, n_devices)
+    else:
+        flops, hbm_bytes, wire, by_op = ca_flops, ca_bytes, 0.0, {}
+
+    # the dot parser misses elementwise flops; cost_analysis misses loop
+    # trips — take the max of the two estimates
+    flops_est = max(flops, ca_flops)
+    bytes_est = max(hbm_bytes, ca_bytes)
+
+    t_compute = flops_est / PEAK_FLOPS
+    t_memory = bytes_est / HBM_BW
+    t_coll = wire / (LINK_BW * N_LINKS)
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+    except Exception:
+        pass
+
+    from ..configs import SHAPES
+    sh = SHAPES[shape]
+    mf_total = model_flops(cfg, kind, sh.global_batch, sh.seq_len)
+    mf_per_dev = mf_total / n_devices
+    useful = mf_per_dev / flops_est if flops_est else 0.0
+
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "n_devices": n_devices,
+        "hlo_flops_per_dev": flops_est,
+        "hlo_flops_cost_analysis": ca_flops,
+        "hlo_bytes_per_dev": bytes_est,
+        "hlo_bytes_cost_analysis": ca_bytes,
+        "collective_wire_bytes_per_dev": wire,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_flops_ratio": useful,
+        "memory_analysis": mem,
+        "collectives_by_op": by_op,
+    }

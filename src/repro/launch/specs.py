@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run's
+no-allocation input builder (weak-type-correct, shardable).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import init_params
+from ..models.config import ModelConfig
+from ..models.layers import MeshAxes
+from ..train.optimizer import adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def param_shapes_and_specs(cfg: ModelConfig, ax: MeshAxes):
+    """(params SDS tree, PartitionSpec tree) without allocating anything."""
+    box = {}
+
+    def f(key):
+        p, s = init_params(key, cfg, ax)
+        box["specs"] = s
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, box["specs"]
+
+
+def opt_shapes(params_sds):
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def batch_shapes(cfg: ModelConfig, B: int, S: int, *, kind: str
+                 ) -> Dict[str, SDS]:
+    """Global batch stand-ins.  For VLM, patch tokens come out of the seq
+    budget (patches + text = S)."""
+    if cfg.family == "vlm":
+        s_text = max(S - cfg.n_patch_tokens, 1)
+        out = {"tokens": SDS((B, s_text), jnp.int32),
+               "labels": SDS((B, s_text), jnp.int32),
+               "patches": SDS((B, cfg.n_patch_tokens, cfg.d_model),
+                              jnp.float32)}
+        return out
+    out = {"tokens": SDS((B, S), jnp.int32),
+           "labels": SDS((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = SDS((B, cfg.n_audio_frames, cfg.d_model),
+                            jnp.float32)
+    return out
+
+
+def cache_shapes_and_specs(cfg: ModelConfig, B: int, ctx: int,
+                           ax: MeshAxes, dp_axes):
+    """GLOBAL cache shapes + specs (the per-device view lives in
+    models.transformer.init_caches).  dp_axes: batch sharding axes or None
+    (replicated small-batch decode)."""
+    from ..models.attention import kv_split, _local_heads
+    kinds = cfg.block_kinds()
+    dt = cfg.jdtype
+    shapes, specs = [], []
+    for k in kinds:
+        if k == "attn":
+            h_loc, kv_loc = _local_heads(cfg, ax)
+            kv_total = kv_loc * ax.tp if kv_split(cfg, ax) else kv_loc
+            kv_axis = "model" if kv_split(cfg, ax) else None
+            window = cfg.window if cfg.attention in ("sliding", "chunked") \
+                else 0
+            C = min(ctx, window) if window else ctx
+            shapes.append(dict(
+                k=SDS((B, C, kv_total, cfg.hd), dt),
+                v=SDS((B, C, kv_total, cfg.hd), dt),
+                pos=SDS((B, C), jnp.int32),
+                idx=SDS((), jnp.int32)))
+            specs.append(dict(
+                k=P(dp_axes, None, kv_axis, None),
+                v=P(dp_axes, None, kv_axis, None),
+                pos=P(dp_axes, None), idx=P()))
+        elif k == "mlstm":
+            H = cfg.n_heads
+            inner = 2 * cfg.d_model
+            dk = inner // H
+            dv_total = inner // H          # per-head v dim, TP-sharded
+            shapes.append((SDS((B, H, dv_total, dk), jnp.float32),
+                           SDS((B, H, dk), jnp.float32),
+                           SDS((B, H), jnp.float32)))
+            specs.append((P(dp_axes, None, "model", None),
+                          P(dp_axes, None, None),
+                          P(dp_axes, None)))
+        elif k == "slstm":
+            U = cfg.d_model
+            shapes.append(tuple(SDS((B, U), jnp.float32) for _ in range(4)))
+            specs.append(tuple(P(dp_axes, "model") for _ in range(4)))
+        elif k == "rglru":
+            W = cfg.rglru_width or cfg.d_model
+            K = cfg.conv1d_width
+            shapes.append({"h": SDS((B, W), jnp.float32),
+                           "conv": SDS((B, K - 1, W), jnp.float32)})
+            specs.append({"h": P(dp_axes, "model"),
+                          "conv": P(dp_axes, None, "model")})
+    return shapes, specs

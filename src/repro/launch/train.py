@@ -1,0 +1,78 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 200 --seq 256 --batch 8 --smoke [--policy ring_mid_v2]
+
+On this CPU container use --smoke (reduced config, 1 device).  On a real
+pod, omit --smoke and launch one process per host with the production
+mesh (the step itself is identical — it's the same shard_map program the
+dry-run compiles for 256/512 chips).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs import get_config, get_smoke_config
+from ..core.runtime import PolicyRuntime
+from ..collectives.dispatch import reset_dispatcher
+from ..data import DataConfig
+from ..models.layers import MeshAxes
+from ..train import AdamWConfig, Trainer, TrainerConfig, TrainStepConfig
+from .mesh import make_production_mesh, mesh_axes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--policy", default="none")
+    ap.add_argument("--bucketed", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    rt = PolicyRuntime()
+    if args.policy != "none":
+        import repro.policies as pol
+        rt.load(getattr(pol, args.policy).program)
+        print(f"loaded verified policy: {args.policy}")
+    reset_dispatcher(runtime=rt)
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        ax = MeshAxes(tp=1, dp=1, fsdp=False)
+    else:
+        cfg = get_config(args.arch).with_overrides(remat=True)
+        mesh = make_production_mesh()
+        ax = mesh_axes(mesh, fsdp=True)
+
+    tcfg = TrainerConfig(
+        steps=args.steps, log_every=10,
+        ckpt_dir=args.ckpt_dir or f"/tmp/repro_ckpt_{args.arch}",
+        ckpt_every=args.ckpt_every,
+        data=DataConfig(seq_len=args.seq, global_batch=args.batch),
+        step=TrainStepConfig(opt=AdamWConfig(lr=args.lr),
+                             total_steps=args.steps, warmup_steps=max(
+                                 args.steps // 20, 5),
+                             bucketed_grad_sync=args.bucketed))
+    tr = Trainer(cfg, ax, mesh, tcfg)
+    if args.ckpt_every and tr.maybe_restore():
+        print(f"restored from step {tr.step_idx}")
+    log = tr.run()
+    print(f"final loss {log[-1]['loss']:.4f} over {len(log)} steps; "
+          f"mean step {np.mean([m['step_time_s'] for m in log[2:]]):.3f}s")
+
+
+if __name__ == "__main__":
+    main()

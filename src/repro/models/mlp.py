@@ -1,0 +1,20 @@
+"""Feed-forward blocks: SwiGLU / GeLU, tensor-parallel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import MeshAxes, col_linear, row_linear
+
+
+def mlp_block(p, x, cfg: ModelConfig, ax: MeshAxes):
+    if cfg.mlp == "swiglu":
+        g = col_linear(x, p["w_gate"], ax, fsdp_dim=0)
+        u = col_linear(x, p["w_up"], ax, fsdp_dim=0)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = col_linear(x, p["w_up"], ax, bias=p.get("b_up"), fsdp_dim=0)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return row_linear(h, p["w_down"], ax, bias=p.get("b_down"), fsdp_dim=1)

@@ -1,0 +1,147 @@
+"""Expert-parallel Mixture-of-Experts with capacity-based token dispatch.
+
+The richest policy target in the framework: the token exchange is an
+all-to-all over the 'model' axis, routed through the policy dispatcher
+(the tuner's algorithm/protocol/channel decisions apply to it exactly as
+to NCCL's MoE traffic).
+
+Layout:
+  router w: (D, E)                      — replicated (tiny)
+  expert w1/w3: (E/tp, D, Fe), w2: (E/tp, Fe, D)   — expert-parallel
+  dispatch buffer: (E, C, D) per device -> all_to_all(model) ->
+  (E_loc, tp*C, D) per device -> grouped matmul -> reverse
+
+Capacity C = ceil(T·k / E · capacity_factor); overflow tokens are dropped
+(standard top-k capacity routing).  Aux losses: load-balance (Switch) +
+router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..collectives.dispatch import dispatcher
+from ..core.context import AxisKind
+from .config import ModelConfig
+from .layers import MeshAxes, fsdp_gather
+
+
+def router_topk(logits, k: int):
+    """logits (T, E) -> (gates (T,k), idx (T,k), aux metrics)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _positions_in_expert(idx, E: int, k: int):
+    """Priority-ordered position of each (token, choice) in its expert."""
+    T = idx.shape[0]
+    pos = []
+    counts = jnp.zeros((E,), jnp.int32)
+    for c in range(k):
+        oh = jax.nn.one_hot(idx[:, c], E, dtype=jnp.int32)        # (T, E)
+        pic = jnp.cumsum(oh, axis=0) - 1 + counts[None, :]
+        counts = counts + jnp.sum(oh, axis=0)
+        pos.append(jnp.sum(pic * oh, axis=-1))                    # (T,)
+    return jnp.stack(pos, axis=1)                                 # (T, k)
+
+
+def moe_block(p, x, cfg: ModelConfig, ax: MeshAxes
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xt_full = x.reshape(B * S, D)
+
+    # Activations are replicated across the model axis (Megatron TP), so
+    # each expert-parallel rank routes a disjoint 1/tp slice of the tokens;
+    # outputs are all-gathered back afterwards.  Without this split every
+    # rank would dispatch identical copies -> tp x duplicate expert compute.
+    tp = ax.tp
+    token_split = tp > 1 and xt_full.shape[0] % tp == 0 \
+        and xt_full.shape[0] >= tp
+    if token_split:
+        r = lax.axis_index(ax.model)
+        Tl = xt_full.shape[0] // tp
+        xt = lax.dynamic_slice_in_dim(xt_full, r * Tl, Tl, axis=0)
+    else:
+        # tiny token counts (decode): all ranks route identical copies;
+        # each combines its own copy back — correct, duplicated compute
+        xt = xt_full
+    T = xt.shape[0]
+
+    logits = xt @ p["router"].astype(xt.dtype)                    # (T, E)
+    gates, idx, probs = router_topk(logits, k)
+
+    # --- aux losses ----------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                                   # (T,E)->(E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+    zloss = 1e-3 * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+    aux = aux + zloss
+
+    # --- capacity + dispatch ---------------------------------------------------
+    C = max(1, math.ceil(T * k / E * cfg.capacity_factor))
+    pos = _positions_in_expert(idx, E, k)                          # (T, k)
+    keep = (pos < C)
+    e_flat = idx.reshape(-1)                                       # (T*k,)
+    p_flat = jnp.clip(pos.reshape(-1), 0, C - 1)
+    w_flat = (gates * keep).reshape(-1)
+
+    buf = jnp.zeros((E, C, D), xt.dtype)
+    src = jnp.repeat(xt, k, axis=0) * keep.reshape(-1, 1).astype(xt.dtype)
+    buf = buf.at[e_flat, p_flat].add(src)
+
+    # --- all_to_all over the model axis (expert parallel) ----------------------
+    if tp > 1:
+        e_loc = E // tp
+        buf = buf.reshape(tp, e_loc, C, D)
+        buf = dispatcher().all_to_all(buf, ax.model,
+                                      axis_kind=AxisKind.EXPERT)
+        # now buf[s, e, c, :] = tokens from source device s for local expert e
+        buf = buf.transpose(1, 0, 2, 3).reshape(e_loc, tp * C, D)
+    else:
+        e_loc = E
+
+    # --- grouped expert FFN (Pallas grouped-matmul target) ---------------------
+    w1 = fsdp_gather(p["w1"], ax, 1).astype(buf.dtype)  # (e_loc, D, Fe)
+    w3 = fsdp_gather(p["w3"], ax, 1).astype(buf.dtype)
+    w2 = fsdp_gather(p["w2"], ax, 2).astype(buf.dtype)  # (e_loc, Fe, D)
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    u = jnp.einsum("ecd,edf->ecf", buf, w3)
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(buf.dtype) * u
+    out = jnp.einsum("ecf,efd->ecd", h, w2)
+
+    # --- reverse all_to_all -----------------------------------------------------
+    if tp > 1:
+        out = out.reshape(e_loc, tp, C, D).transpose(1, 0, 2, 3)
+        out = dispatcher().all_to_all(out, ax.model,
+                                      axis_kind=AxisKind.EXPERT)
+        out = out.reshape(E, C, D)
+
+    # --- combine -----------------------------------------------------------------
+    gathered = out[e_flat, p_flat]                                  # (T*k, D)
+    y = jnp.sum((gathered * w_flat[:, None].astype(gathered.dtype)
+                 ).reshape(T, k, D), axis=1)
+
+    # restore replication across the model axis
+    if token_split:
+        y = dispatcher().all_gather(y, ax.model, axis_kind=AxisKind.MODEL)
+
+    # --- shared experts (llama4): dense TP path over the FULL token set --------
+    if cfg.n_shared_experts:
+        from .layers import col_linear, row_linear
+        hs = col_linear(xt_full, p["shared_w1"], ax, fsdp_dim=0)
+        us = col_linear(xt_full, p["shared_w3"], ax, fsdp_dim=0)
+        hs = jax.nn.silu(hs.astype(jnp.float32)).astype(xt_full.dtype) * us
+        y = y + row_linear(hs, p["shared_w2"], ax, fsdp_dim=1)
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,327 @@
+"""Recurrent blocks: xLSTM (mLSTM chunkwise-parallel + sLSTM) and RG-LRU.
+
+Sharding: all recurrences are arranged so the *state* is sharded over the
+model axis and the recurrence itself is collective-free (the paper's
+technique then only governs the surrounding projections' collectives):
+
+  mLSTM  — matrix memory C (d_v × d_k) with d_v TP-sharded, d_k full:
+           C rows shard cleanly because C = Σ decay·v kᵀ and v is sharded.
+  sLSTM  — diagonal-recurrence variant (the block-diagonal R of the paper
+           degenerates to its diagonal here — documented simplification),
+           hidden units TP-sharded.
+  RG-LRU — elementwise gated linear recurrence (Griffin), width TP-sharded,
+           trained with an associative scan (parallel prefix), O(log S).
+
+Training path of mLSTM is the stabilized *chunkwise-parallel* form
+(intra-chunk attention-like einsums + inter-chunk scan); the exact
+step-by-step scan is kept as the numerical oracle (tests compare both).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import MeshAxes, col_linear, fsdp_gather, row_linear
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def _mlstm_gates(p, x, ax: MeshAxes):
+    """i~, f~ pre-activations: (B, S, H) from the block input (full D)."""
+    wi = fsdp_gather(p["w_i"], ax, 0).astype(jnp.float32)
+    wf = fsdp_gather(p["w_f"], ax, 0).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return xf @ wi + p["b_i"].astype(jnp.float32), \
+        xf @ wf + p["b_f"].astype(jnp.float32)
+
+
+def _mlstm_qkv(p, x, cfg: ModelConfig, ax: MeshAxes):
+    """q,k: (B,S,H,dk) full; v: (B,S,H,dv_loc) TP-sharded."""
+    H = cfg.n_heads
+    inner = 2 * cfg.d_model
+    dk = inner // H
+    q = col_linear(x, p["w_q"], ax, fsdp_dim=0)   # replicated over model
+    k = col_linear(x, p["w_k"], ax, fsdp_dim=0)
+    v = col_linear(x, p["w_v"], ax, fsdp_dim=0)   # TP-sharded inner
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, H, dk) * (dk ** -0.5)
+    k = k.reshape(B, S, H, dk)
+    dv_loc = v.shape[-1] // H
+    v = v.reshape(B, S, H, dv_loc)
+    return q, k, v
+
+
+def mlstm_scan_ref(q, k, v, it, ft, *, carry=None):
+    """Exact stabilized mLSTM recurrence (oracle).  Shapes:
+    q/k (B,S,H,dk), v (B,S,H,dv), it/ft (B,S,H).  Returns h (B,S,H,dv)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if carry is None:
+        C0 = jnp.zeros((B, H, dv, dk), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        carry = (C0, n0, m0)
+
+    def step(c, xs):
+        C, n, m = c
+        qt, kt, vt, i_t, f_t = xs
+        logf = jax.nn.log_sigmoid(f_t)                       # (B,H)
+        m_new = jnp.maximum(logf + m, i_t)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(i_t - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * \
+            jnp.einsum("bhv,bhk->bhvk", vt, kt)
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    carry, h = lax.scan(step, carry, xs)
+    return h.swapaxes(0, 1), carry                           # (B,S,H,dv)
+
+
+def mlstm_chunked(q, k, v, it, ft, *, chunk: int = 128):
+    """Stabilized chunkwise-parallel mLSTM (training fast path)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, "sequence must divide the chunk size"
+    NC = S // L
+
+    def resh(x):
+        return x.reshape(B, NC, L, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = map(lambda a: resh(a).astype(jnp.float32), (q, k, v))
+    its, fts = resh(it).astype(jnp.float32), resh(ft).astype(jnp.float32)
+
+    C0 = jnp.zeros((B, H, dv, dk), jnp.float32)
+    n0 = jnp.zeros((B, H, dk), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    tri_strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = xs                  # (B,L,H,*) / (B,L,H)
+        logf = jax.nn.log_sigmoid(fc)            # (B,L,H)
+        b = jnp.cumsum(logf, axis=1)             # inclusive cumsum
+        # intra-chunk log weights: g[i,j] = b_i - b_j + i_j  (j <= i)
+        gi = b[:, :, None, :] - b[:, None, :, :] + ic[:, None, :, :]
+        gi = jnp.where(tri[None, :, :, None], gi, -jnp.inf)   # (B,L,L,H)
+        inter = b + m[:, None, :]                              # (B,L,H)
+        m_i = jnp.maximum(inter, jnp.max(gi, axis=2))          # (B,L,H)
+        w_intra = jnp.exp(gi - m_i[:, :, None, :])             # (B,L,L,H)
+        w_inter = jnp.exp(inter - m_i)                         # (B,L,H)
+
+        scores = jnp.einsum("blhk,bjhk->bljh", qc, kc)         # (B,L,L,H)
+        num = jnp.einsum("bljh,bljh,bjhv->blhv", scores, w_intra, vc) \
+            + jnp.einsum("blh,bhvk,blhk->blhv", w_inter, C, qc)
+        # denominator uses n_t = Σ weights·k (+ inter part), dotted with q
+        den_intra = jnp.einsum("bljh,bjhk,blhk->blh", w_intra, kc, qc)
+        den_inter = w_inter * jnp.einsum("bhk,blhk->blh", n, qc)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                          jnp.exp(-m_i))
+        h = num / den[..., None]
+
+        # ---- carry update (chunk end) ------------------------------------
+        bL = b[:, -1, :]                                       # (B,H)
+        g_end = bL[:, None, :] - b + ic                        # (B,L,H)
+        m_end = jnp.maximum(bL + m, jnp.max(g_end, axis=1))
+        w_end = jnp.exp(g_end - m_end[:, None, :])
+        C_new = jnp.exp(bL + m - m_end)[:, :, None, None] * C + \
+            jnp.einsum("blh,blhv,blhk->bhvk", w_end, vc, kc)
+        n_new = jnp.exp(bL + m - m_end)[:, :, None] * n + \
+            jnp.einsum("blh,blhk->bhk", w_end, kc)
+        return (C_new, n_new, m_end), h
+
+    carry, hs = lax.scan(chunk_step, (C0, n0, m0), (qs, ks, vs, its, fts))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dv)
+    return h, carry
+
+
+def mlstm_block(p, x, cfg: ModelConfig, ax: MeshAxes, *,
+                chunked: bool = True, chunk: int = 0):
+    """Full mLSTM residual block body (pre-norm handled by caller)."""
+    chunk = chunk or cfg.mlstm_chunk
+    q, k, v = _mlstm_qkv(p, x, cfg, ax)
+    it, ft = _mlstm_gates(p, x, ax)
+    if chunked and x.shape[1] % min(chunk, x.shape[1]) == 0 and x.shape[1] > 1:
+        h, _ = mlstm_chunked(q, k, v, it, ft, chunk=min(chunk, x.shape[1]))
+    else:
+        h, _ = mlstm_scan_ref(q, k, v, it, ft)
+    B, S = x.shape[:2]
+    # output gate + down projection (row-parallel: inner dim is sharded)
+    og = col_linear(x, p["w_og"], ax, fsdp_dim=0)
+    h = h.reshape(B, S, -1).astype(x.dtype) * jax.nn.sigmoid(
+        og.astype(jnp.float32)).astype(x.dtype)
+    return row_linear(h, p["w_down"], ax, fsdp_dim=1)
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig, ax: MeshAxes):
+    """One-token decode: state = (C, n, m)."""
+    q, k, v = _mlstm_qkv(p, x, cfg, ax)
+    it, ft = _mlstm_gates(p, x, ax)
+    h, state = mlstm_scan_ref(q, k, v, it, ft, carry=state)
+    B = x.shape[0]
+    og = col_linear(x, p["w_og"], ax, fsdp_dim=0)
+    h = h.reshape(B, 1, -1).astype(x.dtype) * jax.nn.sigmoid(
+        og.astype(jnp.float32)).astype(x.dtype)
+    return row_linear(h, p["w_down"], ax, fsdp_dim=1), state
+
+
+def mlstm_init_state(cfg: ModelConfig, B: int, ax: MeshAxes):
+    H = cfg.n_heads
+    inner = 2 * cfg.d_model
+    dk = inner // H
+    dv = (inner // ax.tp) // H
+    return (jnp.zeros((B, H, dv, dk), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+
+
+# ===========================================================================
+# sLSTM (diagonal-recurrence variant)
+# ===========================================================================
+
+def slstm_block(p, x, cfg: ModelConfig, ax: MeshAxes, *, state=None,
+                return_state: bool = False):
+    """units TP-sharded; diagonal recurrent weights r_* (simplification of
+    the paper's block-diagonal R — noted in DESIGN.md)."""
+    B, S, D = x.shape
+    z = col_linear(x, p["w_z"], ax, fsdp_dim=0)      # (B,S,U_loc)
+    i = col_linear(x, p["w_i"], ax, fsdp_dim=0)
+    f = col_linear(x, p["w_f"], ax, fsdp_dim=0)
+    o = col_linear(x, p["w_o"], ax, fsdp_dim=0)
+    U = z.shape[-1]
+    if state is None:
+        c0 = jnp.zeros((B, U), jnp.float32)
+        n0 = jnp.ones((B, U), jnp.float32)
+        h0 = jnp.zeros((B, U), jnp.float32)
+        m0 = jnp.zeros((B, U), jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    ri, rf, rz, ro = (p["r_i"].astype(jnp.float32),
+                      p["r_f"].astype(jnp.float32),
+                      p["r_z"].astype(jnp.float32),
+                      p["r_o"].astype(jnp.float32))
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zt, it, ft, ot = [a.astype(jnp.float32) for a in xs]
+        it = it + ri * h
+        ft = ft + rf * h
+        zt = jnp.tanh(zt + rz * h)
+        ot = jax.nn.sigmoid(ot + ro * h)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(logf + m - m_new)
+        c = fp * c + ip * zt
+        n = jnp.maximum(fp * n + ip, jnp.exp(-m_new))
+        h = ot * (c / n)
+        return (c, n, h, m_new), h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (z, i, f, o))
+    carry, hs = lax.scan(step, (c0, n0, h0, m0), xs)
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    out = row_linear(y, p["w_down"], ax, fsdp_dim=1)
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_init_state(cfg: ModelConfig, B: int, ax: MeshAxes):
+    U = cfg.d_model // ax.tp
+    return (jnp.zeros((B, U), jnp.float32), jnp.ones((B, U), jnp.float32),
+            jnp.zeros((B, U), jnp.float32), jnp.zeros((B, U), jnp.float32))
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma)
+# ===========================================================================
+
+C_RGLRU = 8.0
+
+
+def _rglru_core(x_in, gate_r, gate_i, lam, *, h0=None):
+    """Elementwise gated linear recurrence via associative scan.
+    x_in/gates: (B, S, W); lam: (W,) raw param.  Returns (B,S,W), h_last."""
+    log_a0 = -C_RGLRU * jax.nn.softplus(lam.astype(jnp.float32))   # (W,)
+    r = jax.nn.sigmoid(gate_r.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_i.astype(jnp.float32))
+    log_a = log_a0[None, None, :] * r                               # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x_in.astype(jnp.float32))
+
+    if h0 is not None:
+        # decode path: single step
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None], h
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, gated), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_block(p, x, cfg: ModelConfig, ax: MeshAxes, *, state=None,
+                return_state: bool = False):
+    """Griffin recurrent block: in-proj (2 branches) -> conv1d -> RG-LRU ->
+    gated multiply -> out-proj."""
+    B, S, D = x.shape
+    u = col_linear(x, p["w_in"], ax, fsdp_dim=0)     # (B,S,2*W_loc)
+    w_loc = u.shape[-1] // 2
+    branch, gate_branch = u[..., :w_loc], u[..., w_loc:]
+    gate_branch = jax.nn.gelu(gate_branch.astype(jnp.float32)
+                              ).astype(x.dtype)
+
+    # causal depthwise conv1d (width cfg.conv1d_width)
+    cw = p["conv_w"].astype(jnp.float32)             # (K, W_loc)
+    K = cw.shape[0]
+    if state is not None:
+        conv_state = state["conv"]                   # (B, K-1, W_loc)
+        seq = jnp.concatenate([conv_state, branch.astype(jnp.float32)],
+                              axis=1)
+        new_conv_state = seq[:, -(K - 1):]
+    else:
+        seq = jnp.pad(branch.astype(jnp.float32), ((0, 0), (K - 1, 0),
+                                                   (0, 0)))
+        new_conv_state = seq[:, -(K - 1):]
+    conv = sum(seq[:, k:k + S] * cw[k][None, None, :] for k in range(K))
+    conv = conv + p["conv_b"].astype(jnp.float32)
+
+    gr = col_linear(x, p["w_a"], ax, fsdp_dim=0)     # recurrence gate
+    gi = col_linear(x, p["w_x"], ax, fsdp_dim=0)     # input gate
+    h0 = state["h"] if state is not None else None
+    y, h_last = _rglru_core(conv, gr, gi, p["lam"], h0=h0)
+    y = y.astype(x.dtype) * gate_branch
+    out = row_linear(y, p["w_out"], ax, fsdp_dim=1)
+    if return_state:
+        return out, {"h": h_last, "conv": new_conv_state}
+    return out
+
+
+def rglru_init_state(cfg: ModelConfig, B: int, ax: MeshAxes):
+    W = (cfg.rglru_width or cfg.d_model) // ax.tp
+    K = cfg.conv1d_width
+    return {"h": jnp.zeros((B, W), jnp.float32),
+            "conv": jnp.zeros((B, K - 1, W), jnp.float32)}

@@ -1,0 +1,21 @@
+"""Policy zoo: Table 1 suite, §5.2 unsafe suite, §5.3 case studies."""
+
+from .casestudies import (adapt_map, adapt_profiler, adapt_tuner,
+                          bad_channels, env_defaults, net_accounting,
+                          net_stats, ring_mid_v2)
+from .perf import (expert_chunked_a2a, grad_compress,
+                   grad_compress_bidir, tpu_size_aware)
+from .table1 import (SAFE_POLICIES, adaptive_channels, bandwidth_probe,
+                     latency_feedback, native_baseline, noop, size_aware,
+                     slo_enforcer, static_override)
+from .unsafe import UNSAFE_PROGRAMS
+
+__all__ = [
+    "SAFE_POLICIES", "UNSAFE_PROGRAMS", "adaptive_channels",
+    "adapt_map", "adapt_profiler", "adapt_tuner", "bad_channels",
+    "bandwidth_probe", "env_defaults", "latency_feedback", "native_baseline",
+    "net_accounting", "net_stats", "noop", "ring_mid_v2", "size_aware",
+    "expert_chunked_a2a", "grad_compress", "grad_compress_bidir",
+    "tpu_size_aware",
+    "slo_enforcer", "static_override",
+]

@@ -1,0 +1,5 @@
+"""Serving substrate: batched continuous-decode engine with KV caches."""
+
+from .engine import Request, ServeConfig, ServeEngine
+
+__all__ = ["Request", "ServeConfig", "ServeEngine"]

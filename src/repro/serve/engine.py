@@ -1,0 +1,155 @@
+"""Batched continuous-batching decode engine.
+
+Fixed-slot design (vLLM-style static batching): B slots, each holding one
+request's KV cache region.  New requests claim free slots, prompts are
+prefilled token-by-token through the same decode step (single compiled
+program — no prefill/decode executable switch on CPU-scale demos), then
+generation proceeds; finished slots free immediately and the next queued
+request claims them mid-flight (continuous batching).
+
+The decode step is the policy-dispatched sharded step from
+repro.train.step.make_serve_step when a mesh is provided; on a single
+device it calls the model directly.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_params
+from ..models.config import ModelConfig
+from ..models.layers import MeshAxes
+from ..models.transformer import init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    done_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_at is not None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    max_ctx: int = 256
+    eos_id: int = -1          # -1: only stop on max_new
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, ax: MeshAxes,
+                 scfg: ServeConfig):
+        self.cfg = cfg
+        self.ax = ax
+        self.scfg = scfg
+        self.params = params
+        B = scfg.batch_slots
+        self.caches = init_caches(params, cfg, B, scfg.max_ctx, ax)
+        self.pos = np.zeros((B,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_phase = ["free"] * B          # free | prefill | gen
+        self.slot_cursor = np.zeros((B,), np.int32)
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self._rid = itertools.count()
+        self.steps = 0
+
+        self._step = jax.jit(
+            lambda p, t, c, q: decode_step(p, t, c, q, cfg, ax))
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
+        r = Request(rid=next(self._rid), prompt=list(prompt),
+                    max_new=max_new, submitted_at=time.perf_counter())
+        self.queue.append(r)
+        return r
+
+    def _admit(self):
+        for b in range(self.scfg.batch_slots):
+            if self.slot_phase[b] == "free" and self.queue:
+                r = self.queue.popleft()
+                self.slot_req[b] = r
+                self.slot_phase[b] = "prefill"
+                self.slot_cursor[b] = 0
+                self.pos[b] = 0
+                self._reset_slot_cache(b)
+
+    def _reset_slot_cache(self, b: int):
+        def reset(leaf):
+            if leaf.ndim == 0:
+                return leaf
+            return leaf.at[b].set(jnp.zeros_like(leaf[b]))
+        # attention caches store pos=-1 sentinels
+        new = []
+        for c in self.caches:
+            if isinstance(c, dict) and "pos" in c:
+                c = dict(c)
+                c["k"] = c["k"].at[b].set(0)
+                c["v"] = c["v"].at[b].set(0)
+                c["pos"] = c["pos"].at[b].set(-1)
+                new.append(c)
+            else:
+                new.append(jax.tree.map(reset, c))
+        self.caches = new
+
+    def step(self):
+        """One engine tick: admit, build the token batch, decode, route."""
+        self._admit()
+        B = self.scfg.batch_slots
+        toks = np.zeros((B, 1), np.int32)
+        for b in range(B):
+            r = self.slot_req[b]
+            if r is None:
+                continue
+            if self.slot_phase[b] == "prefill":
+                toks[b, 0] = r.prompt[self.slot_cursor[b]]
+            else:
+                toks[b, 0] = r.out[-1] if r.out else r.prompt[-1]
+        nxt, self.caches = self._step(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(nxt)
+        self.steps += 1
+
+        for b in range(B):
+            r = self.slot_req[b]
+            if r is None:
+                continue
+            self.pos[b] += 1
+            if self.slot_phase[b] == "prefill":
+                self.slot_cursor[b] += 1
+                if self.slot_cursor[b] >= len(r.prompt):
+                    self.slot_phase[b] = "gen"
+                    r.out.append(int(nxt[b, 0]))
+            else:
+                r.out.append(int(nxt[b, 0]))
+                if len(r.out) >= r.max_new or \
+                        (self.scfg.eos_id >= 0 and
+                         r.out[-1] == self.scfg.eos_id):
+                    r.done_at = time.perf_counter()
+                    self.slot_req[b] = None
+                    self.slot_phase[b] = "free"
+
+    def run_until_drained(self, *, max_steps: int = 10_000) -> int:
+        while (self.queue or any(p != "free" for p in self.slot_phase)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.steps
+
+    @property
+    def active(self) -> int:
+        return sum(p != "free" for p in self.slot_phase)

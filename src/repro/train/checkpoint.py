@@ -1,0 +1,109 @@
+"""Checkpointing: atomic, resumable, numpy-backed (no orbax dependency).
+
+Layout: <dir>/step_<N>/
+  manifest.json        — step, pytree structure, shapes/dtypes, config hash
+  arrays.npz           — flattened leaves keyed by index
+
+Writes go to a tmp dir + atomic rename (a crashed writer never corrupts the
+latest checkpoint).  ``latest_step`` scans for the newest complete manifest.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, tdef = jax.tree.flatten(tree)
+    return flat, tdef, jax.tree.structure(tree)
+
+
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _encode(a: np.ndarray):
+    """npz can't store ml_dtypes; view them as same-width uints."""
+    name = str(a.dtype)
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name]), name
+    return a, name
+
+
+def _decode(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        import ml_dtypes
+        return a.view(getattr(ml_dtypes, dtype_name))
+    return a
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, *,
+                    extra: Optional[dict] = None) -> str:
+    flat, tdef = jax.tree.flatten(state)
+    encoded = [_encode(np.asarray(x)) for x in flat]
+    arrays = {f"a{i}": e[0] for i, e in enumerate(encoded)}
+    manifest = {
+        "step": int(step),
+        "treedef": str(tdef),
+        "n_leaves": len(flat),
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [e[1] for e in encoded],
+        "extra": extra or {},
+    }
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template: Any,
+                    step: Optional[int] = None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``template`` (shape-checked)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t, tdef = jax.tree.flatten(template)
+    if manifest["n_leaves"] != len(flat_t):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves; template has "
+            f"{len(flat_t)} — config mismatch?")
+    flat = []
+    for i, t in enumerate(flat_t):
+        a = _decode(data[f"a{i}"], manifest["dtypes"][i])
+        if tuple(a.shape) != tuple(np.shape(t)):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {a.shape} != template "
+                f"{np.shape(t)}")
+        flat.append(a)
+    return jax.tree.unflatten(tdef, flat), step, manifest.get("extra", {})

@@ -1,0 +1,145 @@
+"""End-to-end core pipeline: restricted-Python -> bytecode -> verifier -> tiers.
+
+Includes the paper's Listing 1 (profiler-to-tuner closed loop) verbatim in
+our frontend dialect.
+"""
+
+import pytest
+
+from repro.core import (PolicyRuntime, VerifierError, make_ctx, map_decl,
+                        policy, verify)
+
+NCCL_ALGO_TREE = 2
+NCCL_ALGO_RING = 1
+NCCL_PROTO_SIMPLE = 0
+
+latency_map = map_decl("latency_map", kind="hash", key_size=4,
+                       value_size=16, max_entries=64)
+
+
+@policy(section="profiler", maps=[latency_map])
+def record_latency(ctx):
+    """Listing 1 (top): profiler writes latency into the shared map."""
+    st = latency_map.lookup(ctx.comm_id)
+    if st is None:
+        return 0
+    st[0] = ctx.latency_ns
+    st[1] = ctx.n_channels
+    return 0
+
+
+@policy(section="tuner", maps=[latency_map])
+def size_aware_adaptive(ctx):
+    """Listing 1 (bottom): tuner reads profiler telemetry for adaptation."""
+    st = latency_map.lookup(ctx.comm_id)
+    if st is None:
+        ctx.n_channels = 4
+        return 0
+    if ctx.msg_size <= 32 * 1024:
+        ctx.algorithm = NCCL_ALGO_TREE
+    else:
+        ctx.algorithm = NCCL_ALGO_RING
+    ctx.protocol = NCCL_PROTO_SIMPLE
+    if st[0] > 1000000:
+        ctx.n_channels = min(st[1] + 1, 16)
+    else:
+        ctx.n_channels = st[1]
+    return 0
+
+
+def test_listing1_verifies():
+    verify(record_latency.program)
+    verify(size_aware_adaptive.program)
+
+
+@pytest.mark.parametrize("tier", ["jit", "vm"])
+def test_listing1_closed_loop(tier):
+    rt = PolicyRuntime(use_interpreter=(tier == "vm"))
+    rt.load(record_latency.program)
+    rt.load(size_aware_adaptive.program)
+
+    # before any telemetry: conservative default
+    ctx = make_ctx("tuner", comm_id=7, msg_size=16 * 1024)
+    rt.invoke("tuner", ctx)
+    assert ctx["n_channels"] == 4
+
+    # profiler can't write without an existing entry (hash map): seed it
+    rt.maps.get("latency_map").update_u64(7, 0, slot=0)
+
+    # profiler writes a slow sample with 6 channels
+    pctx = make_ctx("profiler", comm_id=7, latency_ns=2_000_000, n_channels=6)
+    rt.invoke("profiler", pctx)
+
+    # tuner ramps channels up and picks tree for small messages
+    ctx = make_ctx("tuner", comm_id=7, msg_size=16 * 1024)
+    rt.invoke("tuner", ctx)
+    assert ctx["algorithm"] == NCCL_ALGO_TREE
+    assert ctx["protocol"] == NCCL_PROTO_SIMPLE
+    assert ctx["n_channels"] == 7  # 6 + 1 (latency above threshold)
+
+    # large message -> ring
+    ctx = make_ctx("tuner", comm_id=7, msg_size=64 * 1024 * 1024)
+    rt.invoke("tuner", ctx)
+    assert ctx["algorithm"] == NCCL_ALGO_RING
+
+    # fast sample -> channels stay
+    pctx = make_ctx("profiler", comm_id=7, latency_ns=1_000, n_channels=8)
+    rt.invoke("profiler", pctx)
+    ctx = make_ctx("tuner", comm_id=7, msg_size=16 * 1024)
+    rt.invoke("tuner", ctx)
+    assert ctx["n_channels"] == 8
+
+
+def test_vm_and_jit_agree():
+    rt_jit = PolicyRuntime(use_interpreter=False)
+    rt_vm = PolicyRuntime(use_interpreter=True)
+    for rt in (rt_jit, rt_vm):
+        rt.load(size_aware_adaptive.program)
+        rt.maps.get("latency_map").update_u64(3, 5_000_000, slot=0)
+        rt.maps.get("latency_map").update_u64(3, 12, slot=1)
+    for size in (1024, 32 * 1024, 1 << 20, 1 << 27):
+        c1 = make_ctx("tuner", comm_id=3, msg_size=size)
+        c2 = make_ctx("tuner", comm_id=3, msg_size=size)
+        r1 = rt_jit.invoke("tuner", c1)
+        r2 = rt_vm.invoke("tuner", c2)
+        assert r1 == r2
+        assert c1.as_dict() == c2.as_dict()
+
+
+def test_unrolled_loop_and_minmax():
+    counters = map_decl("counters", kind="array", value_size=8, max_entries=16)
+
+    @policy(section="tuner", maps=[counters])
+    def unrolled(ctx):
+        total = 0
+        for i in range(8):
+            total = total + i * 2
+        ctx.n_channels = min(max(total, 4), 16)
+        return total
+
+    rt = PolicyRuntime()
+    rt.load(unrolled.program)
+    ctx = make_ctx("tuner")
+    assert rt.invoke("tuner", ctx) == 56
+    assert ctx["n_channels"] == 16
+
+
+def test_frontend_rejects_pointer_return():
+    from repro.core import CompileError
+    m = map_decl("m1", kind="array", value_size=8)
+    with pytest.raises(CompileError):
+        @policy(section="tuner", maps=[m])
+        def leak(ctx):
+            st = m.lookup(0)
+            return st  # noqa — intentionally illegal
+
+
+def test_input_field_write_rejected_at_load():
+    @policy(section="profiler", maps=[])
+    def bad_write(ctx):
+        ctx.latency_ns = 0  # profiler ctx is all-input
+        return 0
+
+    # the frontend happily emits the store; the *verifier* rejects it
+    with pytest.raises(VerifierError, match="read-only input field"):
+        verify(bad_write.program)

@@ -1,0 +1,148 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True on CPU; the same BlockSpecs compile on TPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.grouped_matmul.kernel import grouped_matmul_tpu
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+from repro.kernels.rmsnorm.kernel import fused_rmsnorm_tpu
+from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,T,d,bq,bk", [
+    (128, 128, 64, 64, 64),
+    (256, 256, 64, 128, 64),
+    (128, 256, 128, 64, 128),   # cross/cache: T > S
+    (64, 64, 32, 64, 64),       # single block
+])
+def test_flash_attention_causal(S, T, d, bq, bk, dtype):
+    rng = np.random.RandomState(0)
+    BH = 3
+    q = jnp.asarray(rng.randn(BH, S, d), dtype)
+    k = jnp.asarray(rng.randn(BH, T, d), dtype)
+    v = jnp.asarray(rng.randn(BH, T, d), dtype)
+    got = flash_attention_tpu(q, k, v, causal=True, bq=bq, bk=bk)
+    want = flash_attention_ref(q.reshape(1, BH, S, d),
+                               k.reshape(1, BH, T, d),
+                               v.reshape(1, BH, T, d), causal=True)[0]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.RandomState(1)
+    BH, S, d = 2, 256, 64
+    q = jnp.asarray(rng.randn(BH, S, d), jnp.float32)
+    k = jnp.asarray(rng.randn(BH, S, d), jnp.float32)
+    v = jnp.asarray(rng.randn(BH, S, d), jnp.float32)
+    got = flash_attention_tpu(q, k, v, causal=True, window=window,
+                              bq=64, bk=64)
+    want = flash_attention_ref(q.reshape(1, BH, S, d),
+                               k.reshape(1, BH, S, d),
+                               v.reshape(1, BH, S, d), causal=True,
+                               window=window)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_gqa_expansion():
+    rng = np.random.RandomState(2)
+    B, H, KV, S, d = 2, 8, 2, 128, 32
+    q = jnp.asarray(rng.randn(B, H, S, d), jnp.float32)
+    k = jnp.asarray(rng.randn(B, KV, S, d), jnp.float32)
+    v = jnp.asarray(rng.randn(B, KV, S, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    kx = jnp.repeat(k, H // KV, axis=1)
+    vx = jnp.repeat(v, H // KV, axis=1)
+    want = flash_attention_ref(q, kx, vx, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """The kernel agrees with the model's _sdpa fallback path."""
+    from repro.models.attention import _sdpa, causal_mask
+    rng = np.random.RandomState(3)
+    B, H, S, d = 2, 4, 128, 64
+    q = jnp.asarray(rng.randn(B, S, H, d), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, d), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, d), jnp.float32)
+    pos = jnp.arange(S)[None]
+    mask = causal_mask(S, pos, pos)
+    kv_map = jnp.arange(H)
+    want = _sdpa(q, k, v, mask, scale=d ** -0.5, kv_map=kv_map)
+    got = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          bq=64, bk=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D,bt", [(256, 512, 128), (128, 1024, 64),
+                                    (64, 256, 64)])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_fused_rmsnorm(T, D, bt, dtype, with_residual):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(T, D), dtype)
+    scale = jnp.asarray(rng.rand(D) + 0.5, jnp.float32)
+    res = jnp.asarray(rng.randn(T, D), dtype) if with_residual else None
+    y, r = fused_rmsnorm_tpu(x, scale, res, bt=bt)
+    y_ref, r_ref = fused_rmsnorm_ref(x, scale, res)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(r_ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,bc,bf,bd", [
+    (4, 128, 256, 128, 64, 64, 128),
+    (2, 256, 128, 256, 128, 128, 64),
+    (8, 64, 64, 64, 64, 64, 64),
+])
+def test_grouped_matmul(E, C, D, F, bc, bf, bd, dtype):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(E, C, D) * 0.1, dtype)
+    w = jnp.asarray(rng.randn(E, D, F) * 0.1, dtype)
+    got = grouped_matmul_tpu(x, w, bc=bc, bf=bf, bd=bd)
+    want = grouped_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_grouped_matmul_matches_moe_einsum():
+    rng = np.random.RandomState(1)
+    E, C, D, F = 4, 128, 128, 256
+    x = jnp.asarray(rng.randn(E, C, D) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.randn(E, D, F) * 0.1, jnp.float32)
+    got = grouped_matmul_tpu(x, w)
+    want = jnp.einsum("ecd,edf->ecf", x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,134 @@
+"""Coverage for the maps subsystem and the assembler frontend."""
+
+import threading
+
+import pytest
+
+from repro.core import PolicyRuntime, assemble, make_ctx, verify
+from repro.core.asm import AsmError
+from repro.core.maps import (ArrayMap, HashMap, MapError, MapRegistry,
+                             PerCpuArrayMap)
+
+
+# ---------------------------------------------------------------------------
+# maps
+# ---------------------------------------------------------------------------
+
+def test_array_map_bounds():
+    m = ArrayMap("a", value_size=8, max_entries=4)
+    assert m.lookup((99).to_bytes(4, "little")) is None   # OOB key
+    assert m.update((99).to_bytes(4, "little"), b"\0" * 8) == -1
+    assert m.delete((0).to_bytes(4, "little")) == -1      # arrays can't delete
+
+
+def test_hash_map_capacity():
+    m = HashMap("h", key_size=4, value_size=8, max_entries=2)
+    assert m.update(b"aaaa", b"\1" * 8) == 0
+    assert m.update(b"bbbb", b"\2" * 8) == 0
+    assert m.update(b"cccc", b"\3" * 8) == -1             # E2BIG
+    assert m.delete(b"aaaa") == 0
+    assert m.update(b"cccc", b"\3" * 8) == 0              # room again
+    assert m.lookup(b"aaaa") is None
+
+
+def test_map_key_size_checked():
+    m = HashMap("h", key_size=8, value_size=8, max_entries=4)
+    with pytest.raises(MapError, match="key size"):
+        m.lookup(b"abc")
+
+
+def test_percpu_aggregation():
+    m = PerCpuArrayMap("p", value_size=8, max_entries=2)
+
+    def bump(n):
+        for _ in range(n):
+            v = m.lookup_u64(0) or 0
+            m.update_u64(0, v + 1)
+
+    ts = [threading.Thread(target=bump, args=(100,)) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # per-cpu slots avoid cross-thread lost updates only per slot;
+    # aggregate over slots must count everything each slot saw
+    assert m.aggregate_u64(0) > 0
+
+
+def test_registry_redefinition_conflict():
+    reg = MapRegistry()
+    reg.create("m", "array", value_size=8, max_entries=4)
+    reg.create("m", "array", value_size=8, max_entries=4)  # idempotent
+    with pytest.raises(MapError, match="redefinition"):
+        reg.create("m", "array", value_size=16, max_entries=4)
+
+
+def test_shared_map_across_programs():
+    """Two programs declaring the same map name share storage — the
+    composability substrate."""
+    from repro.core import map_decl, policy
+    shared = map_decl("shared_x", kind="array", value_size=8)
+
+    @policy(section="profiler", maps=[shared])
+    def writer(ctx):
+        shared.update(0, ctx.latency_ns)
+        return 0
+
+    @policy(section="tuner", maps=[shared])
+    def reader(ctx):
+        st = shared.lookup(0)
+        if st is None:
+            return 0
+        ctx.n_channels = min(st[0], 32)
+        return 0
+
+    rt = PolicyRuntime()
+    rt.load(writer.program)
+    rt.load(reader.program)
+    rt.invoke("profiler", make_ctx("profiler", latency_ns=5))
+    ctx = make_ctx("tuner")
+    rt.invoke("tuner", ctx)
+    assert ctx["n_channels"] == 5
+
+
+# ---------------------------------------------------------------------------
+# assembler
+# ---------------------------------------------------------------------------
+
+def test_asm_symbolic_ctx_fields():
+    prog = assemble("""
+        ldxdw  r2, [r1+msg_size]
+        stxdw  [r1+n_channels], r2
+        mov64  r0, 0
+        exit
+    """, section="tuner")
+    verify(prog)
+    from repro.core.vm import VM
+    ctx = make_ctx("tuner", msg_size=7)
+    VM(prog.insns, {}).run(ctx.buf)
+    assert ctx["n_channels"] == 7
+
+
+def test_asm_unknown_label_rejected():
+    with pytest.raises(AsmError, match="unknown label"):
+        assemble("ja nowhere\nexit", section="tuner")
+
+
+def test_asm_unknown_helper_rejected():
+    with pytest.raises(AsmError, match="unknown helper"):
+        assemble("call not_a_helper\nexit", section="tuner")
+
+
+def test_asm_signed_compare_roundtrip():
+    prog = assemble("""
+        mov64  r2, -5
+        jsgti  r2, -10, neg_path
+        mov64  r0, 1
+        exit
+    neg_path:
+        mov64  r0, 2
+        exit
+    """, section="tuner")
+    verify(prog)
+    from repro.core.vm import VM
+    assert VM(prog.insns, {}).run(make_ctx("tuner").buf) == 2

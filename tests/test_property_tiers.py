@@ -1,0 +1,133 @@
+"""Property tests: the three execution tiers agree on verified programs.
+
+Strategy: generate random *verifiable* straight-line programs over the
+tuner ctx (ALU soup + ctx loads + output stores + branches), verify them,
+then assert interpreter == host JIT on random ctx inputs.  The verifier
+itself is property-tested by construction: anything it accepts must run
+without a VM fault.
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import PolicyRuntime, VerifierError, make_ctx
+from repro.core.context import POLICY_CONTEXT
+from repro.core.isa import Insn
+from repro.core.program import Program
+from repro.core.verifier import verify
+from repro.core.vm import VM, VMError
+from repro.core.jit import compile_program
+
+IN_FIELDS = [f for f in POLICY_CONTEXT.fields.values() if not f.writable]
+OUT_FIELDS = [f for f in POLICY_CONTEXT.fields.values() if f.writable]
+
+# registers we use for scratch (avoid r0/r1/r10)
+REGS = [2, 3, 4, 5, 6, 7]
+
+_alu = st.sampled_from(["add64", "sub64", "mul64", "and64", "or64", "xor64",
+                        "rsh64", "lsh64"])
+_alui = st.sampled_from(["add64i", "sub64i", "mul64i", "and64i", "or64i",
+                         "xor64i", "mov64i"])
+
+
+@st.composite
+def straightline_program(draw):
+    insns = []
+    # initialize all scratch regs from ctx inputs or constants
+    for r in REGS:
+        if draw(st.booleans()):
+            f = draw(st.sampled_from(IN_FIELDS))
+            insns.append(Insn("ldxdw", dst=r, src=1, off=f.offset))
+        else:
+            insns.append(Insn("mov64i", dst=r, imm=draw(
+                st.integers(0, 2**31 - 1))))
+    n_ops = draw(st.integers(3, 25))
+    for _ in range(n_ops):
+        kind = draw(st.integers(0, 3))
+        if kind == 0:
+            op = draw(_alu)
+            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
+                              src=draw(st.sampled_from(REGS))))
+        elif kind == 1:
+            op = draw(_alui)
+            imm = draw(st.integers(0, 2**31 - 1))
+            if op in ("rsh64i", "lsh64i"):
+                imm %= 64
+            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)), imm=imm))
+        elif kind == 2:
+            f = draw(st.sampled_from(OUT_FIELDS))
+            insns.append(Insn("stxdw", dst=1, src=draw(st.sampled_from(REGS)),
+                              off=f.offset))
+        else:
+            # forward conditional jump over a small gap (filled with ALU)
+            op = draw(st.sampled_from(["jeqi", "jgti", "jlti", "jnei"]))
+            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
+                              imm=draw(st.integers(0, 1000)), off=1))
+            insns.append(Insn("mov64i", dst=draw(st.sampled_from(REGS)),
+                              imm=draw(st.integers(0, 1000))))
+    insns.append(Insn("mov64", dst=0, src=draw(st.sampled_from(REGS))))
+    insns.append(Insn("exit"))
+
+    # sprinkle longer forward jumps (nested/overlapping diamonds) —
+    # inserted back-to-front so earlier offsets stay valid; targets land
+    # on whatever instruction follows the gap, exercising state joins
+    n_jumps = draw(st.integers(0, 3))
+    for _ in range(n_jumps):
+        pos = draw(st.integers(0, max(len(insns) - 3, 0)))
+        max_off = len(insns) - pos - 2   # keep target before final exit
+        if max_off < 1:
+            continue
+        off = draw(st.integers(1, min(6, max_off)))
+        op = draw(st.sampled_from(["jeqi", "jgei", "jlei", "jset" + "i",
+                                   "ja"]))
+        if op == "ja":
+            insns.insert(pos, Insn("ja", off=off))
+        else:
+            insns.insert(pos, Insn(op, dst=draw(st.sampled_from(REGS)),
+                                   imm=draw(st.integers(0, 2**20)),
+                                   off=off))
+    return Program("prop", "tuner", insns)
+
+
+@st.composite
+def ctx_values(draw):
+    kwargs = {}
+    for f in IN_FIELDS:
+        kwargs[f.name] = draw(st.integers(0, 2**48))
+    return kwargs
+
+
+@settings(max_examples=200, deadline=None)
+@given(prog=straightline_program(), ctx_kwargs=ctx_values())
+def test_vm_jit_agree_on_verified_programs(prog, ctx_kwargs):
+    try:
+        verify(prog)
+    except VerifierError:
+        # e.g. mul overflow widening then used as shift amount — fine;
+        # property only concerns *accepted* programs
+        return
+    vm = VM(prog.insns, {})
+    fn = compile_program(prog, {})
+
+    c1 = make_ctx("tuner", **ctx_kwargs)
+    c2 = make_ctx("tuner", **ctx_kwargs)
+    r_vm = vm.run(c1.buf)
+    r_jit = fn(c2.buf)
+    assert r_vm == r_jit
+    assert c1.buf == c2.buf
+
+
+@settings(max_examples=200, deadline=None)
+@given(prog=straightline_program(), ctx_kwargs=ctx_values())
+def test_verified_programs_never_fault(prog, ctx_kwargs):
+    """Soundness witness: if the verifier accepts, the VM must not fault."""
+    try:
+        verify(prog)
+    except VerifierError:
+        return
+    vm = VM(prog.insns, {})
+    try:
+        vm.run(make_ctx("tuner", **ctx_kwargs).buf)
+    except VMError as e:  # pragma: no cover
+        raise AssertionError(
+            f"verifier accepted but VM faulted: {e}\n{prog.disasm()}")

@@ -1,0 +1,246 @@
+"""§5.2 safety suite: 7 safe policies accepted, 7 unsafe rejected — plus
+verifier unit tests for the abstract domain's edge cases.
+"""
+
+import pytest
+
+from repro.core import (PolicyRuntime, VerifierError, assemble, make_ctx,
+                        map_decl, verify)
+from repro.core.vm import VM, VMError
+from repro.policies import SAFE_POLICIES, UNSAFE_PROGRAMS
+from repro.policies.unsafe import null_deref
+
+
+# ---------------------------------------------------------------------------
+# The paper's 14-program suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol", SAFE_POLICIES, ids=lambda p: p.__name__)
+def test_safe_policies_accepted(pol):
+    verify(pol.program)  # must not raise
+
+
+@pytest.mark.parametrize("name", sorted(UNSAFE_PROGRAMS),
+                         ids=sorted(UNSAFE_PROGRAMS))
+def test_unsafe_programs_rejected(name):
+    prog, expect_fragment = UNSAFE_PROGRAMS[name]
+    with pytest.raises(VerifierError) as ei:
+        verify(prog)
+    assert expect_fragment in str(ei.value), (
+        f"{name}: wanted {expect_fragment!r} in {ei.value}")
+
+
+def test_rejection_message_is_actionable():
+    """The paper's exact comparison: the eBPF path reports the insn index
+    and the fix, instead of SIGSEGV."""
+    with pytest.raises(VerifierError) as ei:
+        verify(null_deref)
+    msg = str(ei.value)
+    assert "map_value_or_null" in msg
+    assert "must check != NULL before dereference" in msg
+    assert "at insn" in msg
+
+
+def test_native_equivalent_crashes_where_verifier_rejects():
+    """Run the unverified null_deref in the VM with an empty map: the VM
+    faults at runtime (the SIGSEGV analogue); the verifier caught it at
+    load time."""
+    rt = PolicyRuntime(use_interpreter=True)
+    m = rt.maps.create("latency_map", "hash", key_size=4, value_size=16,
+                       max_entries=256)
+    vm = VM(null_deref.insns, {"latency_map": m})
+    with pytest.raises(VMError, match="null|non-pointer"):
+        vm.run(make_ctx("tuner", comm_id=1).buf)
+
+
+def test_rejected_program_never_attaches():
+    rt = PolicyRuntime()
+    prog, _ = UNSAFE_PROGRAMS["null_deref"]
+    with pytest.raises(VerifierError):
+        rt.load(prog)
+    assert rt.attached("tuner") is None
+    assert rt.stats.rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# Abstract-domain unit tests
+# ---------------------------------------------------------------------------
+
+def _tuner(text, **kw):
+    return assemble(text, section="tuner", **kw)
+
+
+def test_null_check_enables_deref():
+    m = map_decl("m", kind="array", value_size=16)
+    prog = _tuner("""
+        mov64  r2, 0
+        stxw   [r10-8], r2
+        ldmap  r1, m
+        mov64  r2, r10
+        add64i r2, -8
+        call   map_lookup_elem
+        jeqi   r0, 0, out
+        ldxdw  r3, [r0+8]
+    out:
+        mov64  r0, 0
+        exit
+    """, maps=(m,))
+    verify(prog)
+
+
+def test_mapval_oob_rejected():
+    m = map_decl("m", kind="array", value_size=16)
+    prog = _tuner("""
+        mov64  r2, 0
+        stxw   [r10-8], r2
+        ldmap  r1, m
+        mov64  r2, r10
+        add64i r2, -8
+        call   map_lookup_elem
+        jeqi   r0, 0, out
+        ldxdw  r3, [r0+16]          ; one past the end
+    out:
+        mov64  r0, 0
+        exit
+    """, maps=(m,))
+    with pytest.raises(VerifierError, match="out-of-bounds map value"):
+        verify(prog)
+
+
+def test_uninitialized_stack_read_rejected():
+    prog = _tuner("""
+        ldxdw  r2, [r10-16]
+        mov64  r0, 0
+        exit
+    """)
+    with pytest.raises(VerifierError, match="uninitialized stack"):
+        verify(prog)
+
+
+def test_uninit_register_rejected():
+    prog = _tuner("""
+        mov64  r0, r7
+        exit
+    """)
+    with pytest.raises(VerifierError, match="uninitialized"):
+        verify(prog)
+
+
+def test_branch_refinement_allows_bounded_div():
+    # divisor proven nonzero on one branch
+    prog = _tuner("""
+        ldxdw  r2, [r1+n_ranks]
+        jeqi   r2, 0, out
+        ldxdw  r3, [r1+msg_size]
+        div64  r3, r2
+    out:
+        mov64  r0, 0
+        exit
+    """)
+    verify(prog)
+
+
+def test_interval_widening_on_join():
+    # two paths assign different constants; join must stay a scalar
+    prog = _tuner("""
+        ldxdw  r2, [r1+msg_size]
+        jgti   r2, 100, big
+        mov64  r3, 1
+        ja     merge
+    big:
+        mov64  r3, 2
+    merge:
+        stxdw  [r1+n_channels], r3
+        mov64  r0, 0
+        exit
+    """)
+    verify(prog)
+
+
+def test_ctx_write_after_join_of_ptr_and_scalar_rejected():
+    # r3 is a ctx ptr on one path and scalar on the other: unusable after join
+    prog = _tuner("""
+        ldxdw  r2, [r1+msg_size]
+        jgti   r2, 100, big
+        mov64  r3, r1
+        ja     merge
+    big:
+        mov64  r3, 0
+    merge:
+        ldxdw  r4, [r3+0]
+        mov64  r0, 0
+        exit
+    """)
+    with pytest.raises(VerifierError):
+        verify(prog)
+
+
+def test_helper_key_buffer_must_be_initialized():
+    m = map_decl("m", kind="array", value_size=8)
+    prog = _tuner("""
+        ldmap  r1, m
+        mov64  r2, r10
+        add64i r2, -8
+        call   map_lookup_elem      ; key bytes never written
+        mov64  r0, 0
+        exit
+    """, maps=(m,))
+    with pytest.raises(VerifierError, match="uninitialized"):
+        verify(prog)
+
+
+def test_exit_without_r0_rejected():
+    prog = _tuner("""
+        exit
+    """)
+    with pytest.raises(VerifierError, match="R0 is uninitialized"):
+        verify(prog)
+
+
+def test_fallthrough_off_end_rejected():
+    from repro.core import Insn
+    from repro.core.program import Program
+    prog = Program("fall", "tuner", [Insn("mov64i", dst=0, imm=0)])
+    with pytest.raises(VerifierError, match="fall through"):
+        verify(prog)
+
+
+def test_write_to_r10_rejected():
+    prog = _tuner("""
+        mov64  r10, 0
+        mov64  r0, 0
+        exit
+    """)
+    with pytest.raises(VerifierError, match="frame pointer"):
+        verify(prog)
+
+
+def test_variable_stack_offset_within_bounds_ok():
+    # offset bounded to [0,7] via and-mask, 8-byte aligned region still in frame
+    prog = _tuner("""
+        mov64  r2, 0
+        stxdw  [r10-8], r2
+        stxdw  [r10-16], r2
+        ldxdw  r3, [r1+msg_size]
+        and64i r3, 7
+        mov64  r4, r10
+        add64i r4, -16
+        add64  r4, r3
+        ldxdw  r5, [r4+0]
+    """ + """
+        mov64  r0, 0
+        exit
+    """)
+    verify(prog)
+
+
+def test_pointer_comparison_order_rejected():
+    prog = _tuner("""
+        mov64  r2, r1
+        jgt    r2, r1, out
+    out:
+        mov64  r0, 0
+        exit
+    """)
+    with pytest.raises(VerifierError, match="ordered comparison"):
+        verify(prog)
