@@ -1,0 +1,97 @@
+"""Quick perf smoke (seconds, not minutes) — CI guard for the fast path.
+
+Asserts the two ISSUE-1 performance invariants cheaply:
+
+* the specializing (v2) JIT tier is not slower than the interpreter tier
+  on any Table 1 policy, and
+* a warm decision-cache hit is not slower than an uncached dispatch.
+
+Prints a one-line JSON perf record (and reports rows when driven by
+``benchmarks.run``).  Run standalone:
+
+    PYTHONPATH=src python -m benchmarks.perf_smoke
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.table1_overhead import seed_maps
+from repro.collectives.dispatch import CollectiveDispatcher, DispatchConfig
+from repro.core import PolicyRuntime, make_ctx
+from repro.core.context import CollType
+from repro.policies import table1 as T
+
+MiB = 1 << 20
+N_CALLS = 4_000
+POLICIES = [T.noop, T.static_override, T.size_aware, T.slo_enforcer]
+
+
+def _bench(fn, buf, n=N_CALLS):
+    """Single mean over a short run — deliberately cruder than
+    table1_overhead.bench_fn (percentiles over 5k-call chunks), whose
+    chunking needs call counts this smoke test's time budget can't pay.
+    The asserted margins (JIT vs interpreter, cached vs uncached) are
+    orders of magnitude, so the cruder timer is safe."""
+    for _ in range(n // 10):
+        fn(buf)
+    t0 = time.perf_counter_ns()
+    for _ in range(n):
+        fn(buf)
+    return (time.perf_counter_ns() - t0) / n
+
+
+def smoke() -> dict:
+    ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
+                   max_channels=32)
+    rec = {"suite": "perf_smoke", "policies": {}, "ok": True}
+    for pol in POLICIES:
+        rt_jit = PolicyRuntime()
+        lp = rt_jit.load(pol.program)
+        seed_maps(rt_jit)
+        rt_vm = PolicyRuntime(use_interpreter=True)
+        lp_vm = rt_vm.load(pol.program)
+        seed_maps(rt_vm)
+        jit_ns = _bench(lp.fn, ctx.buf)
+        vm_ns = _bench(lp_vm.fn, ctx.buf, n=N_CALLS // 4)
+        ok = jit_ns <= vm_ns
+        rec["policies"][pol.program.name] = {
+            "jit_v2_ns": round(jit_ns, 1), "interp_ns": round(vm_ns, 1),
+            "speedup": round(vm_ns / jit_ns, 2), "ok": ok}
+        rec["ok"] = rec["ok"] and ok
+
+    rt = PolicyRuntime()
+    rt.load(T.static_override.program)
+
+    def _decide_ns(cached: bool) -> float:
+        disp = CollectiveDispatcher(
+            runtime=rt, config=DispatchConfig(enable_decision_cache=cached))
+        disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        t0 = time.perf_counter_ns()
+        for _ in range(N_CALLS):
+            disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        return (time.perf_counter_ns() - t0) / N_CALLS
+
+    uncached, cached = _decide_ns(False), _decide_ns(True)
+    rec["dispatch"] = {
+        "uncached_ns": round(uncached, 1), "cached_ns": round(cached, 1),
+        "cache_speedup": round(uncached / cached, 2),
+        "ok": cached <= uncached}
+    rec["ok"] = rec["ok"] and rec["dispatch"]["ok"]
+    return rec
+
+
+def run(report) -> None:
+    rec = smoke()
+    for name, row in rec["policies"].items():
+        report("perf_smoke", name, **row)
+    report("perf_smoke", "dispatch_cache", **rec["dispatch"])
+    print(json.dumps(rec, separators=(",", ":")))
+    assert rec["ok"], f"perf smoke regression: {rec}"
+
+
+if __name__ == "__main__":
+    rec = smoke()
+    print(json.dumps(rec, separators=(",", ":")))
+    raise SystemExit(0 if rec["ok"] else 1)

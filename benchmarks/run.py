@@ -18,6 +18,8 @@ import time
 import traceback
 
 SUITES = {
+    "perf_smoke": ("benchmarks.perf_smoke",
+                   "CI guard: JIT v2 >= interpreter, cache >= uncached"),
     "table1": ("benchmarks.table1_overhead", "Table 1: per-decision overhead"),
     "safety": ("benchmarks.safety_suite", "5.2: 7 safe / 7 unsafe"),
     "hot_reload": ("benchmarks.hot_reload", "5.2: atomic hot-reload"),

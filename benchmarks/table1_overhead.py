@@ -7,6 +7,10 @@ Our host tier JITs to Python closures (no LLVM on this container), so
 absolute numbers are µs-scale; we reproduce the *decomposition* and the
 tier comparison: native-python baseline vs interpreter vs host JIT vs the
 in-graph jaxc tier (whose marginal host cost is zero — it fuses into XLA).
+
+The ``table1_codegen`` section reports the legacy (v1 dispatcher-loop)
+and specializing (v2) generators side by side on every policy, plus the
+dispatch-layer decision cache (``table1_dispatch``).
 """
 
 from __future__ import annotations
@@ -15,8 +19,10 @@ import time
 
 import numpy as np
 
+from repro.collectives.dispatch import CollectiveDispatcher, DispatchConfig
 from repro.core import PolicyRuntime, make_ctx
-from repro.core.context import POLICY_CONTEXT
+from repro.core.context import CollType, POLICY_CONTEXT
+from repro.core.jit import compile_program
 from repro.policies import table1 as T
 
 N_CALLS = 200_000
@@ -62,6 +68,7 @@ def run(report):
             ("slo_enforcer", T.slo_enforcer, 2, 1)]
 
     jit_rows = []
+    codegen_speedups = []
     for name, pol, nl, nu in rows:
         rt = PolicyRuntime()
         lp = rt.load(pol.program)
@@ -72,12 +79,46 @@ def run(report):
                delta_p50_ns=p50 - p50n, lookups=nl, updates=nu,
                verify_ms=lp.verify_ms, jit_ms=lp.jit_ms)
 
+        # old (v1) vs new (v2) codegen, same resolved maps & map state
+        resolved = {d.name: rt.maps.get(d.name) for d in pol.program.maps}
+        fn_v1 = compile_program(pol.program, resolved, codegen="v1")
+        p50_v1, p99_v1 = bench_fn(fn_v1, ctx.buf, n=N_CALLS // 4)
+        codegen_speedups.append(p50_v1 / p50)
+        report("table1_codegen", name, p50_v1_ns=p50_v1, p50_v2_ns=p50,
+               speedup=p50_v1 / p50, mode=lp.fn.__bpf_mode__,
+               structured=lp.fn.__bpf_structured__)
+
         rt_vm = PolicyRuntime(use_interpreter=True)
         lp_vm = rt_vm.load(pol.program)
         seed_maps(rt_vm)
         p50v, p99v = bench_fn(lp_vm.fn, ctx.buf, n=N_CALLS // 10)
         report("table1_interp", name, p50_ns=p50v, p99_ns=p99v,
                jit_speedup=p50v / p50)
+
+    report("table1_codegen", "summary",
+           median_speedup=float(np.median(codegen_speedups)),
+           min_speedup=float(np.min(codegen_speedups)),
+           target=">=2x median (ISSUE 1)")
+
+    # dispatch layer: cold full path vs epoch-keyed decision-cache hits
+    rt = PolicyRuntime()
+    rt.load(T.static_override.program)
+    for cached in (False, True):
+        disp = CollectiveDispatcher(
+            runtime=rt,
+            config=DispatchConfig(enable_decision_cache=cached))
+        disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        n = 20_000
+        t0 = time.perf_counter_ns()
+        for _ in range(n):
+            disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        per_call = (time.perf_counter_ns() - t0) / n
+        if cached:
+            report("table1_dispatch", "decide_cached", p50_ns=per_call,
+                   cache_speedup=uncached_ns / per_call)
+        else:
+            uncached_ns = per_call
+            report("table1_dispatch", "decide_uncached", p50_ns=per_call)
 
     # decomposition fit: delta ~= base + a*lookups + b*updates
     A = np.array([[1, nl, nu] for (_, _, nl, nu) in rows], float)

@@ -109,6 +109,10 @@ def _interp_log2(table: Dict[int, float], size_bytes: float) -> float:
 class CostModel:
     def __init__(self, hw: HwProfile = TPU_V5E):
         self.hw = hw
+        # memoized (coll, size, n, channels) -> immutable cost table; the
+        # tuner-v5 translation in the dispatch layer reads these on every
+        # decision, and under jit tracing the same shapes recur constantly
+        self._table_cache: Dict[tuple, tuple] = {}
 
     def _proto_factors(self, protocol: int):
         hw = self.hw
@@ -176,14 +180,27 @@ class CostModel:
         return self._coll_bytes_factor(coll, n) * size_bytes / t
 
     # --- tuner-v5-style cost table ------------------------------------------
+    def cost_table_cached(self, coll: int, size_bytes: int, n: int,
+                          channels: int = 8) -> tuple:
+        """Immutable (n_algos, n_protos) cost rows, memoized per argument
+        tuple.  Callers that need to modify costs must copy (or use
+        :meth:`cost_table`)."""
+        key = (coll, size_bytes, n, channels)
+        t = self._table_cache.get(key)
+        if t is None:
+            if len(self._table_cache) >= 4096:
+                self._table_cache.clear()  # bound memory on size sweeps
+            t = tuple(
+                tuple(self.time_s(coll, a, p, channels, size_bytes, n)
+                      for p in range(Proto.COUNT))
+                for a in range(Algo.COUNT))
+            self._table_cache[key] = t
+        return t
+
     def cost_table(self, coll: int, size_bytes: int, n: int,
                    channels: int = 8):
         """(n_algos, n_protos) float costs — what the dispatch layer hands
         to NCCL-compatible policies that modify cost tables in place."""
-        out = []
-        for a in range(Algo.COUNT):
-            row = []
-            for p in range(Proto.COUNT):
-                row.append(self.time_s(coll, a, p, channels, size_bytes, n))
-            out.append(row)
-        return out
+        return [list(row)
+                for row in self.cost_table_cached(coll, size_bytes, n,
+                                                  channels)]

@@ -21,17 +21,51 @@ log; the policy *epoch* participates in the step-cache key so hot-reload
 retraces exactly once per swap (§T3: in-flight steps finish on the old
 policy).
 
+Two-layer fast path
+-------------------
+Together with the specializing JIT (``repro.core.jit`` codegen v2) this
+module implements the host-side decision fast path:
+
+1. **Codegen layer** — each ``decide()`` invokes a closure specialized on
+   the verified program (structured control flow, scalarized ctx, inline
+   map fast paths; see the jit module docstring).
+2. **Dispatch layer** — repeat decisions are memoized.  When the attached
+   tuner program is *pure* (calls no helpers: no map state, no clock, no
+   randomness — statically determined from its bytecode), the decision is
+   a function of the ctx inputs only, so it is cached keyed on
+   ``(epoch, coll, size, n_ranks, axis_kind, dtype_bytes, comm_id)`` plus
+   the config knobs.  The **epoch** in the key is what preserves the
+   paper's T3 hot-reload semantics: every load/reload/detach bumps the
+   runtime epoch, so the very next ``decide()`` after a swap *completes*
+   misses the cache and re-runs the new policy.  The guarantee is exactly
+   the paper's: a ``decide()`` racing the swap itself may still observe
+   the old policy (T3's in-flight allowance — the same holds for a call
+   that read the old function pointer just before the CAS); once the
+   swap's epoch bump is visible, no cached fast path can serve a stale
+   policy's decision.  Stateful policies (any helper call) bypass
+   the cache entirely and run on every dispatch, as before.  Cost-model
+   rows are memoized independently in :class:`CostModel`, and the
+   communicator hash is ``lru_cache``'d.
+
+The decision log is a bounded ring buffer
+(``DispatchConfig.decision_log_max``, default 4096) so long-running
+serving/training jobs don't leak memory through an ever-growing list.
+
 The net-plugin hook (§5.3) interposes here too: when a net program is
 attached, each dispatch invokes it with (op, bytes, peer) — the data-plane
-accounting path.
+accounting path.  Net/profiler hooks and the decision log run on cache
+hits as well: memoization elides the policy invocation and cost-table
+translation, never the observable side channels.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import hashlib
 import threading
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 from jax import lax
@@ -69,11 +103,17 @@ class DispatchConfig:
     default_channels: int = 8
     max_channels: int = MAX_CHANNELS
     enable_net_hook: bool = True
+    # ring-buffer capacity of the decision log (0 disables logging)
+    decision_log_max: int = 4096
+    # memoize decisions of pure (helper-free) tuner policies
+    enable_decision_cache: bool = True
 
 
+@functools.lru_cache(maxsize=4096)
 def _comm_id(axis_name: str, n: int) -> int:
     """Stable communicator hash (the paper derives one from the context
-    pointer; we derive one from the axis identity)."""
+    pointer; we derive one from the axis identity).  Cached — axes recur
+    on every dispatch and SHA1 is by far the most expensive part."""
     h = hashlib.sha1(f"{axis_name}:{n}".encode()).digest()
     return int.from_bytes(h[:4], "little") & 0x7FFFFFFF
 
@@ -113,10 +153,23 @@ class CollectiveDispatcher:
         self.runtime = runtime or global_runtime()
         self.config = config or DispatchConfig()
         self.cost_model = CostModel(self.config.hw)
-        self.decisions: List[Decision] = []
-        self._lock = threading.Lock()
+        # bounded ring buffer; append/clear/indexing are GIL-atomic, so
+        # no lock is needed around the log.  maxlen=0 discards
+        # everything, None keeps an unbounded log
+        log_max = self.config.decision_log_max
+        self.decisions: Deque[Decision] = collections.deque(
+            maxlen=None if log_max is None else max(log_max, 0))
         self.net_calls = 0
         self.net_bytes = 0
+        # epoch-keyed decision memo (see module docstring); stale-epoch
+        # entries are harmless because the epoch is part of the key; the
+        # dict is flushed on every epoch change and capped within an
+        # epoch (4096 entries) to bound memory
+        self._decision_cache: Dict[Tuple, Decision] = {}
+        self._cache_epoch = -1
+        self._cacheable = False
+        self.cache_hits = 0
+        self.cache_misses = 0
         self._apply_env_plugin()
 
     def _apply_env_plugin(self, *, n_devices: int = 0, tp: int = 0,
@@ -140,11 +193,43 @@ class CollectiveDispatcher:
             cfg.max_channels = min(int(ctx["max_channels"]), MAX_CHANNELS)
 
     # ------------------------------------------------------------------
+    def _policy_cacheable(self) -> bool:
+        """A tuner decision can be memoized iff it is a pure function of
+        the ctx inputs: no policy attached (framework default), or an
+        attached program that calls no helpers (no map reads/writes, no
+        clock, no randomness) — statically decidable from the bytecode."""
+        lp = self.runtime.attached("tuner")
+        if lp is None:
+            return True
+        return not any(i.op == "call" for i in lp.program.insns)
+
     def decide(self, coll: int, size_bytes: int, n: int, *,
                axis_kind: int = AxisKind.DATA, dtype_bytes: int = 4,
                axis_name: str = "?") -> Decision:
         cfg = self.config
+        ep = self.runtime.epoch
+        if ep != self._cache_epoch:
+            # hot-reload/attach/detach happened: flush and re-probe purity
+            self._decision_cache.clear()
+            self._cacheable = cfg.enable_decision_cache \
+                and self._policy_cacheable()
+            self._cache_epoch = ep
         cid = _comm_id(axis_name, n)
+        key = None
+        if self._cacheable:
+            key = (ep, coll, size_bytes, n, axis_kind, dtype_bytes, cid,
+                   cfg.default_algo, cfg.default_proto,
+                   cfg.default_channels, cfg.max_channels,
+                   cfg.hw.n_links)  # topo_links is a policy ctx input
+            d = self._decision_cache.get(key)
+            if d is not None:
+                # memoization elides policy + cost-table work only; the
+                # log and data-plane hooks still observe every dispatch
+                self.cache_hits += 1
+                self.decisions.append(d)
+                self._net_hook(d)
+                return d
+            self.cache_misses += 1
         ctx = make_ctx(
             "tuner",
             coll_type=coll, msg_size=size_bytes, n_ranks=n, comm_id=cid,
@@ -165,18 +250,24 @@ class CollectiveDispatcher:
             from_policy = False
 
         # --- tuner-v5 cost-table translation + graceful fallback ----------
-        table = self.cost_model.cost_table(coll, size_bytes, n,
-                                           channels=max(channels, 1))
+        table = self.cost_model.cost_table_cached(coll, size_bytes, n,
+                                                  channels=max(channels, 1))
         if algo >= Algo.COUNT or proto >= Proto.COUNT:
             # unavailable combination: sentinel cost -> framework default
             algo, proto = cfg.default_algo, cfg.default_proto
             channels = cfg.default_channels
-        table[algo][proto] = 0.0
-        best = min(
-            ((a, p) for a in range(Algo.COUNT) for p in range(Proto.COUNT)),
-            key=lambda ap: table[ap[0]][ap[1]],
-        )
-        algo, proto = best
+        # argmin with the policy's (algo, proto) cost zeroed — equivalent
+        # to mutating a fresh table, but against the memoized rows; strict
+        # `<` preserves the original first-minimum tie-break order
+        best_a = best_p = 0
+        best_c = float("inf")
+        for a in range(Algo.COUNT):
+            row = table[a]
+            for p in range(Proto.COUNT):
+                c = 0.0 if (a == algo and p == proto) else row[p]
+                if c < best_c:
+                    best_a, best_p, best_c = a, p, c
+        algo, proto = best_a, best_p
 
         # --- clamp channels (NCCL maxChannels contract) --------------------
         channels = max(1, min(int(channels) or cfg.default_channels,
@@ -185,8 +276,11 @@ class CollectiveDispatcher:
         d = Decision(coll=coll, algo=algo, proto=proto, channels=channels,
                      size_bytes=size_bytes, n_ranks=n, axis_kind=axis_kind,
                      comm_id=cid, from_policy=from_policy)
-        with self._lock:
-            self.decisions.append(d)
+        if key is not None:
+            if len(self._decision_cache) >= 4096:
+                self._decision_cache.clear()  # bound within-epoch growth
+            self._decision_cache[key] = d
+        self.decisions.append(d)
         self._net_hook(d)
         return d
 
@@ -257,8 +351,13 @@ class CollectiveDispatcher:
         return self.runtime.epoch
 
     def clear_log(self) -> None:
-        with self._lock:
-            self.decisions.clear()
+        self.decisions.clear()
+
+    def clear_decision_cache(self) -> None:
+        """Manual invalidation hook (e.g. after mutating ``config``
+        mid-run outside the epoch mechanism)."""
+        self._decision_cache.clear()
+        self._cache_epoch = -1
 
 
 _DISPATCHER: Optional[CollectiveDispatcher] = None

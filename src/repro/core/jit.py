@@ -5,28 +5,65 @@ program is *verified*, the generated code contains **no runtime safety
 checks** — this is the paper's T1 tension resolved the same way: all cost is
 paid at load time.
 
-Code generation model
----------------------
+Two code generators live here:
+
+* **v2 (default)** — the fast path.  It consumes the verifier's per-insn
+  region analysis (:func:`repro.core.verifier.verify_with_info`) and
+  exploits every load-time guarantee the paper's design pays for:
+
+  - *Structured control flow.*  The CFG is forward-only (verified), so
+    basic blocks are reconstructed into nested ``if``/``else`` regions via
+    the post-dominator tree — no dispatcher loop, no per-jump block-id
+    scan.  CFGs whose forward jumps cross (rare; random fuzz programs)
+    fall back to a single-pass guard chain, still loop-free.
+  - *Ctx scalarization.*  The verifier proves every ctx access hits a
+    fixed field offset, so input fields are read via pre-compiled
+    :class:`struct.Struct` accessors (or one bulk unpack when many fields
+    are touched), output fields live in locals, and modified fields are
+    written back once per exit with a ``pack_into`` per contiguous run.
+  - *Stack promotion.*  When no stack pointer escapes to a helper and all
+    stack slots are constant-offset and non-overlapping, the 512-byte
+    frame is never allocated: each slot becomes a scalar local.
+  - *Allocation hoisting.*  When a real stack/region table is needed
+    (programs that call map helpers), the buffers come from a per-closure
+    free-list instead of being allocated per call (thread-safe: entries
+    are popped for exclusive use and returned at exit; verified programs
+    never read bytes they did not write this invocation, so buffers need
+    no zeroing).
+  - *Inline map fast paths.*  ``map_lookup_elem`` and ``ema_update``
+    against plain array maps compile to direct slot indexing — no handle
+    dict, no method dispatch, no key-bytes copy.  Every other map helper
+    call site is bound to a closure specialized on its (statically known)
+    map, so the handle-indirection dict disappears entirely.
+  - *Dead-register elimination.*  Registers the specialized code never
+    reads (ctx/frame pointer copies, map handles made redundant by call
+    specialization) have their pure assignments deleted.
+
+* **v1** — the original ``while True`` + linear ``if bb == N`` dispatcher
+  over a ``mems`` region table.  Kept verbatim as the baseline for the
+  old-vs-new comparison in ``benchmarks/table1_overhead.py`` and as the
+  fallback when no verifier analysis is available.
+
+Code generation model (shared)
+------------------------------
 Values are plain u64 ints.  Pointers are encoded ints: ``region_id << 32 |
 offset`` where ``region_id`` indexes a per-invocation region table
 ``mems`` (region 1 = stack, region 2 = ctx, 3+ = map values returned by
 lookups).  NULL is 0.  The verifier guarantees pointers are only
-dereferenced in-bounds, so loads/stores index ``mems`` directly.
-
-The CFG is forward-only (verified), so we emit basic blocks into a
-``while True`` dispatcher on a block-index local — the closest Python gets
-to a jump table.  Straight-line policies (the common case) compile to a
-single block with zero dispatch overhead beyond one loop entry.
+dereferenced in-bounds, so loads/stores index ``mems`` directly; in v2,
+ctx/stack accesses bypass ``mems`` entirely via the static region info.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+import re
+import struct
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from . import helpers as H
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   is_imm_form, is_jump_cond, is_load, is_store, jump_base,
-                  mem_size)
+                  mem_size, s64)
 from .maps import BpfMap
 from .program import Program
 
@@ -36,6 +73,15 @@ M32 = 0xFFFFFFFF
 _UNSIGNED_CMP = {"jeq": "==", "jne": "!=", "jgt": ">", "jge": ">=",
                  "jlt": "<", "jle": "<="}
 _SIGNED_CMP = {"jsgt": ">", "jsge": ">=", "jslt": "<", "jsle": "<="}
+_NEG = {"==": "!=", "!=": "==", ">": "<=", ">=": "<", "<": ">=", "<=": ">"}
+
+_STRUCT_FMT = {1: "<B", 2: "<H", 4: "<I", 8: "<Q"}
+
+# helper ids whose arguments are stack buffers — calling one makes the
+# stack observable outside the generated code (disables stack promotion)
+_STACK_ESCAPE_HIDS = frozenset(
+    hid for hid, h in H.HELPERS.items()
+    if any(a in (H.ARG_STACK_KEY, H.ARG_STACK_VALUE) for a in h.args))
 
 
 def _leaders(insns: List[Insn]) -> List[int]:
@@ -156,50 +202,600 @@ class _Gen:
             raise AssertionError(base)
 
 
-def compile_program(prog: Program, resolved_maps: Dict[str, BpfMap],
-                    *, printk: Callable[[int], None] = lambda v: None
-                    ) -> Callable[[bytearray], int]:
-    """Compile verified bytecode to a Python closure ``fn(ctx_buf) -> int``."""
-    insns = prog.insns
-    leaders = _leaders(insns)
-    block_of: Dict[int, int] = {pc: i for i, pc in enumerate(leaders)}
+# ---------------------------------------------------------------------------
+# v2 code generator
+# ---------------------------------------------------------------------------
 
-    g = _Gen(prog)
-    g.indent = 0
-    g.w("def _run(ctx):")
-    g.indent = 1
-    g.w("r0 = r2 = r3 = r4 = r5 = r6 = r7 = r8 = r9 = 0")
-    g.w(f"stack = bytearray({STACK_SIZE})")
-    g.w("mems = [None, stack, ctx]")
-    g.w(f"r1 = {2 << 32}")                      # ctx pointer: region 2
-    g.w(f"r10 = {(1 << 32) | STACK_SIZE}")      # fp: region 1, offset 512
+class _StructAbort(Exception):
+    """Structured reconstruction exceeded its duplication/nesting budget."""
 
-    single_block = len(leaders) == 1
-    if not single_block:
-        g.w("bb = 0")
-        g.w("while True:")
-        g.indent = 2
 
-    for bi, start in enumerate(leaders):
-        end = leaders[bi + 1] if bi + 1 < len(leaders) else len(insns)
-        if not single_block:
-            g.w(f"if bb == {bi}:")
-            g.indent += 1
-        ended = False
-        for pc in range(start, end):
-            ended = g.emit_insn(pc, insns[pc], block_of)
-        if not ended:
-            # fallthrough into next block
-            g.w(f"bb = {bi + 1}")
-            g.w("continue")
-        if not single_block:
-            g.indent -= 1
+class _Blocks:
+    """Basic blocks of a forward-only CFG plus its post-dominator tree."""
 
-    src = "\n".join(g.lines)
+    EXIT = -1  # virtual exit node
 
-    # ---- helper closures over resolved maps --------------------------------
+    def __init__(self, insns: List[Insn]):
+        self.insns = insns
+        self.leaders = _leaders(insns)
+        self.block_of = {pc: i for i, pc in enumerate(self.leaders)}
+        self.n = len(self.leaders)
+        self.ranges: List[Tuple[int, int]] = []
+        self.succs: List[List[int]] = []
+        for bi, start in enumerate(self.leaders):
+            end = self.leaders[bi + 1] if bi + 1 < self.n else len(insns)
+            self.ranges.append((start, end))
+            last = insns[end - 1]
+            if last.op == "exit":
+                self.succs.append([self.EXIT])
+            elif last.op == "ja":
+                self.succs.append([self._tgt(end - 1, last)])
+            elif is_jump_cond(last.op):
+                self.succs.append([self._tgt(end - 1, last), bi + 1])
+            else:
+                self.succs.append([bi + 1])
+        self._build_pdom()
+
+    def _tgt(self, pc: int, insn: Insn) -> int:
+        t = pc + 1 + insn.off
+        # a (necessarily unreachable) jump may target one-past-the-end;
+        # route it to the virtual exit so the pdom tree stays well formed
+        return self.block_of.get(t, self.EXIT)
+
+    def _build_pdom(self) -> None:
+        self.ipdom: Dict[int, int] = {self.EXIT: self.EXIT}
+        self.depth: Dict[int, int] = {self.EXIT: 0}
+        for b in range(self.n - 1, -1, -1):
+            ss = [s if s == self.EXIT or s < self.n else self.EXIT
+                  for s in self.succs[b]]
+            d = ss[0]
+            for s in ss[1:]:
+                d = self.ncpd(d, s)
+            self.ipdom[b] = d
+            self.depth[b] = self.depth[d] + 1
+
+    def ncpd(self, a: int, b: int) -> int:
+        """Nearest common post-dominator of two nodes."""
+        while a != b:
+            if self.depth[a] < self.depth[b]:
+                b = self.ipdom[b]
+            else:
+                a = self.ipdom[a]
+        return a
+
+
+# ---- call-site specialized helper closures --------------------------------
+# The verifier records which map each helper call uses (call_map), so every
+# call site binds a closure over the concrete map object: no handle decode,
+# no registry dict, no per-call method lookup.
+
+def _mk_lookup(m: BpfMap):
+    ks = m.key_size
+    if m.kind == "hash":
+        get = m._table.get  # dict identity is stable for a map's lifetime
+
+        def f(mems, kp):
+            o = kp & M32
+            v = get(bytes(mems[kp >> 32][o:o + ks]))
+            if v is None:
+                return 0
+            mems.append(v)
+            return (len(mems) - 1) << 32
+        return f
+    lookup = m.lookup
+
+    def f(mems, kp):
+        o = kp & M32
+        v = lookup(bytes(mems[kp >> 32][o:o + ks]))
+        if v is None:
+            return 0
+        mems.append(v)
+        return (len(mems) - 1) << 32
+    return f
+
+
+def _mk_update(m: BpfMap):
+    ks, vs = m.key_size, m.value_size
+    update = m.update
+
+    def f(mems, kp, vp):
+        ko = kp & M32
+        vo = vp & M32
+        return update(bytes(mems[kp >> 32][ko:ko + ks]),
+                      bytes(mems[vp >> 32][vo:vo + vs])) & M64
+    return f
+
+
+def _mk_delete(m: BpfMap):
+    ks = m.key_size
+    delete = m.delete
+
+    def f(mems, kp):
+        o = kp & M32
+        return delete(bytes(mems[kp >> 32][o:o + ks])) & M64
+    return f
+
+
+def _mk_ema(m: BpfMap):
+    ks, vs = m.key_size, m.value_size
+    lookup = m.lookup
+    update = m.update
+
+    def f(mems, kp, sample, weight):
+        w = weight if weight > 1 else 1
+        o = kp & M32
+        key = bytes(mems[kp >> 32][o:o + ks])
+        v = lookup(key)
+        old = 0 if v is None else int.from_bytes(v[0:8], "little")
+        new = ((old * (w - 1) + sample) // w) & M64
+        if v is None:
+            buf = bytearray(vs)
+            buf[0:8] = new.to_bytes(8, "little")
+            update(key, bytes(buf))
+        else:
+            v[0:8] = new.to_bytes(8, "little")
+        return new
+    return f
+
+
+_SPECIALIZERS = {
+    "map_lookup_elem": (_mk_lookup, "(mems, r2)"),
+    "map_update_elem": (_mk_update, "(mems, r2, r3)"),
+    "map_delete_elem": (_mk_delete, "(mems, r2)"),
+    "ema_update": (_mk_ema, "(mems, r2, r3, r4)"),
+}
+
+
+class _GenV2(_Gen):
+    """Specializing generator driven by the verifier's region analysis."""
+
+    def __init__(self, prog: Program, vinfo, resolved_maps: Dict[str, BpfMap]):
+        super().__init__(prog)
+        self.vinfo = vinfo
+        self.resolved = resolved_maps
+        self.blocks = _Blocks(prog.insns)
+        self.env_extra: Dict[str, object] = {}
+        self.ctx_writes: Set[int] = set()
+        self.ctx_reads: Set[int] = set()
+        self.inline_maps: Dict[str, int] = {}  # map name -> env slot index
+        self._analyze()
+
+    # ---- analysis --------------------------------------------------------
+    def _access_off(self, pc: int, insn: Insn) -> Optional[int]:
+        info = self.vinfo.mem_info.get(pc)
+        if info is None or info[2] is None:
+            return None
+        return info[2] + insn.off
+
+    def _analyze(self) -> None:
+        insns = self.prog.insns
+        self.stack_escape = False
+        has_stack_access = False
+        stack_ranges: Set[Tuple[int, int]] = set()
+        stack_promotable = True
+        for pc, insn in enumerate(insns):
+            if insn.op == "call":
+                if insn.imm in _STACK_ESCAPE_HIDS \
+                        and pc in self.vinfo.call_map:
+                    self.stack_escape = True
+                continue
+            if not (is_load(insn.op) or is_store(insn.op)):
+                continue
+            info = self.vinfo.mem_info.get(pc)
+            if info is None:
+                continue  # verifier-proven unreachable
+            kind = info[0]
+            size = mem_size(insn.op)
+            if kind == "ctx":
+                k = self._access_off(pc, insn) // 8
+                if is_store(insn.op):
+                    self.ctx_writes.add(k)
+                else:
+                    self.ctx_reads.add(k)
+            elif kind == "stack":
+                has_stack_access = True
+                off = self._access_off(pc, insn)
+                if off is None:
+                    # variable-offset slot (verifier-bounded): unpromotable
+                    stack_promotable = False
+                else:
+                    stack_ranges.add((off, size))
+        # disjoint-or-equal slot ranges are a precondition for promotion
+        if stack_promotable:
+            spans = sorted(stack_ranges)
+            for (o1, s1), (o2, s2) in zip(spans, spans[1:]):
+                if o2 < o1 + s1:
+                    stack_promotable = False
+                    break
+        self.promote_stack = stack_promotable and not self.stack_escape
+        self.needs_stack = (has_stack_access and not self.promote_stack) \
+            or self.stack_escape
+        # mems holds map-value regions appended by lookup helpers; only
+        # stack-escaping (map) helpers can create them, and those also
+        # force needs_stack, so needs_mems implies needs_stack
+        self.needs_mems = self.stack_escape
+        # fields kept in locals: every written field (written back at exit)
+        self.ctx_locals = set(self.ctx_writes)
+        # with few touched fields, per-field unpack_from beats a bulk unpack
+        self.ctx_few = len(self.ctx_reads | self.ctx_writes) <= 2
+        # contiguous runs of written fields -> one pack_into each
+        self.wb_runs: List[List[int]] = []
+        for k in sorted(self.ctx_writes):
+            if self.wb_runs and self.wb_runs[-1][-1] == k - 1:
+                self.wb_runs[-1].append(k)
+            else:
+                self.wb_runs.append([k])
+        for i, run in enumerate(self.wb_runs):
+            self.env_extra[f"_wb{i}"] = \
+                struct.Struct(f"<{len(run)}Q").pack_into
+
+    # ---- struct accessor bindings ---------------------------------------
+    def _use_u(self, n: int) -> str:
+        name = f"_u{n}"
+        if name not in self.env_extra:
+            self.env_extra[name] = struct.Struct(_STRUCT_FMT[n]).unpack_from
+        return name
+
+    def _use_p(self, n: int) -> str:
+        name = f"_p{n}"
+        if name not in self.env_extra:
+            self.env_extra[name] = struct.Struct(_STRUCT_FMT[n]).pack_into
+        return name
+
+    # ---- expression helpers ---------------------------------------------
+    def _cond(self, insn: Insn) -> Tuple[str, str]:
+        """Render (condition, negated condition) for a conditional jump."""
+        base = jump_base(insn.op)
+        a = f"r{insn.dst}"
+        if base in _SIGNED_CMP:
+            if is_imm_form(insn.op):
+                b = str(s64(insn.imm & M64))
+            else:
+                b = _sval(f"r{insn.src}")
+            a = _sval(a)
+            op = _SIGNED_CMP[base]
+            return f"{a} {op} {b}", f"{a} {_NEG[op]} {b}"
+        if base in _UNSIGNED_CMP:
+            b = str(insn.imm & M64) if is_imm_form(insn.op) else f"r{insn.src}"
+            op = _UNSIGNED_CMP[base]
+            return f"{a} {op} {b}", f"{a} {_NEG[op]} {b}"
+        b = str(insn.imm & M64) if is_imm_form(insn.op) else f"r{insn.src}"
+        return f"({a} & {b}) != 0", f"({a} & {b}) == 0"
+
+    # ---- per-insn emission ----------------------------------------------
+    def emit_body_insn(self, pc: int, insn: Insn) -> None:
+        op = insn.op
+        w = self.w
+        if op == "lddw":
+            w(f"r{insn.dst} = {insn.imm & M64}")
+            return
+        if op == "ldmap":
+            w(f"r{insn.dst} = {self._map_token(insn.map_name)}")
+            return
+        if op == "call":
+            self._emit_call(pc, insn)
+            return
+        if is_alu(op):
+            self._emit_alu(insn)
+            return
+        if is_load(op):
+            self._emit_load(pc, insn)
+            return
+        if is_store(op):
+            self._emit_store(pc, insn)
+            return
+        raise AssertionError(f"unhandled body op {op}")
+
+    def _emit_load(self, pc: int, insn: Insn) -> None:
+        info = self.vinfo.mem_info.get(pc)
+        n = mem_size(insn.op)
+        w = self.w
+        if info is None:
+            w(f"r{insn.dst} = _dead()")
+            return
+        kind = info[0]
+        if kind == "ctx":
+            off = self._access_off(pc, insn)
+            k = off // 8
+            if k in self.ctx_locals:
+                expr = f"c{k}" if n == 8 else f"c{k} & {(1 << (8 * n)) - 1}"
+            elif self.ctx_few:
+                # reading n bytes at the field offset == masking, for free
+                expr = f"{self._use_u(n)}(ctx, {off})[0]"
+            else:
+                expr = f"_c[{k}]" if n == 8 \
+                    else f"_c[{k}] & {(1 << (8 * n)) - 1}"
+            w(f"r{insn.dst} = {expr}")
+            return
+        if kind == "stack":
+            off = self._access_off(pc, insn)
+            if self.promote_stack:
+                w(f"r{insn.dst} = s{off}_{n}")
+                return
+            u = self._use_u(n)
+            if off is not None:
+                w(f"r{insn.dst} = {u}(stack, {off})[0]")
+            else:
+                w(f"_o = (r{insn.src} + {insn.off}) & {M32}")
+                w(f"r{insn.dst} = {u}(stack, _o)[0]")
+            return
+        # map value region: dynamic base, keep the encoded-pointer path
+        u = self._use_u(n)
+        if insn.off == 0:
+            w(f"r{insn.dst} = {u}(mems[r{insn.src} >> 32], "
+              f"r{insn.src} & {M32})[0]")
+        else:
+            w(f"_p = r{insn.src} + {insn.off}")
+            w(f"r{insn.dst} = {u}(mems[_p >> 32], _p & {M32})[0]")
+
+    def _emit_store(self, pc: int, insn: Insn) -> None:
+        info = self.vinfo.mem_info.get(pc)
+        n = mem_size(insn.op)
+        mask = (1 << (8 * n)) - 1
+        is_reg = insn.op.startswith("stx")
+        val = f"r{insn.src}" if is_reg else str(insn.imm & mask)
+        # registers hold u64 invariants, so 8-byte stores need no masking
+        vmask = val if (n == 8 or not is_reg) else f"{val} & {mask}"
+        w = self.w
+        if info is None:
+            w("_dead()")
+            return
+        kind = info[0]
+        if kind == "ctx":
+            k = self._access_off(pc, insn) // 8
+            if n == 8:
+                w(f"c{k} = {val}")
+            else:
+                w(f"c{k} = (c{k} & {~mask & M64}) | ({val} & {mask})")
+            return
+        if kind == "stack":
+            off = self._access_off(pc, insn)
+            if self.promote_stack:
+                w(f"s{off}_{n} = {vmask}")
+                return
+            p = self._use_p(n)
+            if off is not None:
+                w(f"{p}(stack, {off}, {vmask})")
+            else:
+                w(f"_o = (r{insn.dst} + {insn.off}) & {M32}")
+                w(f"{p}(stack, _o, {vmask})")
+            return
+        p = self._use_p(n)
+        if insn.off == 0:
+            w(f"{p}(mems[r{insn.dst} >> 32], r{insn.dst} & {M32}, {vmask})")
+        else:
+            w(f"_p = r{insn.dst} + {insn.off}")
+            w(f"{p}(mems[_p >> 32], _p & {M32}, {vmask})")
+
+    def _inline_slot(self, map_name: str) -> str:
+        idx = self.inline_maps.setdefault(map_name, len(self.inline_maps))
+        self.env_extra[f"_slots{idx}"] = self.resolved[map_name]._slots
+        return f"_slots{idx}"
+
+    def _emit_call(self, pc: int, insn: Insn) -> None:
+        h = H.HELPERS[insn.imm]
+        w = self.w
+        if pc not in self.vinfo.call_map:
+            w("r0 = _dead()")
+            return
+        if h.name == "ktime_get_ns":
+            w(f"r0 = _ktime() & {M64}")
+            return
+        if h.name == "get_prandom_u32":
+            w("r0 = _prandom()")
+            return
+        if h.name == "trace_printk":
+            w("_printk(r1)")
+            w("r0 = 0")
+            return
+        mname = self.vinfo.call_map[pc]
+        m = self.resolved.get(mname) if mname else None
+        if m is None:  # pragma: no cover — runtime always resolves maps
+            w(f"r0 = _h_{h.name}(mems, r1, r2, r3, r4, r5)")
+            return
+        if m.kind == "array":
+            u4 = self._use_u(4)
+            if h.name == "map_lookup_elem":
+                slots = self._inline_slot(mname)
+                w(f"_k = {u4}(stack, r2 & {M32})[0]")
+                w(f"if _k < {m.max_entries}:")
+                w(f"    mems.append({slots}[_k])")
+                w("    r0 = (len(mems) - 1) << 32")
+                w("else:")
+                w("    r0 = 0")
+                return
+            # the inline ema reads/writes a full 8-byte slot in place;
+            # undersized values take the closure path, which mirrors the
+            # VM's slice-assign (slot-growing) semantics exactly
+            if h.name == "ema_update" and m.value_size >= 8:
+                slots = self._inline_slot(mname)
+                u8, p8 = self._use_u(8), self._use_p(8)
+                w(f"_k = {u4}(stack, r2 & {M32})[0]")
+                w("_w = r4 if r4 > 1 else 1")
+                w(f"if _k < {m.max_entries}:")
+                w(f"    _v = {slots}[_k]")
+                w(f"    _old = {u8}(_v, 0)[0]")
+                w(f"    r0 = ((_old * (_w - 1) + r3) // _w) & {M64}")
+                w(f"    {p8}(_v, 0, r0)")
+                w("else:")
+                w(f"    r0 = (r3 // _w) & {M64}")
+                return
+        maker, argtuple = _SPECIALIZERS[h.name]
+        name = f"_hc{pc}"
+        self.env_extra[name] = maker(m)
+        w(f"r0 = {name}{argtuple}")
+
+    # ---- epilogue ---------------------------------------------------------
+    def emit_epilogue_return(self) -> None:
+        w = self.w
+        if self.needs_mems:  # implies needs_stack (see _analyze)
+            w("_pool.append((stack, mems))")
+        elif self.needs_stack:
+            w("_pool.append(stack)")
+        for i, run in enumerate(self.wb_runs):
+            args = ", ".join(f"c{k}" for k in run)
+            w(f"_wb{i}(ctx, {run[0] * 8}, {args})")
+        w("return r0")
+
+    # ---- block/terminator emission --------------------------------------
+    def _block_term(self, bi: int):
+        """Emit a block's body; return its terminator descriptor."""
+        start, end = self.blocks.ranges[bi]
+        insns = self.prog.insns
+        last = insns[end - 1]
+        body_end = end - 1 if (last.op in ("exit", "ja")
+                               or is_jump_cond(last.op)) else end
+        for pc in range(start, body_end):
+            self.emit_body_insn(pc, insns[pc])
+        if last.op == "exit":
+            return ("exit",)
+        if last.op == "ja":
+            return ("ja", self.blocks.succs[bi][0])
+        if is_jump_cond(last.op):
+            cond, ncond = self._cond(last)
+            t, f = self.blocks.succs[bi]
+            return ("cond", cond, ncond, t, f)
+        return ("fall", bi + 1)
+
+    # structured emission --------------------------------------------------
+    def emit_structured(self) -> None:
+        self._budget = max(4 * self.blocks.n, 64)
+        self._chain(0, _Blocks.EXIT, 0)
+
+    def _chain(self, b: int, end: int, depth: int) -> None:
+        bl = self.blocks
+        while b != end:
+            if b == _Blocks.EXIT or depth > 40 or self.indent > 50:
+                raise _StructAbort
+            self._budget -= 1
+            if self._budget < 0:
+                raise _StructAbort
+            term = self._block_term(b)
+            kind = term[0]
+            if kind == "exit":
+                self.emit_epilogue_return()
+                return
+            if kind in ("ja", "fall"):
+                b = term[1]
+                continue
+            _, cond, ncond, t, f = term
+            m = bl.ncpd(t, f)
+            if t == m and f == m:
+                b = m  # conditions are side-effect free: branch is a no-op
+                continue
+            if t == m:
+                self.w(f"if {ncond}:")
+                self._arm(f, m, depth + 1)
+            elif f == m:
+                self.w(f"if {cond}:")
+                self._arm(t, m, depth + 1)
+            else:
+                self.w(f"if {cond}:")
+                self._arm(t, m, depth + 1)
+                self.w("else:")
+                self._arm(f, m, depth + 1)
+            if m == _Blocks.EXIT:
+                return  # both arms returned
+            b = m
+
+    def _arm(self, b: int, end: int, depth: int) -> None:
+        self.indent += 1
+        before = len(self.lines)
+        self._chain(b, end, depth)
+        if len(self.lines) == before:
+            self.w("pass")
+        self.indent -= 1
+
+    # guard-chain fallback -------------------------------------------------
+    def emit_guard_chain(self) -> None:
+        """Single forward pass over `if bb == i` guards — loop-free because
+        every verified jump goes forward."""
+        for bi in range(self.blocks.n):
+            if bi > 0:
+                self.w(f"if bb == {bi}:")
+                self.indent += 1
+            term = self._block_term(bi)
+            kind = term[0]
+            if kind == "exit":
+                self.emit_epilogue_return()
+            elif kind == "ja":
+                self.w(f"bb = {term[1]}")
+            elif kind == "fall":
+                self.w(f"bb = {term[1]}")
+            else:
+                _, cond, _, t, f = term
+                self.w(f"bb = {t} if {cond} else {f}")
+            if bi > 0:
+                self.indent -= 1
+
+
+# ---- post-pass: whole-function dead-register elimination -------------------
+
+_ASSIGN_RE = re.compile(r"^\s*(r\d+|s\d+_\d+) = (.+)$")
+_TOKEN_RE = re.compile(r"\b(?:r\d+|s\d+_\d+)\b")
+_CALL_RE = re.compile(r"([A-Za-z_][A-Za-z0-9_.]*)\s*\(")
+# the ONLY callables an assignment RHS may invoke and still be deletable;
+# anything not on this whitelist (helper closures, pool ops, printk, any
+# future binding) is conservatively treated as impure and kept
+_PURE_CALLS = frozenset(
+    ["int.from_bytes", "_s64", "_s32", "len"]
+    + [f"_u{n}" for n in _STRUCT_FMT])
+
+
+def _is_pure_rhs(rhs: str) -> bool:
+    return all(name in _PURE_CALLS for name in _CALL_RE.findall(rhs))
+
+
+def _dce(lines: List[str]) -> List[str]:
+    """Delete pure assignments to registers/slots that are never read.
+
+    Sound because a candidate RHS may only call whitelisted side-effect-
+    free functions (fail-closed: unknown callables make the line
+    undeletable) and the target is a function-local never observed
+    elsewhere.  Runs to a fixpoint so chains (frame-pointer copies
+    feeding dead address math, map-handle loads made redundant by
+    call-site specialization) collapse.
+    """
+    lines = list(lines)
+    while True:
+        reads: Set[str] = set()
+        for ln in lines:
+            m = _ASSIGN_RE.match(ln)
+            scan = m.group(2) if (m and _is_pure_rhs(m.group(2))) else ln
+            reads.update(_TOKEN_RE.findall(scan))
+        out = []
+        dropped = False
+        for ln in lines:
+            m = _ASSIGN_RE.match(ln)
+            if m and m.group(1) != "r0" and m.group(1) not in reads \
+                    and _is_pure_rhs(m.group(2)):
+                dropped = True
+                continue
+            out.append(ln)
+        lines = out
+        if not dropped:
+            return lines
+
+
+def _fix_empty_blocks(lines: List[str]) -> List[str]:
+    """Re-insert ``pass`` where DCE emptied an if/else suite."""
+    out: List[str] = []
+    for i, ln in enumerate(lines):
+        out.append(ln)
+        if ln.rstrip().endswith(":"):
+            ind = len(ln) - len(ln.lstrip())
+            nxt = lines[i + 1] if i + 1 < len(lines) else None
+            if nxt is None or (len(nxt) - len(nxt.lstrip())) <= ind:
+                out.append(" " * (ind + 4) + "pass")
+    return out
+
+
+def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
+                printk: Callable[[int], None]) -> Dict[str, object]:
+    """Runtime support bindings shared by the v1 and v2 generators."""
     map_by_handle = {(0x7F00 + i) << 48: resolved_maps[d.name]
-                     for i, d in enumerate(prog.maps)}
+                     for i, d in enumerate(prog.maps)
+                     if d.name in resolved_maps}
 
     def _s64(x: int) -> int:
         return x - (1 << 64) if x >= (1 << 63) else x
@@ -255,8 +851,14 @@ def compile_program(prog: Program, resolved_maps: Dict[str, BpfMap],
             v[0:8] = new.to_bytes(8, "little")
         return new
 
-    env = {
-        "_s64": _s64, "_s32": _s32,
+    def _dead():
+        raise AssertionError(
+            "verifier-proven unreachable code executed")  # pragma: no cover
+
+    return {
+        "_s64": _s64, "_s32": _s32, "_dead": _dead,
+        "_ktime": H.ktime_get_ns, "_prandom": H.get_prandom_u32,
+        "_printk": printk,
         "_h_map_lookup_elem": _h_map_lookup_elem,
         "_h_map_update_elem": _h_map_update_elem,
         "_h_map_delete_elem": _h_map_delete_elem,
@@ -265,8 +867,144 @@ def compile_program(prog: Program, resolved_maps: Dict[str, BpfMap],
         "_h_trace_printk": _h_trace_printk,
         "_h_ema_update": _h_ema_update,
     }
+
+
+def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
+                printk: Callable[[int], None]) -> Callable[[bytearray], int]:
+    """The original dispatcher-loop generator (baseline / fallback tier)."""
+    insns = prog.insns
+    leaders = _leaders(insns)
+    block_of: Dict[int, int] = {pc: i for i, pc in enumerate(leaders)}
+
+    g = _Gen(prog)
+    g.indent = 0
+    g.w("def _run(ctx):")
+    g.indent = 1
+    g.w("r0 = r2 = r3 = r4 = r5 = r6 = r7 = r8 = r9 = 0")
+    g.w(f"stack = bytearray({STACK_SIZE})")
+    g.w("mems = [None, stack, ctx]")
+    g.w(f"r1 = {2 << 32}")                      # ctx pointer: region 2
+    g.w(f"r10 = {(1 << 32) | STACK_SIZE}")      # fp: region 1, offset 512
+
+    single_block = len(leaders) == 1
+    if not single_block:
+        g.w("bb = 0")
+        g.w("while True:")
+        g.indent = 2
+
+    for bi, start in enumerate(leaders):
+        end = leaders[bi + 1] if bi + 1 < len(leaders) else len(insns)
+        if not single_block:
+            g.w(f"if bb == {bi}:")
+            g.indent += 1
+        ended = False
+        for pc in range(start, end):
+            ended = g.emit_insn(pc, insns[pc], block_of)
+        if not ended:
+            # fallthrough into next block
+            g.w(f"bb = {bi + 1}")
+            g.w("continue")
+        if not single_block:
+            g.indent -= 1
+
+    src = "\n".join(g.lines)
+    env = _helper_env(prog, resolved_maps, printk)
     code = compile(src, f"<bpf-jit:{prog.name}>", "exec")
     exec(code, env)  # noqa: S102 — generated from verified bytecode
     fn = env["_run"]
     fn.__bpf_source__ = src  # for debugging / tests
+    fn.__bpf_codegen__ = "v1"
     return fn
+
+
+def _build_prologue(g: _GenV2, body: List[str]) -> List[str]:
+    """Entry lines computed *after* DCE so only live state is initialized."""
+    text = "\n".join(body)
+    pro: List[str] = []
+    ind = "    "
+    regs = sorted({int(r) for r in re.findall(r"\br(\d+)\b", text)})
+    plain = [r for r in regs if r not in (1, FP_REG)]
+    if plain:
+        pro.append(ind + " = ".join(f"r{r}" for r in plain) + " = 0")
+    if 1 in regs:
+        pro.append(ind + f"r1 = {2 << 32}")     # encoded ctx pointer
+    if FP_REG in regs:
+        pro.append(ind + f"r10 = {(1 << 32) | STACK_SIZE}")
+    if not g.ctx_few and (g.ctx_locals or "_c[" in text):
+        pro.append(ind + "_c = _ctxu(ctx)")
+    for k in sorted(g.ctx_locals):
+        if g.ctx_few:
+            pro.append(ind + f"c{k} = {g._use_u(8)}(ctx, {k * 8})[0]")
+        else:
+            pro.append(ind + f"c{k} = _c[{k}]")
+    slots = sorted({(int(o), int(n))
+                    for o, n in re.findall(r"\bs(\d+)_(\d+)\b", text)})
+    if slots:
+        pro.append(ind + " = ".join(f"s{o}_{n}" for o, n in slots) + " = 0")
+    if g.needs_mems:  # implies needs_stack (see _analyze)
+        pro += [ind + "try:",
+                ind + "    stack, mems = _pool.pop()",
+                ind + "    del mems[3:]",
+                ind + "except IndexError:",
+                ind + f"    stack = bytearray({STACK_SIZE})",
+                ind + "    mems = [None, stack, None]"]
+    elif g.needs_stack:
+        pro += [ind + "try:",
+                ind + "    stack = _pool.pop()",
+                ind + "except IndexError:",
+                ind + f"    stack = bytearray({STACK_SIZE})"]
+    return pro
+
+
+def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
+                printk: Callable[[int], None], vinfo
+                ) -> Callable[[bytearray], int]:
+    g = _GenV2(prog, vinfo, resolved_maps)
+    g.indent = 1
+    structured = True
+    try:
+        g.emit_structured()
+    except _StructAbort:
+        g.lines.clear()
+        g.indent = 1
+        structured = False
+        g.w("bb = 0")
+        g.emit_guard_chain()
+
+    body = _fix_empty_blocks(_dce(g.lines))
+    lines = ["def _run(ctx):"] + _build_prologue(g, body) + body
+    src = "\n".join(lines)
+
+    env = _helper_env(prog, resolved_maps, printk)
+    nfields = prog.ctx_type.size // 8
+    env["_ctxu"] = struct.Struct(f"<{nfields}Q").unpack
+    env["_pool"] = []
+    env.update(g.env_extra)
+    code = compile(src, f"<bpf-jit:{prog.name}>", "exec")
+    exec(code, env)  # noqa: S102 — generated from verified bytecode
+    fn = env["_run"]
+    fn.__bpf_source__ = src  # for debugging / tests
+    fn.__bpf_codegen__ = "v2"
+    fn.__bpf_structured__ = structured
+    fn.__bpf_mode__ = ("scalar" if not (g.needs_stack or g.needs_mems)
+                       else "buffered")
+    return fn
+
+
+def compile_program(prog: Program, resolved_maps: Dict[str, BpfMap],
+                    *, printk: Callable[[int], None] = lambda v: None,
+                    info=None, codegen: str = "v2"
+                    ) -> Callable[[bytearray], int]:
+    """Compile verified bytecode to a Python closure ``fn(ctx_buf) -> int``.
+
+    ``info`` is the :class:`repro.core.verifier.Verifier` produced by
+    ``verify_with_info``; when omitted the program is (re-)verified here to
+    recover the region analysis the v2 generator specializes on.
+    ``codegen="v1"`` selects the legacy dispatcher-loop generator.
+    """
+    if codegen == "v1":
+        return _compile_v1(prog, resolved_maps, printk)
+    if info is None:
+        from .verifier import verify_with_info
+        info = verify_with_info(prog)
+    return _compile_v2(prog, resolved_maps, printk, info)

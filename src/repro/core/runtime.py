@@ -25,7 +25,7 @@ from .context import CTX_TYPES, PolicyContextValues
 from .jit import compile_program
 from .maps import BpfMap, MapRegistry
 from .program import Program
-from .verifier import VerifierError, verify
+from .verifier import VerifierError, verify_with_info
 from .vm import VM
 
 
@@ -84,11 +84,9 @@ class PolicyRuntime:
         If verification fails the old policy keeps running (never an
         unverified state)."""
         with self._load_lock:
-            try:
-                lp = self._prepare(program)
-            except VerifierError:
-                self.stats.rejected += 1
-                raise
+            # a VerifierError propagates (counted once, in _prepare) and
+            # leaves the old policy attached
+            lp = self._prepare(program)
             t0 = time.perf_counter_ns()
             self._attach(lp)                     # the atomic swap
             self.stats.swap_ns_last = time.perf_counter_ns() - t0
@@ -106,7 +104,7 @@ class PolicyRuntime:
     def _prepare(self, program: Program) -> LoadedProgram:
         t0 = time.perf_counter()
         try:
-            verify(program)
+            vinfo = verify_with_info(program)
         except VerifierError:
             self.stats.rejected += 1
             raise
@@ -116,11 +114,16 @@ class PolicyRuntime:
             vm = VM(program.insns, resolved, printk=self._printk_log.append)
             fn = vm.run
         else:
+            # the verifier's region analysis feeds the specializing (v2)
+            # code generator — one static pass pays for both safety and speed
             fn = compile_program(program, resolved,
-                                 printk=self._printk_log.append)
+                                 printk=self._printk_log.append, info=vinfo)
         t2 = time.perf_counter()
-        self._epoch += 1
-        return LoadedProgram(program=program, fn=fn, epoch=self._epoch,
+        # the epoch bumps in _attach, after the swap is visible: a reader
+        # that observes the new epoch must also observe the new program,
+        # or an epoch-keyed cache could memoize the old policy's decision
+        # under the new epoch (stale forever)
+        return LoadedProgram(program=program, fn=fn, epoch=self._epoch + 1,
                              verify_ms=(t1 - t0) * 1e3, jit_ms=(t2 - t1) * 1e3,
                              loaded_at=time.time())
 
@@ -133,11 +136,19 @@ class PolicyRuntime:
         return out
 
     def _attach(self, lp: LoadedProgram) -> None:
-        # single reference assignment = the CAS of the paper
+        # single reference assignment = the CAS of the paper; the epoch
+        # bump comes second (same ordering as detach) so epoch observers
+        # never see a new epoch with the old program still attached
         self._attached[lp.section] = lp
+        self._epoch += 1
 
     def detach(self, section: str) -> None:
-        self._attached[section] = None
+        # detaching changes what invoke() runs, so it is an epoch event too:
+        # epoch-keyed caches (collectives dispatch) must not serve decisions
+        # made by the no-longer-attached policy
+        with self._load_lock:
+            self._attached[section] = None
+            self._epoch += 1
 
     # ---- invocation --------------------------------------------------------
     def attached(self, section: str) -> Optional[LoadedProgram]:

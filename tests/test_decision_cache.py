@@ -1,0 +1,137 @@
+"""Decision-cache semantics: memoized dispatch must never violate the
+paper's T3 hot-reload guarantee (a swap takes effect on the very next
+decision), must never cache stateful policies, and the decision log must
+stay bounded."""
+
+import pytest
+
+from repro.collectives.dispatch import (CollectiveDispatcher, DispatchConfig,
+                                        _comm_id)
+from repro.core import PolicyRuntime
+from repro.core.context import Algo, CollType
+from repro.policies import bad_channels, static_override
+from repro.policies import table1 as T
+
+
+def _decide(disp, size=8 << 20, n=8, axis="dp"):
+    return disp.decide(CollType.ALL_REDUCE, size, n, axis_name=axis)
+
+
+def test_pure_policy_decisions_are_cached():
+    rt = PolicyRuntime()
+    rt.load(static_override.program)
+    disp = CollectiveDispatcher(runtime=rt)
+    d1 = _decide(disp)
+    d2 = _decide(disp)
+    assert d2 is d1                      # memoized object, not re-derived
+    assert disp.cache_hits == 1 and disp.cache_misses == 1
+    assert rt.stats.invocations == 1     # policy ran exactly once
+    # different key -> miss
+    d3 = _decide(disp, size=1 << 20)
+    assert d3 is not d1
+    assert disp.cache_misses == 2
+
+
+def test_hot_reload_invalidates_decision_cache():
+    """T3: the next decide() after a swap must reflect the new policy —
+    no stale fast-path hits."""
+    rt = PolicyRuntime()
+    rt.load(static_override.program)     # n_channels = 8
+    disp = CollectiveDispatcher(runtime=rt)
+    d1 = _decide(disp)
+    assert d1.channels == 8
+    assert _decide(disp) is d1           # warm hit before the swap
+
+    rt.reload(bad_channels.program)      # n_channels = 1
+    d2 = _decide(disp)
+    assert d2.channels == 1, "cache served a stale pre-reload decision"
+    assert _decide(disp) is d2           # re-cached under the new epoch
+
+    # swap back: epoch bumps again, cache follows
+    rt.reload(static_override.program)
+    assert _decide(disp).channels == 8
+
+
+def test_detach_invalidates_decision_cache():
+    rt = PolicyRuntime()
+    rt.load(static_override.program)
+    disp = CollectiveDispatcher(runtime=rt)
+    d1 = _decide(disp)
+    assert d1.from_policy
+    rt.detach("tuner")
+    d2 = _decide(disp)
+    assert not d2.from_policy            # framework default, not stale hit
+    assert d2.algo == Algo.DEFAULT
+
+
+def test_stateful_policies_bypass_cache():
+    """Any helper call (map state, clock, randomness) disables memoization:
+    the policy must observe every dispatch."""
+    rt = PolicyRuntime()
+    rt.load(T.latency_feedback.program)  # lookup + update per call
+    disp = CollectiveDispatcher(runtime=rt)
+    n_calls = 5
+    for _ in range(n_calls):
+        _decide(disp)
+    assert rt.stats.invocations == n_calls
+    assert disp.cache_hits == 0
+    # the map state really evolved call by call
+    st = rt.maps.get("latency_map").lookup_u64(d1_comm_id(disp), slot=1)
+    assert st == 4 + (n_calls - 1)
+
+
+def d1_comm_id(disp):
+    return disp.decisions[-1].comm_id
+
+
+def test_cache_can_be_disabled():
+    rt = PolicyRuntime()
+    rt.load(static_override.program)
+    disp = CollectiveDispatcher(
+        runtime=rt, config=DispatchConfig(enable_decision_cache=False))
+    _decide(disp)
+    _decide(disp)
+    assert disp.cache_hits == 0
+    assert rt.stats.invocations == 2
+
+
+def test_cached_hits_still_feed_log_and_net_hook():
+    from repro.policies import net_accounting
+    rt = PolicyRuntime()
+    rt.load(static_override.program)
+    rt.load(net_accounting.program)
+    disp = CollectiveDispatcher(runtime=rt)
+    for _ in range(4):
+        _decide(disp)
+    assert len(disp.decisions) == 4      # every dispatch logged
+    assert disp.net_calls == 4           # data plane saw every dispatch
+
+
+def test_decision_log_is_bounded_ring_buffer():
+    disp = CollectiveDispatcher(
+        runtime=PolicyRuntime(),
+        config=DispatchConfig(decision_log_max=16))
+    for i in range(100):
+        _decide(disp, size=(i + 1) << 10)
+    assert len(disp.decisions) == 16
+    # ring semantics: the newest decisions survive
+    assert disp.decisions[-1].size_bytes == 100 << 10
+    assert disp.decisions[0].size_bytes == 85 << 10
+    disp.clear_log()
+    assert len(disp.decisions) == 0
+
+
+def test_default_log_bound_is_4096():
+    disp = CollectiveDispatcher(runtime=PolicyRuntime())
+    assert disp.decisions.maxlen == 4096
+
+
+def test_comm_id_is_cached_and_stable():
+    _comm_id.cache_clear()
+    a = _comm_id("dp", 8)
+    info0 = _comm_id.cache_info()
+    b = _comm_id("dp", 8)
+    info1 = _comm_id.cache_info()
+    assert a == b
+    assert info1.hits == info0.hits + 1
+    assert _comm_id("dp", 16) != a       # n participates in the hash

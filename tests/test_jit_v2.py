@@ -1,0 +1,330 @@
+"""Differential tests for the specializing (v2) JIT code generator.
+
+The interpreter (``vm.py``) is the semantic ground truth; these tests pin
+the v2 closures — and the retained v1 baseline — against it across
+
+* the shipped policy corpus (Table 1 + perf + case-study tuners), with
+  full map-state comparison after every invocation, and
+* deterministic randomized programs (``random.Random`` — unlike the
+  hypothesis suite these run on any environment).
+
+They also pin the structural properties the v2 generator promises:
+no dispatcher loop, scalar mode for helper-free policies, inline array
+fast paths, and the guard-chain fallback staying loop-free.
+"""
+
+import random
+
+import pytest
+
+from repro.core import PolicyRuntime, VerifierError, make_ctx
+from repro.core.context import POLICY_CONTEXT
+from repro.core.isa import Insn
+from repro.core.jit import compile_program
+from repro.core.program import Program
+from repro.core.verifier import verify
+from repro.core.vm import VM
+from repro.policies import casestudies as C
+from repro.policies import perf as P
+from repro.policies import table1 as T
+
+# helpers 5 (ktime) and 7 (prandom) are nondeterministic across tiers
+_NONDET_HIDS = {5, 7}
+
+CORPUS = [
+    T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+    T.latency_feedback, T.bandwidth_probe, T.slo_enforcer,
+    P.grad_compress, P.expert_chunked_a2a, P.tpu_size_aware,
+    P.grad_compress_bidir,
+    C.ring_mid_v2, C.bad_channels, C.adapt_tuner,
+]
+
+
+def _seed_maps(rt: PolicyRuntime) -> None:
+    for name in rt.maps.names():
+        m = rt.maps.get(name)
+        m.update_u64(0, 1_000, slot=0)
+        if m.value_size >= 16:
+            m.update_u64(0, 8, slot=1)
+
+
+def _map_state(rt: PolicyRuntime):
+    return {n: rt.maps.get(n).snapshot() for n in rt.maps.names()}
+
+
+def _ctx_cases(rng: random.Random, n_cases: int = 50):
+    for _ in range(n_cases):
+        yield dict(
+            coll_type=rng.randrange(4), msg_size=rng.randrange(1 << 30),
+            n_ranks=rng.choice([1, 2, 4, 8, 64, 256]),
+            comm_id=rng.randrange(16), axis_kind=rng.randrange(4),
+            dtype_bytes=rng.choice([1, 2, 4, 8]), max_channels=32,
+            topo_links=4)
+
+
+@pytest.mark.parametrize("pol", CORPUS, ids=lambda p: p.program.name)
+def test_jit_v2_matches_interpreter_on_corpus(pol):
+    """Same return value, same ctx writes, same map state — per call."""
+    assert not any(i.op == "call" and i.imm in _NONDET_HIDS
+                   for i in pol.program.insns)
+    rt_jit = PolicyRuntime()
+    rt_vm = PolicyRuntime(use_interpreter=True)
+    lp_jit = rt_jit.load(pol.program)
+    rt_vm.load(pol.program)
+    assert lp_jit.fn.__bpf_codegen__ == "v2"
+    _seed_maps(rt_jit)
+    _seed_maps(rt_vm)
+    rng = random.Random(1234)
+    for i, kw in enumerate(_ctx_cases(rng)):
+        c_jit = make_ctx("tuner", **kw)
+        c_vm = make_ctx("tuner", **kw)
+        r_jit = rt_jit.invoke("tuner", c_jit)
+        r_vm = rt_vm.invoke("tuner", c_vm)
+        assert r_jit == r_vm, f"case {i}: ret {r_jit} != {r_vm}"
+        assert c_jit.buf == c_vm.buf, f"case {i}: ctx diverged"
+        assert _map_state(rt_jit) == _map_state(rt_vm), \
+            f"case {i}: map state diverged"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic randomized programs (no hypothesis dependency)
+# ---------------------------------------------------------------------------
+
+IN_FIELDS = [f for f in POLICY_CONTEXT.fields.values() if not f.writable]
+OUT_FIELDS = [f for f in POLICY_CONTEXT.fields.values() if f.writable]
+REGS = [2, 3, 4, 5, 6, 7]
+_ALU = ["add64", "sub64", "mul64", "and64", "or64", "xor64", "rsh64", "lsh64"]
+_ALUI = ["add64i", "sub64i", "mul64i", "and64i", "or64i", "xor64i", "mov64i"]
+
+
+def _random_program(rng: random.Random) -> Program:
+    """Mirror of the hypothesis strategy: ALU soup + ctx I/O + forward
+    jumps, including overlapping jump diamonds that defeat the structured
+    reconstructor and force the guard-chain fallback."""
+    insns = []
+    for r in REGS:
+        if rng.random() < 0.5:
+            f = rng.choice(IN_FIELDS)
+            insns.append(Insn("ldxdw", dst=r, src=1, off=f.offset))
+        else:
+            insns.append(Insn("mov64i", dst=r, imm=rng.randrange(2 ** 31)))
+    for _ in range(rng.randrange(3, 26)):
+        kind = rng.randrange(4)
+        if kind == 0:
+            insns.append(Insn(rng.choice(_ALU), dst=rng.choice(REGS),
+                              src=rng.choice(REGS)))
+        elif kind == 1:
+            insns.append(Insn(rng.choice(_ALUI), dst=rng.choice(REGS),
+                              imm=rng.randrange(2 ** 31)))
+        elif kind == 2:
+            f = rng.choice(OUT_FIELDS)
+            insns.append(Insn("stxdw", dst=1, src=rng.choice(REGS),
+                              off=f.offset))
+        else:
+            insns.append(Insn(rng.choice(["jeqi", "jgti", "jlti", "jnei"]),
+                              dst=rng.choice(REGS),
+                              imm=rng.randrange(1000), off=1))
+            insns.append(Insn("mov64i", dst=rng.choice(REGS),
+                              imm=rng.randrange(1000)))
+    insns.append(Insn("mov64", dst=0, src=rng.choice(REGS)))
+    insns.append(Insn("exit"))
+    for _ in range(rng.randrange(0, 4)):
+        pos = rng.randrange(0, max(len(insns) - 2, 1))
+        max_off = len(insns) - pos - 2
+        if max_off < 1:
+            continue
+        off = rng.randrange(1, min(6, max_off) + 1)
+        op = rng.choice(["jeqi", "jgei", "jlei", "jseti", "ja"])
+        if op == "ja":
+            insns.insert(pos, Insn("ja", off=off))
+        else:
+            insns.insert(pos, Insn(op, dst=rng.choice(REGS),
+                                   imm=rng.randrange(2 ** 20), off=off))
+    return Program("rand", "tuner", insns)
+
+
+def test_randomized_programs_all_tiers_agree():
+    rng = random.Random(0xBEEF)
+    checked = 0
+    fallbacks = 0
+    while checked < 150:
+        prog = _random_program(rng)
+        try:
+            verify(prog)
+        except VerifierError:
+            continue
+        checked += 1
+        vm = VM(prog.insns, {})
+        fn_v2 = compile_program(prog, {})
+        fn_v1 = compile_program(prog, {}, codegen="v1")
+        if not fn_v2.__bpf_structured__:
+            fallbacks += 1
+            assert "while" not in fn_v2.__bpf_source__  # loop-free chain
+        for kw in _ctx_cases(rng, n_cases=5):
+            c1 = make_ctx("tuner", **kw)
+            c2 = make_ctx("tuner", **kw)
+            c3 = make_ctx("tuner", **kw)
+            r1 = vm.run(c1.buf)
+            r2 = fn_v2(c2.buf)
+            r3 = fn_v1(c3.buf)
+            assert r1 == r2 == r3, prog.disasm()
+            assert c1.buf == c2.buf == c3.buf, prog.disasm()
+
+
+# ---------------------------------------------------------------------------
+# Structural guarantees of the v2 generator
+# ---------------------------------------------------------------------------
+
+def test_guard_chain_fallback_matches_interpreter(monkeypatch):
+    """The duplication-budget fallback is rarely hit organically, so force
+    it: with structuring disabled, the guard chain must still agree with
+    the interpreter (and stay loop-free)."""
+    from repro.core import jit as jit_mod
+
+    def _abort(self):
+        raise jit_mod._StructAbort
+
+    monkeypatch.setattr(jit_mod._GenV2, "emit_structured", _abort)
+    rng = random.Random(7)
+    checked = 0
+    while checked < 40:
+        prog = _random_program(rng)
+        try:
+            verify(prog)
+        except VerifierError:
+            continue
+        checked += 1
+        vm = VM(prog.insns, {})
+        fn = compile_program(prog, {})
+        assert not fn.__bpf_structured__
+        assert "while" not in fn.__bpf_source__
+        for kw in _ctx_cases(rng, n_cases=5):
+            c1 = make_ctx("tuner", **kw)
+            c2 = make_ctx("tuner", **kw)
+            assert vm.run(c1.buf) == fn(c2.buf), prog.disasm()
+            assert c1.buf == c2.buf, prog.disasm()
+    # the corpus policies must round-trip through the fallback too
+    for pol in CORPUS:
+        rt = PolicyRuntime()
+        rt_vm = PolicyRuntime(use_interpreter=True)
+        rt.load(pol.program)
+        rt_vm.load(pol.program)
+        _seed_maps(rt)
+        _seed_maps(rt_vm)
+        for kw in _ctx_cases(random.Random(3), n_cases=10):
+            c1 = make_ctx("tuner", **kw)
+            c2 = make_ctx("tuner", **kw)
+            assert rt.invoke("tuner", c1) == rt_vm.invoke("tuner", c2)
+            assert c1.buf == c2.buf
+            assert _map_state(rt) == _map_state(rt_vm)
+
+
+def test_v2_emits_structured_loop_free_code():
+    for pol in CORPUS:
+        rt = PolicyRuntime()
+        fn = rt.load(pol.program).fn
+        assert fn.__bpf_structured__, pol.program.name
+        assert "while" not in fn.__bpf_source__, pol.program.name
+        assert "bb" not in fn.__bpf_source__, pol.program.name
+
+
+def test_v2_scalar_mode_for_helper_free_policies():
+    """Policies that never call helpers allocate nothing per call."""
+    rt = PolicyRuntime()
+    fn = rt.load(T.static_override.program).fn
+    assert fn.__bpf_mode__ == "scalar"
+    assert "bytearray" not in fn.__bpf_source__
+    assert "mems" not in fn.__bpf_source__
+
+
+def test_v2_inline_array_fast_path():
+    """Array-map lookups compile to direct slot indexing, not helper
+    closures or the handle dict."""
+    rt = PolicyRuntime()
+    fn = rt.load(T.size_aware.program).fn  # chan_map is an array map
+    assert fn.__bpf_mode__ == "buffered"
+    assert "_slots0" in fn.__bpf_source__
+    assert "_h_map_lookup_elem" not in fn.__bpf_source__
+
+
+def test_variable_offset_stack_access_allocates_frame():
+    """Regression: a program whose ONLY stack accesses have variable
+    (verifier-bounded) offsets must still get a stack buffer — promotion
+    applies only to constant-offset slots."""
+    insns = [
+        Insn("ldxdw", dst=3, src=1, off=0),        # r3 = ctx.coll_type
+        Insn("jgti", dst=3, off=4, imm=8),         # if r3 > 8 skip
+        Insn("mov64", dst=2, src=10),
+        Insn("add64i", dst=2, imm=-16),            # r2 = fp - 16
+        Insn("add64", dst=2, src=3),               # r2 += r3 (var offset)
+        Insn("stxdw", dst=2, src=3),               # *(u64*)r2 = r3
+        Insn("mov64i", dst=0, imm=0),
+        Insn("exit"),
+    ]
+    prog = Program("varstack", "tuner", insns)
+    verify(prog)
+    fn = compile_program(prog, {})
+    assert fn.__bpf_mode__ == "buffered"
+    vm = VM(prog.insns, {})
+    for coll in (0, 5, 8, 9, 200):
+        c1 = make_ctx("tuner", coll_type=coll)
+        c2 = make_ctx("tuner", coll_type=coll)
+        assert fn(c1.buf) == vm.run(c2.buf)
+        assert c1.buf == c2.buf
+
+
+def test_ema_on_undersized_array_value_matches_vm():
+    """Regression: the inline ema fast path assumes an 8-byte slot; an
+    array map with value_size < 8 must take the closure path and mirror
+    the VM's slot-growing slice-assign semantics instead of faulting."""
+    from repro.core.program import MapDecl
+
+    def make(use_interpreter):
+        rt = PolicyRuntime(use_interpreter=use_interpreter)
+        prog = Program("tiny_ema", "tuner", [
+            Insn("stw", dst=10, off=-8, imm=0),      # key 0 at fp-8
+            Insn("ldmap", dst=1, map_name="m"),
+            Insn("mov64", dst=2, src=10),
+            Insn("add64i", dst=2, imm=-8),
+            Insn("mov64i", dst=3, imm=100),          # sample
+            Insn("mov64i", dst=4, imm=4),            # weight
+            Insn("call", imm=64),                    # ema_update
+            Insn("exit"),
+        ], maps=(MapDecl("m", "array", value_size=4, max_entries=4),))
+        return rt, rt.load(prog)
+
+    rt_jit, lp = make(False)
+    rt_vm, _ = make(True)
+    assert "_slots" not in lp.fn.__bpf_source__  # inline path not taken
+    for _ in range(3):
+        r_jit = rt_jit.invoke("tuner", make_ctx("tuner"))
+        r_vm = rt_vm.invoke("tuner", make_ctx("tuner"))
+        assert r_jit == r_vm
+    assert _map_state(rt_jit) == _map_state(rt_vm)
+
+
+def test_v2_threaded_buffer_pool_is_safe():
+    """Concurrent invocations must not share pooled stack/mems state."""
+    import threading
+    rt = PolicyRuntime()
+    rt.load(T.slo_enforcer.program)
+    _seed_maps(rt)
+    errs = []
+
+    def worker(seed):
+        rng = random.Random(seed)
+        try:
+            for kw in _ctx_cases(rng, n_cases=400):
+                ctx = make_ctx("tuner", **kw)
+                rt.invoke("tuner", ctx)
+                ch = ctx["n_channels"]
+                assert 0 <= ch <= 64, ch
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs

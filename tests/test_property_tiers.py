@@ -2,10 +2,18 @@
 
 Strategy: generate random *verifiable* straight-line programs over the
 tuner ctx (ALU soup + ctx loads + output stores + branches), verify them,
-then assert interpreter == host JIT on random ctx inputs.  The verifier
+then assert interpreter == host JIT (both the v1 dispatcher-loop codegen
+and the v2 specializing codegen) on random ctx inputs.  The verifier
 itself is property-tested by construction: anything it accepts must run
 without a VM fault.
 """
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; deterministic differential "
+           "coverage of the same tiers lives in test_jit_v2.py")
 
 import hypothesis.strategies as st
 from hypothesis import given, settings
@@ -107,14 +115,17 @@ def test_vm_jit_agree_on_verified_programs(prog, ctx_kwargs):
         # property only concerns *accepted* programs
         return
     vm = VM(prog.insns, {})
-    fn = compile_program(prog, {})
+    fn_v2 = compile_program(prog, {})
+    fn_v1 = compile_program(prog, {}, codegen="v1")
 
     c1 = make_ctx("tuner", **ctx_kwargs)
     c2 = make_ctx("tuner", **ctx_kwargs)
+    c3 = make_ctx("tuner", **ctx_kwargs)
     r_vm = vm.run(c1.buf)
-    r_jit = fn(c2.buf)
-    assert r_vm == r_jit
-    assert c1.buf == c2.buf
+    r_v2 = fn_v2(c2.buf)
+    r_v1 = fn_v1(c3.buf)
+    assert r_vm == r_v2 == r_v1
+    assert c1.buf == c2.buf == c3.buf
 
 
 @settings(max_examples=200, deadline=None)
