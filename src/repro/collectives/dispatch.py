@@ -5,9 +5,10 @@ which mirrors NCCL's tuner-plugin flow:
 
   1. build a ``policy_context`` (collective type, message bytes, rank count,
      communicator id, axis kind, dtype, max channels)
-  2. invoke the attached verified tuner program (host tier) — falling back
-     to the framework default (DEFAULT algorithm, like NCCL defaulting to
-     NVLS) when no policy is attached or the policy defers
+  2. invoke the attached verified tuner chain (host tier; first
+     non-deferring link wins) — falling back to the framework default
+     (DEFAULT algorithm, like NCCL defaulting to NVLS) when no policy is
+     attached or every policy defers
   3. translate the decision through a tuner-v5-style cost table: the
      policy's choice zeroes its (algo, proto) cost; infeasible combinations
      keep sentinel cost so dispatch falls back gracefully
@@ -29,11 +30,12 @@ module implements the host-side decision fast path:
 1. **Codegen layer** — each ``decide()`` invokes a closure specialized on
    the verified program (structured control flow, scalarized ctx, inline
    map fast paths; see the jit module docstring).
-2. **Dispatch layer** — repeat decisions are memoized.  When the attached
-   tuner program is *pure* (calls no helpers: no map state, no clock, no
-   randomness — statically determined from its bytecode), the decision is
-   a function of the ctx inputs only, so it is cached keyed on
-   ``(epoch, coll, size, n_ranks, axis_kind, dtype_bytes, comm_id)`` plus
+2. **Dispatch layer** — repeat decisions are memoized.  When every program
+   in the attached tuner chain is *pure* (calls no helpers: no map state,
+   no clock, no randomness — statically determined from its bytecode), the
+   decision is a function of the ctx inputs only, so it is cached keyed on
+   ``(epoch, chain_fingerprint, coll, size, n_ranks, axis_kind,
+   dtype_bytes, comm_id)`` plus
    the config knobs.  The **epoch** in the key is what preserves the
    paper's T3 hot-reload semantics: every load/reload/detach bumps the
    runtime epoch, so the very next ``decide()`` after a swap *completes*
@@ -167,17 +169,23 @@ class CollectiveDispatcher:
         # epoch (4096 entries) to bound memory
         self._decision_cache: Dict[Tuple, Decision] = {}
         self._cache_epoch = -1
+        self._cache_fingerprint = 0
         self._cacheable = False
         self.cache_hits = 0
         self.cache_misses = 0
         self._apply_env_plugin()
 
-    def _apply_env_plugin(self, *, n_devices: int = 0, tp: int = 0,
-                          dp: int = 0, n_pods: int = 1) -> None:
-        """Init-time hook (NCCL env plugin analogue): a verified env
-        program may override the framework's default knobs."""
-        if self.runtime.attached("env") is None:
-            return
+    def apply_env(self, *, n_devices: int = 0, tp: int = 0,
+                  dp: int = 0, n_pods: int = 1) -> bool:
+        """Run the attached env chain (NCCL env plugin analogue) against a
+        real deployment topology; verified env programs may override the
+        framework's default knobs.  The dispatcher calls this once at
+        construction with zeroed topology; callers should re-invoke it
+        after attaching an env program or when the topology is known.
+        Returns True iff an env chain ran (knob changes participate in the
+        decision-cache key, so no manual invalidation is needed)."""
+        if not self.runtime.is_attached("env"):
+            return False
         ctx = make_ctx("env", n_devices=n_devices, tp=tp, dp=dp,
                        n_pods=n_pods, topo_links=self.config.hw.n_links)
         self.runtime.invoke("env", ctx)
@@ -191,17 +199,24 @@ class CollectiveDispatcher:
                                        MAX_CHANNELS)
         if ctx["max_channels"]:
             cfg.max_channels = min(int(ctx["max_channels"]), MAX_CHANNELS)
+        return True
+
+    # historical name, kept for existing call sites
+    def _apply_env_plugin(self, *, n_devices: int = 0, tp: int = 0,
+                          dp: int = 0, n_pods: int = 1) -> None:
+        self.apply_env(n_devices=n_devices, tp=tp, dp=dp, n_pods=n_pods)
 
     # ------------------------------------------------------------------
     def _policy_cacheable(self) -> bool:
         """A tuner decision can be memoized iff it is a pure function of
-        the ctx inputs: no policy attached (framework default), or an
-        attached program that calls no helpers (no map reads/writes, no
-        clock, no randomness) — statically decidable from the bytecode."""
-        lp = self.runtime.attached("tuner")
-        if lp is None:
-            return True
-        return not any(i.op == "call" for i in lp.program.insns)
+        the ctx inputs: no policy attached (framework default), or a chain
+        in which every program calls no helpers (no map reads/writes, no
+        clock, no randomness) — statically decidable from the bytecode.
+        One stateful program anywhere in the chain disables memoization:
+        first-non-deferring-wins means any link may end up deciding."""
+        return all(
+            not any(i.op == "call" for i in link.program.insns)
+            for link in self.runtime.chain("tuner"))
 
     def decide(self, coll: int, size_bytes: int, n: int, *,
                axis_kind: int = AxisKind.DATA, dtype_bytes: int = 4,
@@ -214,10 +229,15 @@ class CollectiveDispatcher:
             self._cacheable = cfg.enable_decision_cache \
                 and self._policy_cacheable()
             self._cache_epoch = ep
+            # the chain fingerprint joins the epoch in every cache key:
+            # epoch says "something changed", the fingerprint pins *which*
+            # chain composition produced the cached decision
+            self._cache_fingerprint = self.runtime.chain_fingerprint("tuner")
         cid = _comm_id(axis_name, n)
         key = None
         if self._cacheable:
-            key = (ep, coll, size_bytes, n, axis_kind, dtype_bytes, cid,
+            key = (ep, self._cache_fingerprint,
+                   coll, size_bytes, n, axis_kind, dtype_bytes, cid,
                    cfg.default_algo, cfg.default_proto,
                    cfg.default_channels, cfg.max_channels,
                    cfg.hw.n_links)  # topo_links is a policy ctx input
@@ -287,7 +307,7 @@ class CollectiveDispatcher:
     def _net_hook(self, d: Decision) -> None:
         if not self.config.enable_net_hook:
             return
-        if self.runtime.attached("net") is None:
+        if not self.runtime.is_attached("net"):
             return
         nctx = make_ctx("net", op=0, bytes=d.size_bytes,
                         peer=(d.comm_id + 1) % max(d.n_ranks, 1),
@@ -336,8 +356,8 @@ class CollectiveDispatcher:
     def profiler_feed(self, comm_id: int, latency_ns: int, *, coll: int = 0,
                       msg_size: int = 0, channels: int = 0, algo: int = 0,
                       ts_ns: int = 0) -> None:
-        """Deliver a latency observation to the attached profiler program."""
-        if self.runtime.attached("profiler") is None:
+        """Deliver a latency observation to the attached profiler chain."""
+        if not self.runtime.is_attached("profiler"):
             return
         pctx = make_ctx("profiler", event_type=1, coll_type=coll,
                         msg_size=msg_size, comm_id=comm_id,

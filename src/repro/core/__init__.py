@@ -15,8 +15,8 @@ from .frontend import CompileError, compile_policy, map_decl, policy
 from .isa import Insn
 from .maps import ArrayMap, BpfMap, HashMap, MapRegistry, PerCpuArrayMap
 from .program import MapDecl, Program
-from .runtime import (LoadedProgram, PolicyRuntime, global_runtime,
-                      reset_global_runtime)
+from .runtime import (LinkError, LoadedProgram, PolicyLink, PolicyRuntime,
+                      global_runtime, reset_global_runtime)
 from .verifier import VerifierError, verify
 from .vm import VM, VMError
 
@@ -25,7 +25,8 @@ __all__ = [
     "PolicyContextValues", "ProfEvent", "Proto", "make_ctx",
     "CompileError", "compile_policy", "map_decl", "policy", "Insn",
     "ArrayMap", "BpfMap", "HashMap", "MapRegistry", "PerCpuArrayMap",
-    "MapDecl", "Program", "LoadedProgram", "PolicyRuntime",
+    "MapDecl", "Program", "LinkError", "LoadedProgram", "PolicyLink",
+    "PolicyRuntime",
     "global_runtime", "reset_global_runtime", "VerifierError", "verify",
     "VM", "VMError",
 ]

@@ -45,10 +45,14 @@ class CompileError(Exception):
 
 
 def map_decl(name: str, *, kind: str = "array", key_size: int = 4,
-             value_size: int = 8, max_entries: int = 64) -> MapDecl:
+             value_size: int = 8, max_entries: int = 64,
+             shared: bool = False) -> MapDecl:
+    """Declare a map.  ``shared=True`` pins it into the registry's
+    cross-plugin namespace at load time, so other programs (and host-side
+    tooling) can reach the same state by name."""
     if kind != "hash":
         key_size = 4
-    return MapDecl(name, kind, key_size, value_size, max_entries)
+    return MapDecl(name, kind, key_size, value_size, max_entries, shared)
 
 
 _CMP_OPS = {

@@ -204,19 +204,51 @@ MAP_KINDS = {
 
 
 class MapRegistry:
-    """Named maps shared across programs — the composability namespace."""
+    """Named maps shared across programs — the composability namespace.
+
+    Two tiers of sharing:
+
+    * every created map is reachable by name through :meth:`get` while the
+      registry lives — incidental sharing within one runtime;
+    * **pinned** maps (:meth:`pin` / :meth:`get_pinned`) form an explicit
+      namespace, the bpffs-pin analogue: a profiler program declares its
+      EMA map ``shared=True`` and a tuner program (or host-side tooling)
+      finds the same object by name, without ever holding a program
+      reference.  Pinned maps survive every program detach/replace.
+    """
 
     def __init__(self):
         self._maps: Dict[str, BpfMap] = {}
+        self._pinned: Dict[str, BpfMap] = {}
         self._lock = threading.Lock()
+
+    @staticmethod
+    def _shape_of(kind: str, key_size: int, value_size: int,
+                  max_entries: int) -> tuple:
+        # array-family maps force u32 keys regardless of the declaration
+        return (kind, key_size if kind == "hash" else 4, value_size,
+                max_entries)
+
+    def validate(self, name: str, kind: str, *, key_size: int = 4,
+                 value_size: int = 8, max_entries: int = 64) -> None:
+        """Shape-check a declaration against the registry WITHOUT creating
+        anything — the dry-run half of a transactional bundle load."""
+        if kind not in MAP_KINDS:
+            raise MapError(f"unknown map kind {kind!r}")
+        with self._lock:
+            m = self._maps.get(name)
+            if m is not None and (m.kind, m.key_size, m.value_size,
+                                  m.max_entries) != self._shape_of(
+                                      kind, key_size, value_size, max_entries):
+                raise MapError(f"map {name}: redefinition with different shape")
 
     def create(self, name: str, kind: str, *, key_size: int = 4,
                value_size: int = 8, max_entries: int = 64) -> BpfMap:
         with self._lock:
             if name in self._maps:
                 m = self._maps[name]
-                if (m.kind, m.key_size, m.value_size, m.max_entries) != (
-                        kind, key_size if kind == "hash" else 4, value_size, max_entries):
+                if (m.kind, m.key_size, m.value_size, m.max_entries) != \
+                        self._shape_of(kind, key_size, value_size, max_entries):
                     raise MapError(f"map {name}: redefinition with different shape")
                 return m
             if kind == "hash":
@@ -233,6 +265,37 @@ class MapRegistry:
             return self._maps[name]
         except KeyError:
             raise MapError(f"map {name!r} not found") from None
+
+    # ---- pinned namespace (cross-plugin maps, the bpffs-pin analogue) ----
+    def pin(self, name: str) -> BpfMap:
+        """Pin an existing map into the shared namespace (idempotent)."""
+        with self._lock:
+            try:
+                m = self._maps[name]
+            except KeyError:
+                raise MapError(
+                    f"cannot pin {name!r}: map not found") from None
+            self._pinned[name] = m
+            return m
+
+    def get_pinned(self, name: str) -> BpfMap:
+        try:
+            return self._pinned[name]
+        except KeyError:
+            raise MapError(
+                f"map {name!r} is not pinned; pinned maps: "
+                f"{sorted(self._pinned) or 'none'}") from None
+
+    def unpin(self, name: str) -> None:
+        with self._lock:
+            if self._pinned.pop(name, None) is None:
+                raise MapError(f"map {name!r} is not pinned")
+
+    def is_pinned(self, name: str) -> bool:
+        return name in self._pinned
+
+    def pinned_names(self):
+        return sorted(self._pinned)
 
     def __contains__(self, name: str) -> bool:
         return name in self._maps

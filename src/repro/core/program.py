@@ -22,6 +22,10 @@ class MapDecl:
     key_size: int = 4
     value_size: int = 8
     max_entries: int = 64
+    # shared=True pins the map into the registry's cross-plugin namespace
+    # at load time (MapRegistry.get_pinned) — the paper's composability
+    # substrate: profiler and tuner programs share state by name
+    shared: bool = False
 
 
 @dataclasses.dataclass

@@ -1,32 +1,85 @@
-"""PolicyRuntime — load/verify/JIT/attach/hot-reload, the bpftime analogue.
+"""PolicyRuntime — link-based load/verify/JIT/attach lifecycle, the
+bpftime analogue grown to kernel-style multi-program attachment.
 
-Lifecycle of a policy (paper §4):
+Lifecycle of a policy (paper §4), now mediated by first-class links:
 
-    load(program)  ->  verify (PREVAIL-style)  ->  JIT  ->  attach
-    reload(name, program) -> verify new -> JIT new -> atomic swap
-                             (failure leaves the old policy running)
+    link = runtime.attach(program, priority=...)   # verify -> JIT -> attach
+    link.replace(new_program)                       # verify-then-CAS swap
+    link.detach()                                   # remove from the chain
+    runtime.load_bundle([prog_a, prog_b, ...])      # all-or-nothing multi-swap
 
-Atomicity: the active entry is swapped by a single reference assignment
-(atomic under the GIL — the CPython analogue of the paper's compare-and-
-swap on a function pointer).  In-flight invocations keep using the old
-closure they already read; no call is ever lost.  An epoch counter bumps on
-every swap so trace-time consumers (the jit-cache key in the collectives
-dispatch layer) can notice policy changes.
+Each hook section holds an ordered **chain** of links (the ``bpf_link`` +
+multi-prog attach model).  Chain order is ascending ``priority`` with attach
+order breaking ties; *lower priority number = higher precedence*.  The
+composition semantics per section mirror what each hook means:
+
+  * ``tuner``     — first-non-deferring-wins: programs run in chain order;
+                    the first one that writes any output field (algorithm /
+                    protocol / n_channels) decides, the rest never run.  A
+                    program that leaves all outputs zero has deferred.
+  * ``profiler``/``net`` — invoke-all: observability hooks; every program in
+                    the chain sees every event, in chain order.
+  * ``env``       — last-writer-wins: programs run in *reverse* chain order
+                    so the highest-precedence (lowest priority number) link
+                    writes last; zero-valued outputs mean "keep", so lower-
+                    precedence links still fill fields the winner left alone.
+
+The chain is executed through a **fused closure** built once per mutation:
+depth-1 chains collapse to a thin wrapper over the program's JIT'd function,
+so the PR-1 fast path survives intact.  Invocation counting lives in the
+fused closure, so ``invoke()`` and raw ``invoke_fn()`` callers both land in
+``stats.invocations``.
+
+Atomicity: every mutation (attach / detach / replace / bundle swap)
+rebuilds the affected chains and publishes each by a single reference
+assignment (atomic under the GIL — the CPython analogue of the paper's
+compare-and-swap on a function pointer).  In-flight invocations keep using
+the closure they already read; no call is ever lost.  The epoch counter
+bumps exactly once per mutation — ``load_bundle`` verifies *every* program
+before touching anything and then swaps all affected chains under one
+epoch bump, so multi-policy updates are atomic end-to-end; a rejection
+leaves the previous chains fully attached and the epoch untouched.  Epoch
+observers (the decision cache in the collectives dispatch layer) combine
+the epoch with :meth:`PolicyRuntime.chain_fingerprint` in their keys.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .context import CTX_TYPES, PolicyContextValues
 from .jit import compile_program
-from .maps import BpfMap, MapRegistry
+from .maps import BpfMap, MapError, MapRegistry
 from .program import Program
 from .verifier import VerifierError, verify_with_info
 from .vm import VM
+
+_ZERO8 = bytes(8)
+
+# sections whose chains compose first-non-deferring-wins / last-writer-wins
+_FIRST_WINS_SECTIONS = ("tuner",)
+_LAST_WRITER_SECTIONS = ("env",)
+
+
+def _output_offsets(section: str) -> Tuple[int, ...]:
+    """Byte offsets of the writable (output) ctx fields for ``section``."""
+    ctx_type = CTX_TYPES[section]
+    return tuple(f.offset for f in ctx_type.fields.values() if f.writable)
+
+
+def _output_span(section: str) -> Optional[Tuple[int, int]]:
+    """``(lo, hi)`` byte range covering the output fields when they are
+    contiguous (every current ctx type lays outputs out at the tail), so
+    defer detection is a single slice compare; None forces the per-field
+    fallback."""
+    offs = sorted(_output_offsets(section))
+    if offs and offs == list(range(offs[0], offs[-1] + 8, 8)):
+        return offs[0], offs[-1] + 8
+    return None
 
 
 @dataclasses.dataclass
@@ -51,45 +104,244 @@ class LoadedProgram:
 class RuntimeStats:
     loads: int = 0
     reloads: int = 0
+    replaces: int = 0
+    bundles: int = 0
     rejected: int = 0
     invocations: int = 0
     swap_ns_last: int = 0
 
 
-class PolicyRuntime:
-    """One runtime per process, holding maps + attached programs by section."""
+class LinkError(Exception):
+    """Misuse of a PolicyLink (detached twice, replaced after detach, ...)."""
 
-    def __init__(self, *, use_interpreter: bool = False):
+
+class PolicyLink:
+    """First-class handle on one program's attachment to one hook chain.
+
+    The link outlives program swaps: ``replace()`` verifies the new program
+    and CASes it into the chain at the link's position (old program keeps
+    running if verification rejects the new one).  ``detach()`` removes the
+    link from its chain; a detached link is dead and raises on further use.
+    """
+
+    __slots__ = ("_runtime", "link_id", "section", "priority", "flags",
+                 "_loaded", "_attached")
+
+    def __init__(self, runtime: "PolicyRuntime", link_id: int, section: str,
+                 priority: int, flags: int, loaded: LoadedProgram):
+        self._runtime = runtime
+        self.link_id = link_id
+        self.section = section
+        self.priority = priority
+        self.flags = flags
+        self._loaded = loaded
+        self._attached = True
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def is_attached(self) -> bool:
+        return self._attached
+
+    @property
+    def loaded(self) -> LoadedProgram:
+        return self._loaded
+
+    @property
+    def program(self) -> Program:
+        return self._loaded.program
+
+    @property
+    def name(self) -> str:
+        return self._loaded.name
+
+    @property
+    def fn(self) -> Callable[[bytearray], int]:
+        return self._loaded.fn
+
+    def __repr__(self) -> str:
+        state = "attached" if self._attached else "detached"
+        return (f"PolicyLink(#{self.link_id} {self.section}:{self.name} "
+                f"prio={self.priority} {state})")
+
+    # ---- lifecycle -------------------------------------------------------
+    def detach(self) -> None:
+        """Remove this link from its chain (one epoch bump)."""
+        self._runtime._detach_link(self)
+
+    def replace(self, program: Program) -> LoadedProgram:
+        """Verify-then-CAS ``program`` into this link's chain slot.
+
+        The old program keeps running until the new one has verified and
+        JIT'd; a VerifierError propagates with the chain untouched (and no
+        epoch bump).  Priority and chain position are preserved."""
+        return self._runtime._replace_link(self, program)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Chain:
+    """Immutable published state of one hook's chain.
+
+    Readers grab the whole object in one reference read; mutators build a
+    fresh one and publish it with a single assignment.  ``fn`` is the bare
+    fused closure (depth-1 collapses to the program's JIT'd function — the
+    PR-1 fast path); ``counted_fn`` wraps it with invocation accounting for
+    raw-closure (``invoke_fn``) callers, while ``invoke()`` counts inline."""
+    links: Tuple[PolicyLink, ...]
+    fn: Optional[Callable[[bytearray], Optional[int]]]
+    counted_fn: Optional[Callable[[bytearray], Optional[int]]]
+    fingerprint: int
+
+
+_EMPTY_CHAIN = _Chain(links=(), fn=None, counted_fn=None, fingerprint=0)
+
+
+class PolicyRuntime:
+    """One runtime per process, holding maps + per-section link chains."""
+
+    def __init__(self, *, use_interpreter: bool = False,
+                 printk_log_max: int = 4096):
         self.maps = MapRegistry()
-        self._attached: Dict[str, Optional[LoadedProgram]] = {
-            s: None for s in CTX_TYPES}
+        self._chains: Dict[str, _Chain] = {s: _EMPTY_CHAIN for s in CTX_TYPES}
         self._epoch = 0
+        self._next_link_id = 1
         self._load_lock = threading.Lock()
         self.stats = RuntimeStats()
         self.use_interpreter = use_interpreter
-        self._printk_log: List[int] = []
+        # bounded ring buffer — chatty policies on long-running jobs must
+        # not leak memory through trace_printk (same leak class the
+        # decision log fixed in PR 1); maxlen=None keeps an unbounded log
+        self._printk_log: Deque[int] = collections.deque(
+            maxlen=printk_log_max)
+        # the link created/replaced by the legacy load()/reload() API, per
+        # section — keeps single-program call sites working unchanged
+        self._legacy: Dict[str, Optional[PolicyLink]] = {
+            s: None for s in CTX_TYPES}
 
-    # ---- loading ---------------------------------------------------------
-    def load(self, program: Program) -> LoadedProgram:
-        """Verify + JIT + attach.  Raises VerifierError on rejection."""
+    # ---- section validation ---------------------------------------------
+    @staticmethod
+    def sections() -> List[str]:
+        """Valid hook section names (tuner / profiler / net / env)."""
+        return list(CTX_TYPES)
+
+    def _check_section(self, section: str) -> str:
+        if section not in self._chains:
+            raise KeyError(
+                f"unknown section {section!r}; valid sections: "
+                f"{', '.join(CTX_TYPES)}")
+        return section
+
+    # ---- link API (the redesigned surface) -------------------------------
+    def attach(self, program: Program, *, priority: int = 0,
+               flags: int = 0) -> PolicyLink:
+        """Verify + JIT ``program`` and append a link to its section chain.
+
+        Links order by ascending ``priority`` (attach order breaks ties);
+        lower numbers take precedence.  Raises VerifierError on rejection
+        (chain untouched)."""
         with self._load_lock:
             lp = self._prepare(program)
-            self._attach(lp)
+            link = self._new_link(lp, priority, flags)
+            self._publish({program.section: self._chain_links(
+                program.section) + [link]})
+            self.stats.loads += 1
+            return link
+
+    def load_bundle(self, programs: Sequence[Program],
+                    priorities: Optional[Sequence[int]] = None
+                    ) -> List[PolicyLink]:
+        """Transactionally replace the chains of every section in ``programs``.
+
+        All programs are verified — and their map declarations shape-checked
+        against the registry AND against each other — before anything is
+        mutated; any rejection (VerifierError or MapError) propagates with
+        every previous chain fully attached, the epoch untouched, and no
+        maps created.  On success all affected chains swap under ONE epoch
+        bump — multi-policy updates are atomic end-to-end.
+
+        ``priorities`` parallels ``programs`` (default: bundle order, i.e.
+        earlier programs take precedence within their section)."""
+        programs = list(programs)
+        if not programs:
+            return []
+        if priorities is None:
+            priorities = list(range(len(programs)))
+        if len(priorities) != len(programs):
+            raise ValueError("priorities must parallel programs")
+        with self._load_lock:
+            # phase 1 — verify everything + dry-run map shapes (against the
+            # registry and against same-name declarations elsewhere in the
+            # bundle): no side effects until the whole bundle is known good
+            vinfos = []
+            bundle_decls: Dict[str, tuple] = {}
+            for p in programs:
+                try:
+                    vinfos.append(verify_with_info(p))
+                except VerifierError:
+                    self.stats.rejected += 1
+                    raise
+                for d in p.maps:
+                    self.maps.validate(d.name, d.kind, key_size=d.key_size,
+                                       value_size=d.value_size,
+                                       max_entries=d.max_entries)
+                    shape = self.maps._shape_of(d.kind, d.key_size,
+                                                d.value_size, d.max_entries)
+                    seen = bundle_decls.setdefault(d.name, shape)
+                    if seen != shape:
+                        raise MapError(
+                            f"map {d.name}: bundle programs declare it "
+                            f"with different shapes")
+            # phase 2 — resolve + JIT, reusing the phase-1 verifier info
+            # (cannot reject: everything is already checked)
+            links: List[PolicyLink] = []
+            new_chains: Dict[str, List[PolicyLink]] = {}
+            for p, prio, vinfo in zip(programs, priorities, vinfos):
+                lp = self._prepare(p, vinfo=vinfo)
+                link = self._new_link(lp, prio, 0)
+                links.append(link)
+                new_chains.setdefault(p.section, []).append(link)
+            # phase 3 — the swap: every affected section's previous chain is
+            # replaced wholesale, one epoch bump total
+            t0 = time.perf_counter_ns()
+            for section, chain_links in new_chains.items():
+                for old in self._chains[section].links:
+                    old._attached = False
+                self._legacy[section] = None
+            self._publish(new_chains)
+            self.stats.swap_ns_last = time.perf_counter_ns() - t0
+            self.stats.bundles += 1
+            self.stats.loads += len(links)
+            return links
+
+    def chain(self, section: str) -> Tuple[PolicyLink, ...]:
+        """The attached links for ``section`` in execution-precedence order."""
+        return self._chains[self._check_section(section)].links
+
+    def chain_fingerprint(self, section: str) -> int:
+        """Stable identity of the current chain composition — joins the
+        epoch in decision-cache keys so chain changes can never alias."""
+        return self._chains[self._check_section(section)].fingerprint
+
+    # ---- legacy single-program shims -------------------------------------
+    def load(self, program: Program) -> LoadedProgram:
+        """Verify + JIT + attach (single-slot semantics: a second ``load``
+        on the same section replaces the first).  Raises VerifierError on
+        rejection.  New code should prefer :meth:`attach`."""
+        with self._load_lock:
+            lp = self._swap_legacy(program)
             self.stats.loads += 1
             return lp
 
     def reload(self, program: Program) -> LoadedProgram:
-        """Atomic hot-reload of the program attached at ``program.section``.
+        """Atomic hot-reload of the legacy slot at ``program.section``.
 
         If verification fails the old policy keeps running (never an
         unverified state)."""
         with self._load_lock:
             # a VerifierError propagates (counted once, in _prepare) and
             # leaves the old policy attached
-            lp = self._prepare(program)
-            t0 = time.perf_counter_ns()
-            self._attach(lp)                     # the atomic swap
-            self.stats.swap_ns_last = time.perf_counter_ns() - t0
+            t_swap = [0]
+            lp = self._swap_legacy(program, t_swap)
+            self.stats.swap_ns_last = t_swap[0]
             self.stats.reloads += 1
             return lp
 
@@ -101,13 +353,183 @@ class PolicyRuntime:
         except VerifierError as e:
             return e
 
-    def _prepare(self, program: Program) -> LoadedProgram:
+    def detach(self, section: str) -> None:
+        """Detach *every* link on ``section`` (one epoch bump).
+
+        Raises KeyError listing valid sections on an unknown name.  For
+        surgical removal detach the individual :class:`PolicyLink`."""
+        self._check_section(section)
+        with self._load_lock:
+            for link in self._chains[section].links:
+                link._attached = False
+            self._legacy[section] = None
+            self._publish({section: []})
+
+    def attached(self, section: str) -> Optional[LoadedProgram]:
+        """Highest-precedence program on ``section`` (None if chain empty)."""
+        links = self._chains[self._check_section(section)].links
+        return links[0]._loaded if links else None
+
+    def is_attached(self, section: str) -> bool:
+        return bool(self._chains[self._check_section(section)].links)
+
+    # ---- mutation internals (call with _load_lock held) -------------------
+    def _new_link(self, lp: LoadedProgram, priority: int,
+                  flags: int) -> PolicyLink:
+        link = PolicyLink(self, self._next_link_id, lp.section, priority,
+                          flags, lp)
+        self._next_link_id += 1
+        return link
+
+    def _chain_links(self, section: str) -> List[PolicyLink]:
+        return list(self._chains[section].links)
+
+    def _swap_legacy(self, program: Program,
+                     t_swap: Optional[List[int]] = None) -> LoadedProgram:
+        lp = self._prepare(program)
+        section = program.section
+        legacy = self._legacy[section]
+        t0 = time.perf_counter_ns()
+        if legacy is not None and legacy._attached:
+            legacy._loaded = lp
+            self._publish({section: self._chain_links(section)})
+        else:
+            link = self._new_link(lp, 0, 0)
+            self._legacy[section] = link
+            self._publish({section: self._chain_links(section) + [link]})
+        if t_swap is not None:
+            t_swap[0] = time.perf_counter_ns() - t0
+        return lp
+
+    def _detach_link(self, link: PolicyLink) -> None:
+        with self._load_lock:
+            if not link._attached:
+                raise LinkError(f"{link!r} is already detached")
+            link._attached = False
+            if self._legacy[link.section] is link:
+                self._legacy[link.section] = None
+            remaining = [l for l in self._chains[link.section].links
+                         if l is not link]
+            self._publish({link.section: remaining})
+
+    def _replace_link(self, link: PolicyLink,
+                      program: Program) -> LoadedProgram:
+        if program.section != link.section:
+            raise LinkError(
+                f"cannot replace {link.section!r} link with a "
+                f"{program.section!r} program")
+        with self._load_lock:
+            if not link._attached:
+                raise LinkError(f"{link!r} is detached; attach a new link")
+            # verify-then-CAS: _prepare raises on rejection with the old
+            # program still attached and the epoch untouched
+            lp = self._prepare(program)
+            t0 = time.perf_counter_ns()
+            link._loaded = lp
+            self._publish({link.section: self._chain_links(link.section)})
+            self.stats.swap_ns_last = time.perf_counter_ns() - t0
+            self.stats.replaces += 1
+            return lp
+
+    def _publish(self, new_chains: Dict[str, List[PolicyLink]]) -> None:
+        """Rebuild + publish the given chains, then bump the epoch once.
+
+        Each chain is published by a single reference assignment (the CAS);
+        the epoch bump comes second — same ordering as the seed runtime —
+        so epoch observers never see a new epoch with an old chain."""
+        for section, links in new_chains.items():
+            links = sorted(links, key=lambda l: (l.priority, l.link_id))
+            fn = self._fuse(section, links)
+            self._chains[section] = _Chain(
+                links=tuple(links),
+                fn=fn,
+                counted_fn=None if fn is None else self._counted(fn),
+                fingerprint=self._fingerprint(links))
+        self._epoch += 1
+
+    @staticmethod
+    def _fingerprint(links: List[PolicyLink]) -> int:
+        if not links:
+            return 0
+        return hash(tuple((l.link_id, l.priority, l.name, id(l._loaded))
+                          for l in links)) & 0x7FFFFFFFFFFFFFFF
+
+    # ---- chain fusion ----------------------------------------------------
+    def _fuse(self, section: str,
+              links: List[PolicyLink]) -> Optional[Callable]:
+        """Pre-fuse the chain into one bare closure ``fn(buf) -> ret``.
+
+        Depth-1 collapses to the program's JIT'd closure itself — zero
+        wrapper frames, so the PR-1 fast path survives chain-aware
+        dispatch exactly.  Invocation counting lives in ``invoke()`` and
+        in the ``counted_fn`` wrapper handed out by ``invoke_fn()``."""
+        if not links:
+            return None
+        fns = [l._loaded.fn for l in links]
+        if len(fns) == 1:
+            return fns[0]
+        if section in _FIRST_WINS_SECTIONS:
+            # "link deferred" means "link left every output zero", so the
+            # outputs are zeroed at chain entry — a reused ctx with stale
+            # outputs from a previous decision must not masquerade as the
+            # first link's decision
+            span = _output_span(section)
+            if span is not None:
+                lo, hi = span
+                zeros = bytes(hi - lo)
+
+                def chain_first_wins(buf: bytearray) -> int:
+                    buf[lo:hi] = zeros
+                    ret = 0
+                    for fn in fns:
+                        ret = fn(buf)
+                        if buf[lo:hi] != zeros:
+                            return ret      # first non-deferring decision
+                    return ret              # every program deferred
+                return chain_first_wins
+            offs = _output_offsets(section)
+
+            def chain_first_wins_sparse(buf: bytearray) -> int:
+                for off in offs:
+                    buf[off:off + 8] = _ZERO8
+                ret = 0
+                for fn in fns:
+                    ret = fn(buf)
+                    for off in offs:
+                        if buf[off:off + 8] != _ZERO8:
+                            return ret
+                return ret
+            return chain_first_wins_sparse
+        run_order = list(reversed(fns)) if section in _LAST_WRITER_SECTIONS \
+            else fns
+
+        def chain_all(buf: bytearray) -> int:
+            ret = 0
+            for fn in run_order:
+                ret = fn(buf)
+            return ret
+        return chain_all
+
+    def _counted(self, fn: Callable) -> Callable:
+        """Invocation-accounting wrapper for raw-closure callers, so
+        ``invoke_fn()`` users land in ``stats.invocations`` like
+        ``invoke()`` callers do."""
+        stats = self.stats
+
+        def counted(buf: bytearray) -> int:
+            stats.invocations += 1
+            return fn(buf)
+        return counted
+
+    # ---- loading ---------------------------------------------------------
+    def _prepare(self, program: Program, vinfo=None) -> LoadedProgram:
         t0 = time.perf_counter()
-        try:
-            vinfo = verify_with_info(program)
-        except VerifierError:
-            self.stats.rejected += 1
-            raise
+        if vinfo is None:
+            try:
+                vinfo = verify_with_info(program)
+            except VerifierError:
+                self.stats.rejected += 1
+                raise
         t1 = time.perf_counter()
         resolved = self._resolve_maps(program)
         if self.use_interpreter:
@@ -119,10 +541,6 @@ class PolicyRuntime:
             fn = compile_program(program, resolved,
                                  printk=self._printk_log.append, info=vinfo)
         t2 = time.perf_counter()
-        # the epoch bumps in _attach, after the swap is visible: a reader
-        # that observes the new epoch must also observe the new program,
-        # or an epoch-keyed cache could memoize the old policy's decision
-        # under the new epoch (stale forever)
         return LoadedProgram(program=program, fn=fn, epoch=self._epoch + 1,
                              verify_ms=(t1 - t0) * 1e3, jit_ms=(t2 - t1) * 1e3,
                              loaded_at=time.time())
@@ -133,45 +551,40 @@ class PolicyRuntime:
             out[d.name] = self.maps.create(
                 d.name, d.kind, key_size=d.key_size,
                 value_size=d.value_size, max_entries=d.max_entries)
+            if getattr(d, "shared", False):
+                # the paper's cross-plugin map: pin it so other programs
+                # (and host-side tooling) find it by name
+                self.maps.pin(d.name)
         return out
 
-    def _attach(self, lp: LoadedProgram) -> None:
-        # single reference assignment = the CAS of the paper; the epoch
-        # bump comes second (same ordering as detach) so epoch observers
-        # never see a new epoch with the old program still attached
-        self._attached[lp.section] = lp
-        self._epoch += 1
-
-    def detach(self, section: str) -> None:
-        # detaching changes what invoke() runs, so it is an epoch event too:
-        # epoch-keyed caches (collectives dispatch) must not serve decisions
-        # made by the no-longer-attached policy
-        with self._load_lock:
-            self._attached[section] = None
-            self._epoch += 1
-
     # ---- invocation --------------------------------------------------------
-    def attached(self, section: str) -> Optional[LoadedProgram]:
-        return self._attached[section]
-
     @property
     def epoch(self) -> int:
         return self._epoch
 
     def invoke(self, section: str, ctx: PolicyContextValues) -> Optional[int]:
-        """Run the attached program for ``section``; None if nothing attached."""
-        lp = self._attached[section]    # atomic read
-        if lp is None:
+        """Run the fused chain for ``section``; None if nothing attached.
+
+        Multi-link first-wins chains zero the ctx output fields at entry
+        (a reused ctx must not leak a previous decision into defer
+        detection); depth-1 chains run the program on the ctx as-is."""
+        try:
+            fn = self._chains[section].fn   # atomic read of published chain
+        except KeyError:
+            self._check_section(section)    # raises with valid sections
+            raise
+        if fn is None:
             return None
         self.stats.invocations += 1
-        return lp.fn(ctx.buf)
+        return fn(ctx.buf)
 
-    def invoke_fn(self, section: str) -> Optional[Callable[[bytearray], int]]:
-        """Grab the raw closure (hot-path callers cache nothing across calls:
-        each call re-reads the attached slot, so hot-reload takes effect on
-        the next call — T3 semantics)."""
-        lp = self._attached[section]
-        return None if lp is None else lp.fn
+    def invoke_fn(self, section: str
+                  ) -> Optional[Callable[[bytearray], int]]:
+        """Grab the fused chain closure (hot-path callers cache nothing
+        across calls: each call re-reads the published chain, so hot-reload
+        takes effect on the next call — T3 semantics).  The returned
+        closure counts into ``stats.invocations`` like ``invoke()`` does."""
+        return self._chains[self._check_section(section)].counted_fn
 
     # ---- convenience -------------------------------------------------------
     def printk_log(self) -> List[int]:

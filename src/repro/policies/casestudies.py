@@ -49,7 +49,11 @@ def bad_channels(ctx):
 
 # ---- composability: profiler -> shared map -> tuner ------------------------
 
-adapt_map = map_decl("adapt_map", kind="array", value_size=24, max_entries=64)
+# shared=True pins the EMA map: the profiler writes it, the tuner reads
+# it, and host-side tooling fetches it by name (registry.get_pinned) — the
+# paper's cross-plugin map, explicit rather than incidental
+adapt_map = map_decl("adapt_map", kind="array", value_size=24, max_entries=64,
+                     shared=True)
 # value layout: [0]=ema latency ns, [1]=current channels, [2]=sample count
 
 

@@ -130,3 +130,23 @@ def test_env_plugin_sets_defaults():
     assert disp.config.max_channels == 16
     d = disp.decide(CollType.ALL_REDUCE, 1 << 20, 8, axis_name="data")
     assert d.channels == 4
+
+
+def test_env_plugin_attached_after_construction_takes_effect():
+    """apply_env() re-runs the env chain on demand: an env program attached
+    *after* the dispatcher was built (construction ran with zeroed topology
+    and no program) still reconfigures the knobs — and the decision cache
+    keys on the knobs, so stale defaults are never served."""
+    from repro.policies import env_defaults
+    rt = PolicyRuntime()
+    disp = reset_dispatcher(runtime=rt)          # no env program yet
+    assert not disp.apply_env(n_pods=2)          # nothing attached: no-op
+    d0 = disp.decide(CollType.ALL_REDUCE, 1 << 20, 8, axis_name="data")
+    assert d0.channels == 8                      # built-in default
+
+    rt.attach(env_defaults.program)              # operator attaches env late
+    assert disp.apply_env(n_devices=512, tp=16, dp=16, n_pods=2)
+    assert disp.config.default_channels == 4
+    assert disp.config.max_channels == 16
+    d1 = disp.decide(CollType.ALL_REDUCE, 1 << 20, 8, axis_name="data")
+    assert d1.channels == 4                      # new knobs, not a stale hit
