@@ -1,10 +1,14 @@
 """Quick perf smoke (seconds, not minutes) — CI guard for the fast path.
 
-Asserts the two ISSUE-1 performance invariants cheaply:
+Asserts the fast-path performance invariants cheaply:
 
 * the specializing (v2) JIT tier is not slower than the interpreter tier
-  on any Table 1 policy, and
-* a warm decision-cache hit is not slower than an uncached dispatch.
+  on any Table 1 policy,
+* a warm decision-cache hit is not slower than an uncached dispatch, and
+* on the loop-heavy bounded-loop policy, v2's native-``while`` codegen
+  clears the interpreter by the LOOP_SPEEDUP_MIN factor — a regression
+  to per-iteration dispatch (or an accidental fall back to the
+  dispatcher loop) trips this threshold.
 
 Prints a one-line JSON perf record (and reports rows when driven by
 ``benchmarks.run``).  Run standalone:
@@ -26,6 +30,10 @@ from repro.policies import table1 as T
 MiB = 1 << 20
 N_CALLS = 4_000
 POLICIES = [T.noop, T.static_override, T.size_aware, T.slo_enforcer]
+# loop-heavy policy: v2 must beat the interpreter by at least this factor
+# (the gap is ~10x in practice; 2x leaves headroom for machine noise while
+# still catching a collapse of the native-loop fast path)
+LOOP_SPEEDUP_MIN = 2.0
 
 
 def _bench(fn, buf, n=N_CALLS):
@@ -60,6 +68,29 @@ def smoke() -> dict:
             "jit_v2_ns": round(jit_ns, 1), "interp_ns": round(vm_ns, 1),
             "speedup": round(vm_ns / jit_ns, 2), "ok": ok}
         rec["ok"] = rec["ok"] and ok
+
+    # loop-heavy policy: interpreter vs JIT v2 with a real speedup floor
+    from repro.policies.loops import latency_argmin_tuner
+
+    def _seed_loop(rt):
+        m = rt.maps.get("config_lat_map")
+        for k in range(0, m.max_entries, 5):
+            m.update_u64(k, 900 + 13 * k, slot=0)
+
+    rt_jit = PolicyRuntime()
+    lp = rt_jit.load(latency_argmin_tuner.program)
+    _seed_loop(rt_jit)
+    rt_vm = PolicyRuntime(use_interpreter=True)
+    lp_vm = rt_vm.load(latency_argmin_tuner.program)
+    _seed_loop(rt_vm)
+    jit_ns = _bench(lp.fn, ctx.buf, n=N_CALLS // 4)
+    vm_ns = _bench(lp_vm.fn, ctx.buf, n=N_CALLS // 16)
+    ok = jit_ns * LOOP_SPEEDUP_MIN <= vm_ns
+    rec["policies"]["latency_argmin_tuner[loop]"] = {
+        "jit_v2_ns": round(jit_ns, 1), "interp_ns": round(vm_ns, 1),
+        "speedup": round(vm_ns / jit_ns, 2),
+        "min_speedup": LOOP_SPEEDUP_MIN, "ok": ok}
+    rec["ok"] = rec["ok"] and ok
 
     rt = PolicyRuntime()
     rt.load(T.static_override.program)

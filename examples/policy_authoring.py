@@ -11,6 +11,7 @@ with map state threaded functionally (the beyond-paper tier).
 import jax
 import jax.numpy as jnp
 
+from repro.compat import enable_x64
 from repro.core import (PolicyRuntime, VerifierError, assemble, make_ctx,
                         map_decl, policy, verify)
 from repro.core.jaxc import compile_jax, ctx_to_vec, map_to_array
@@ -72,7 +73,7 @@ def main():
     @jax.jit
     def training_step_with_policy(map_state, msg_bytes):
         vec = ctx_to_vec(make_ctx("tuner").buf)
-        with jax.enable_x64(True):
+        with enable_x64(True):
             vec = vec.at[fields.index("msg_size")].set(
                 msg_bytes.astype(jnp.uint64))
         ret, vec_out, maps_out = fn(vec, {"hist": map_state})
@@ -82,12 +83,15 @@ def main():
     rt = PolicyRuntime()
     rt.load(prog)
     state = map_to_array(rt.maps.get("hist"))
-    for mib in (0.5, 8, 64, 512):
-        nch, state = training_step_with_policy(
-            state, jnp.uint32(int(mib * MiB) & 0xFFFFFFFF))
-        print(f"== in-graph (jaxc): {mib:>5} MiB -> channels={int(nch)}")
+    # x64 scope wraps the jit calls (0.4.x boundary-canonicalization rule)
+    with enable_x64(True):
+        for mib in (0.5, 8, 64, 512):
+            nch, state = training_step_with_policy(
+                state, jnp.uint32(int(mib * MiB) & 0xFFFFFFFF))
+            print(f"== in-graph (jaxc): {mib:>5} MiB -> channels={int(nch)}")
+    import numpy as np
     print(f"   bucket histogram carried as device state: "
-          f"{[int(x) for x in state[:, 0]]}")
+          f"{[int(x) for x in np.asarray(state)[:, 0]]}")
 
 
 if __name__ == "__main__":

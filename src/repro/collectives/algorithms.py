@@ -37,7 +37,8 @@ from ..core.context import Proto
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    from ..compat import axis_size
+    return axis_size(axis_name)
 
 
 def wire_dtypes(protocol: int, dtype) -> Tuple[object, object]:

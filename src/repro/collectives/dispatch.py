@@ -72,6 +72,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
 from ..core.context import Algo, AxisKind, CollType, Proto, make_ctx
 from ..core.runtime import PolicyRuntime, global_runtime
 from . import algorithms as alg
@@ -321,7 +322,7 @@ class CollectiveDispatcher:
     # ------------------------------------------------------------------
     def _dispatch(self, coll: int, x, axis_name: str, axis_kind: int,
                   **kw):
-        n = lax.axis_size(axis_name)
+        n = axis_size(axis_name)
         if n == 1 and coll in (CollType.ALL_REDUCE,):
             return x
         size_bytes = int(x.size) * x.dtype.itemsize

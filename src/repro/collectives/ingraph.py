@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size, enable_x64
 from ..core.context import Algo, CollType, POLICY_CONTEXT, Proto
 from ..core.jaxc import compile_jax, map_to_array
 from ..core.maps import MapRegistry
@@ -66,7 +67,7 @@ class InGraphSelector:
         """Run the verified policy in-graph.
 
         Returns (algo_idx int32, channels int32, new_state)."""
-        with jax.enable_x64(True):
+        with enable_x64(True):
             vec = jnp.zeros((len(_FIELDS),), jnp.uint64)
             vec = vec.at[_IDX["coll_type"]].set(jnp.uint64(coll))
             vec = vec.at[_IDX["msg_size"]].set(jnp.uint64(msg_bytes))
@@ -89,7 +90,7 @@ class InGraphSelector:
                    comm_id: int = 0, latency_ns=None):
         """Policy-selected all-reduce via lax.switch (all branches lowered
         once; selection is a runtime scalar)."""
-        n = lax.axis_size(axis_name)
+        n = axis_size(axis_name)
         algo, ch, state = self.decide(
             state, coll=CollType.ALL_REDUCE,
             msg_bytes=int(x.size) * x.dtype.itemsize, n=n,

@@ -1,0 +1,84 @@
+"""jax version-compat shims.
+
+The public jax surface this repo leans on has drifted across releases:
+
+* ``shard_map`` — spelled ``jax.shard_map`` on new releases, but only
+  importable as ``jax.experimental.shard_map.shard_map`` on the 0.4.x
+  line this container ships (the bare ``jax.shard_map`` attribute raises
+  ``AttributeError`` through the deprecation machinery).
+* ``enable_x64`` — the scoped 64-bit context manager is ``jax.enable_x64``
+  on new releases and ``jax.experimental.enable_x64`` on 0.4.x.
+
+Import both from here instead of from ``jax`` directly::
+
+    from repro.compat import enable_x64, shard_map
+
+``have_x64()`` probes (once) whether the scoped context actually yields
+64-bit dtypes — tests use it to skip the in-graph tier cleanly on builds
+where neither spelling works.
+"""
+
+from __future__ import annotations
+
+import jax
+
+def _adapt_shard_map(fn):
+    """Translate the ``check_vma`` kwarg (new spelling) to ``check_rep``
+    (0.4.x spelling) when the underlying shard_map predates the rename."""
+    import functools
+    import inspect
+    try:
+        params = set(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):  # pragma: no cover — exotic builds
+        return fn
+    if "check_vma" in params or "check_rep" not in params:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return fn(*args, **kwargs)
+    return wrapped
+
+
+try:  # new spelling first: jax.shard_map (>= 0.5)
+    shard_map = jax.shard_map
+    if not callable(shard_map):  # pragma: no cover — defensive
+        raise AttributeError("jax.shard_map is not callable")
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+shard_map = _adapt_shard_map(shard_map)
+
+try:  # new spelling: jax.enable_x64
+    enable_x64 = jax.enable_x64
+    if not callable(enable_x64):  # pragma: no cover — defensive
+        raise AttributeError("jax.enable_x64 is not callable")
+except AttributeError:
+    from jax.experimental import enable_x64  # noqa: F401
+
+try:  # new spelling: jax.lax.axis_size
+    axis_size = jax.lax.axis_size
+    if not callable(axis_size):  # pragma: no cover — defensive
+        raise AttributeError("jax.lax.axis_size is not callable")
+except AttributeError:
+    def axis_size(axis_name):
+        """Static size of a named mesh axis (0.4.x spelling)."""
+        from jax import core
+        frame = core.axis_frame(axis_name)
+        return getattr(frame, "size", frame)
+
+_HAVE_X64 = None
+
+
+def have_x64() -> bool:
+    """True iff ``with enable_x64(True):`` really yields uint64 arrays."""
+    global _HAVE_X64
+    if _HAVE_X64 is None:
+        try:
+            import jax.numpy as jnp
+            with enable_x64(True):
+                _HAVE_X64 = jnp.asarray(1, jnp.uint64).dtype == jnp.uint64
+        except Exception:
+            _HAVE_X64 = False
+    return bool(_HAVE_X64)

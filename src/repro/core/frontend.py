@@ -12,9 +12,10 @@ Supported subset (anything else -> CompileError):
   ``st[i]``, ``+ - * // % & | ^ << >>``, comparisons, ``min``/``max``,
   ``not``/``and``/``or`` in conditions
 * statements: assignment, augmented assignment, ``if``/``elif``/``else``,
-  ``return <expr>``, ``for i in range(<const>)`` (fully unrolled — this is
-  how bounded loops pass the back-edge-free verifier, exactly like
-  ``#pragma unroll`` in eBPF C)
+  ``return <expr>``, ``for i in range(<const>)`` — trip counts up to 64
+  are fully unrolled (``#pragma unroll`` style); larger constant bounds
+  compile to real loop bytecode whose trip count the verifier *proves*
+  (constant-stepped counter against a constant limit, per-loop fuel cap)
 * map ops (only as statement / simple-assignment RHS):
   ``st = m.lookup(key)``; ``if st is None: ...``; ``st[i] = expr``;
   ``m.update(key, (v0, v1, ...))``; ``m.delete(key)``;
@@ -36,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 from .helpers import HELPER_IDS
 from .isa import Insn, STACK_SIZE
 from .program import MapDecl, Program
+from .verifier import LOOP_FUEL_CAP as _LOOP_FUEL_CAP
 
 M64 = (1 << 64) - 1
 
@@ -100,6 +102,8 @@ class _Compiler(ast.NodeVisitor):
 
         self.insns: List[object] = []      # Insn | ("jmp", op, dst, src/imm, label)
         self.scalars: Dict[str, int] = {}  # local name -> stack offset (fp-rel)
+        self._loop_slots: Dict[str, int] = {}  # counter slots kept for reuse
+        self._active_loops: set = set()        # loop vars currently live
         self.ptrs: Dict[str, int] = {}     # local name -> callee-saved reg
         self.ptr_regs = list(_PTR_REGS)
         self.sp = 0                        # bytes of stack used (scratch grows down)
@@ -423,32 +427,118 @@ class _Compiler(ast.NodeVisitor):
         return e
 
     def _compile_for(self, stmt: ast.For) -> None:
-        # for i in range(CONST): fully unrolled
+        # for i in range(CONST): unrolled up to _MAX_UNROLL iterations;
+        # larger trip counts compile to real bounded-loop bytecode
+        # (counter slot + header test + latch increment) that the
+        # verifier proves terminating
         it = stmt.iter
         if not (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
                 and it.func.id == "range"):
-            raise CompileError("only `for i in range(const)` loops supported")
-        bounds = [self._const_value(a) for a in it.args]
+            raise CompileError("only `for i in range(...)` loops supported")
+        bounds = []
+        for a in it.args:
+            v = self._const_of(a)
+            if v is None:
+                raise CompileError(
+                    "`for` bound must be a compile-time constant "
+                    f"(got `{ast.unparse(a)}`): loops are either fully "
+                    f"unrolled (trip count <= {_MAX_UNROLL}) or compiled "
+                    "to bounded-loop bytecode whose trip count the "
+                    "verifier proves — a constant-stepped counter tested "
+                    "against a constant limit, capped at "
+                    f"{_LOOP_FUEL_CAP} iterations.  Hoist the bound into "
+                    "a module-level integer or pass it via "
+                    "`policy(consts={...})`")
+            bounds.append(v)
         if len(bounds) == 1:
             lo, hi, step = 0, bounds[0], 1
         elif len(bounds) == 2:
             lo, hi, step = bounds[0], bounds[1], 1
         else:
             lo, hi, step = bounds
+        if step == 0:
+            raise CompileError("range() step must not be zero")
         count = max(0, (hi - lo + (step - (1 if step > 0 else -1))) // step)
-        if count > _MAX_UNROLL:
-            raise CompileError(
-                f"loop bound {count} exceeds unroll limit {_MAX_UNROLL}")
         if not isinstance(stmt.target, ast.Name):
             raise CompileError("loop target must be a simple name")
         iname = stmt.target.id
         if stmt.orelse:
             raise CompileError("for-else not supported")
-        for k in range(lo, hi, step):
-            self.consts[iname] = k
-            # also make it readable as an expression constant
-            self.compile_body(stmt.body)
+        if iname in self._active_loops:
+            raise CompileError(
+                f"loop variable {iname!r} shadows an enclosing loop's "
+                "variable; nested loops need distinct names")
+        if iname in self.scalars or iname in self.ptrs:
+            # the unrolled path would silently read the stale local inside
+            # the body (scalars shadow consts) and the real-loop path
+            # would clobber it as the counter — reject loudly instead
+            raise CompileError(
+                f"loop variable {iname!r} shadows an existing local; use "
+                "a distinct name for the loop")
+        self._active_loops.add(iname)
+        try:
+            if count <= _MAX_UNROLL:
+                for k in range(lo, hi, step):
+                    self.consts[iname] = k
+                    # also make it readable as an expression constant
+                    self.compile_body(stmt.body)
+                self.consts.pop(iname, None)
+                return
+            self._compile_real_loop(stmt, iname, lo, hi, step)
+        finally:
+            self._active_loops.discard(iname)
+
+    def _compile_real_loop(self, stmt: ast.For, iname: str,
+                           lo: int, hi: int, step: int) -> None:
+        """Emit header/latch loop bytecode in the exact shape the
+        verifier's trip-bound prover recognizes: counter in an 8-byte
+        stack slot, unsigned `jge counter, hi` exit in the header, one
+        `load; add64i +step; store` increment in the latch."""
+        if step < 0:
+            raise CompileError(
+                "descending `range()` loops above the unroll limit are "
+                "not supported: the verifier proves bounds for ascending "
+                "constant-step counters only — iterate ascending and "
+                "index with `hi - 1 - i`")
+        if lo < 0 or hi < 0:
+            raise CompileError("negative `range()` bounds not supported "
+                               "above the unroll limit")
+        if not hi < (1 << 31):
+            raise CompileError(
+                f"loop limit {hi} does not fit a 32-bit immediate")
+        # the verifier recovers the constant init (lo), so its proven
+        # bound equals the real trip count
+        trip = (hi - lo + step - 1) // step
+        if trip > _LOOP_FUEL_CAP:
+            raise CompileError(
+                f"loop trip bound {trip} exceeds the verifier's per-loop "
+                f"fuel cap {_LOOP_FUEL_CAP}; shrink the loop or split the "
+                "scan across invocations")
+        slot = self._loop_slots.get(iname)
+        if slot is None:
+            slot = self.alloc_stack(8)
+            self._loop_slots[iname] = slot
+        self.scalars[iname] = slot
+        # a same-named module const is shadowed for good, exactly like
+        # the unrolled path: post-loop reads of the loop variable fail
+        # loudly in both (the slot's exit value is not Python's last
+        # iterate, and the stale const would be silently wrong)
         self.consts.pop(iname, None)
+
+        t = _TEMP_REGS[0]
+        self._load_const(t, lo)
+        self.emit("stxdw", dst=10, src=t, off=slot - STACK_SIZE)
+        header, done = _Label(), _Label()
+        self.place(header)
+        self.emit("ldxdw", dst=t, src=10, off=slot - STACK_SIZE)
+        self.emit_jmp("jge", t, hi, done, imm_form=True)
+        self.compile_body(stmt.body)
+        self.emit("ldxdw", dst=t, src=10, off=slot - STACK_SIZE)
+        self.emit("add64i", dst=t, imm=step)
+        self.emit("stxdw", dst=10, src=t, off=slot - STACK_SIZE)
+        self.emit_ja(header)
+        self.place(done)
+        self.scalars.pop(iname, None)
 
     def _compile_assign(self, tgt: ast.AST, value: ast.AST) -> None:
         # pointer-producing RHS: m.lookup(key)

@@ -8,34 +8,42 @@ tuner decision -> ``lax.switch`` branch) then happens per step with zero
 host round-trips and zero retraces.
 
 Why verification makes this possible:
-  * the CFG is a forward-only DAG  -> classic if-conversion: execute every
-    instruction under a predicate, writes select via ``jnp.where``
+  * the CFG decomposes into forward regions plus *natural loops with
+    proven trip bounds* (shared :mod:`repro.core.cfg` layer) -> forward
+    regions if-convert classically (execute every block under a
+    predicate, writes select via ``jnp.where``), and each loop lowers to
+    one ``lax.fori_loop`` running exactly ``bound + 1`` iterations with
+    the machine state (regs / stack / ctx / maps / exit predicates)
+    functionally threaded through the carry — early exits simply drop
+    the ``active`` predicate so remaining iterations are no-ops
   * every memory insn has a statically known region (ctx / stack / one
     specific map)  -> each load/store lowers to a typed gather/scatter
-  * bounded stack, no unbounded loops -> fixed-size traced state
+  * bounded stack, bounded loops -> fixed-size traced state, zero
+    retraces across decisions
 
-Supported surface (JaxcError otherwise): ALU64/32, jumps, ctx loads/stores
-(8-byte fields), stack loads/stores (static or dynamic offset), ARRAY maps
-(u64-slot granularity), helpers map_lookup_elem / map_update_elem /
-ema_update.  Hash maps and wall-clock helpers are host-tier-only.
+Supported surface (JaxcError otherwise): ALU64/32, jumps, bounded loops,
+ctx loads/stores (8-byte fields), stack loads/stores (static or dynamic
+offset), ARRAY maps (u64-slot granularity), helpers map_lookup_elem /
+map_update_elem / ema_update.  Hash maps and wall-clock helpers are
+host-tier-only.
 
-State threading: the compiled function has signature
-
-    fn(ctx: uint32[n_fields*2] as u64 pairs? NO — see below]
-
-We pass ctx and maps as uint64 arrays under ``jax.enable_x64(True)``
-(scoped to the policy body; the surrounding model code stays 32-bit).
+We pass ctx and maps as uint64 arrays under the scoped 64-bit context
+(``repro.compat.enable_x64``); the surrounding model code stays 32-bit.
+On the jax 0.4.x line the x64 scope must also wrap the *outer* jit call
+boundary (see tests/test_jaxc.py) so inputs are not canonicalized down.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from . import helpers as H
+from ..compat import enable_x64
+from .cfg import CFG, Loop
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   is_imm_form, is_jump_cond, is_load, is_store, jump_base,
                   mem_size)
@@ -53,9 +61,7 @@ class JaxcError(Exception):
 # pointer encoding (mirrors the host JIT):
 #   stack: 1<<32 | byte_off
 #   ctx:   2<<32 | byte_off
-#   map value (array map mi): (16+mi)<<40 | key<<8 ... key fits 32 bits?
-# we need key (u32) and offset; use: (16+mi)<<56 | key<<24 | byte_off
-# (byte_off < 2^24, key < 2^32 truncated to 2^32... keep key<=2^31)
+#   map value (array map mi): (16+mi)<<56 | key<<24 | byte_off
 _STACK_TAG = 1 << 32
 _CTX_TAG = 2 << 32
 
@@ -79,6 +85,312 @@ def check_supported(prog: Program) -> None:
                 "available in-graph")
 
 
+def _u64(x):
+    return jnp.asarray(x, jnp.uint64)
+
+
+def _pred_or(ps):
+    p = ps[0]
+    for q in ps[1:]:
+        p = jnp.logical_or(p, q)
+    return p
+
+
+def _sel(p, new, old):
+    return jnp.where(p, new, old)
+
+
+class _Lowerer:
+    """One policy invocation lowered block-by-block under predicates.
+
+    Machine state lives in attributes (regs/stack/ctx/maps/done/ret) so
+    straight-line emission stays imperative; loops snapshot the state
+    into a ``fori_loop`` carry and restore from the final carry."""
+
+    def __init__(self, prog: Program, vinfo, ctx_vec, map_arrays):
+        self.prog = prog
+        self.vinfo = vinfo
+        self.cfg: CFG = vinfo.cfg
+        self.decls = list(prog.maps)
+        self.map_index = {d.name: i for i, d in enumerate(self.decls)}
+        self.map_names = [d.name for d in self.decls]
+
+        self.ctx = jnp.asarray(ctx_vec, jnp.uint64)
+        self.maps = {k: jnp.asarray(v, jnp.uint64)
+                     for k, v in map_arrays.items()}
+        self.regs: List[jnp.ndarray] = [_u64(0)] * 11
+        self.regs[1] = _u64(_CTX_TAG)
+        self.regs[FP_REG] = _u64(_STACK_TAG | STACK_SIZE)
+        self.stack = jnp.zeros(STACK_SIZE // 8, jnp.uint64)  # u64 slots
+        self.done = jnp.asarray(False)
+        self.ret = _u64(0)
+
+    # ---- entry -----------------------------------------------------------
+    def run(self):
+        top = {h for h, L in self.cfg.loops.items() if L.parent is None}
+        out = self._exec_region(
+            list(range(self.cfg.n)), {0: [jnp.asarray(True)]}, expand=top)
+        if out:
+            # every top-level out-edge is an exit (routed via done/ret);
+            # residue is a CFG bug — raise even under python -O
+            raise JaxcError(f"unrouted edges at top level: {sorted(out)}")
+        return self.ret, self.ctx, self.maps
+
+    # ---- region execution ------------------------------------------------
+    def _exec_region(self, block_list: List[int],
+                     incoming: Dict[int, list], expand) -> Dict[int, list]:
+        region = set(block_list)
+        inc: Dict[int, list] = {b: list(ps) for b, ps in incoming.items()}
+        out: Dict[int, list] = {}
+        consumed = set()
+
+        def route(src: int, tgt: int, p) -> None:
+            if tgt == CFG.EXIT:
+                return  # exit insns route through done/ret directly
+            if tgt in region and tgt > src:
+                inc.setdefault(tgt, []).append(p)
+            else:
+                # leaves the region, or is a back edge to its header
+                out.setdefault(tgt, []).append(p)
+
+        for b in block_list:
+            if b in consumed:
+                continue
+            ps = inc.get(b)
+            if b in expand:
+                L = self.cfg.loops[b]
+                consumed |= L.body
+                if ps is None:
+                    continue  # statically unreachable loop
+                self._lower_loop(L, _pred_or(ps),
+                                 lambda tgt, p, b=b: route(b, tgt, p))
+                continue
+            if ps is None:
+                continue  # statically unreachable
+            self._exec_block(b, _pred_or(ps),
+                             lambda tgt, p, b=b: route(b, tgt, p))
+        return out
+
+    def _exec_block(self, b: int, P, route) -> None:
+        insns = self.prog.insns
+        start, end = self.cfg.ranges[b]
+        for pc in range(start, end):
+            insn = insns[pc]
+            op = insn.op
+            if op == "exit":
+                take = jnp.logical_and(P, jnp.logical_not(self.done))
+                self.ret = _sel(take, self.regs[0], self.ret)
+                self.done = jnp.logical_or(self.done, P)
+                return
+            if op == "ja":
+                route(self.cfg.succs[b][0], P)
+                return
+            if is_jump_cond(op):
+                a = self.regs[insn.dst]
+                v = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+                    else self.regs[insn.src]
+                c = _cmp_jax(jump_base(op), a, v)
+                taken, fall = self.cfg.succs[b]
+                route(taken, jnp.logical_and(P, c))
+                route(fall, jnp.logical_and(P, jnp.logical_not(c)))
+                return
+            self._exec_straight(pc, insn, P)
+        route(self.cfg.succs[b][0], P)  # fall-through block
+
+    # ---- straight-line instructions --------------------------------------
+    def _wreg(self, P, idx: int, val) -> None:
+        self.regs[idx] = _sel(P, jnp.asarray(val, jnp.uint64),
+                              self.regs[idx])
+
+    def _exec_straight(self, pc: int, insn: Insn, P) -> None:
+        op = insn.op
+        if op == "lddw":
+            self._wreg(P, insn.dst, jnp.uint64(insn.imm & M64))
+            return
+        if op == "ldmap":
+            mi = self.map_index[insn.map_name]
+            self._wreg(P, insn.dst, jnp.uint64(_map_tag(mi)))
+            return
+        if op == "call":
+            ret = self._call(pc, insn, P)
+            self._wreg(P, 0, ret)
+            for r in (1, 2, 3, 4, 5):
+                self._wreg(P, r, jnp.uint64(0))
+            return
+        if is_alu(op):
+            a = self.regs[insn.dst]
+            b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+                else self.regs[insn.src]
+            self._wreg(P, insn.dst,
+                       _alu_jax(alu_base(op), alu_width(op), a, b))
+            return
+        if is_load(op):
+            self._exec_load(pc, insn, P)
+            return
+        if is_store(op):
+            self._exec_store(pc, insn, P)
+            return
+        raise JaxcError(f"unhandled op {op}")
+
+    # ---- memory -----------------------------------------------------------
+    def _stack_load(self, ptr, size: int):
+        slot = ((ptr & jnp.uint64(0xFFFFFFFF)) >> 3).astype(jnp.int32)
+        word = self.stack[slot]
+        if size == 8:
+            return word
+        sh = ((ptr & jnp.uint64(7)) * 8).astype(jnp.uint64)
+        mask = jnp.uint64((1 << (8 * size)) - 1)
+        return (word >> sh) & mask
+
+    def _stack_store(self, P, ptr, size: int, val) -> None:
+        off = ptr & jnp.uint64(0xFFFFFFFF)
+        slot = (off >> 3).astype(jnp.int32)
+        word = self.stack[slot]
+        if size == 8:
+            new = jnp.asarray(val, jnp.uint64)
+        else:
+            sh = ((off & jnp.uint64(7)) * 8).astype(jnp.uint64)
+            mask = jnp.uint64((1 << (8 * size)) - 1)
+            new = ((word & ~(mask << sh))
+                   | ((jnp.asarray(val, jnp.uint64) & mask) << sh))
+        self.stack = self.stack.at[slot].set(_sel(P, new, word))
+
+    @staticmethod
+    def _mapval_decode(ptr):
+        mi = ((ptr >> jnp.uint64(56)) - 16).astype(jnp.int32)
+        key = ((ptr >> jnp.uint64(24)) & jnp.uint64(0xFFFFFFFF)).astype(
+            jnp.int32)
+        off = ptr & jnp.uint64(0xFFFFFF)
+        return mi, key, off
+
+    def _exec_load(self, pc: int, insn: Insn, P) -> None:
+        size = mem_size(insn.op)
+        region, mname, base = self.vinfo.mem_info[pc]
+        ptr = self.regs[insn.src] + jnp.uint64(insn.off & M64)
+        if region == "ctx":
+            off = base + insn.off  # static (verified)
+            val = self.ctx[off // 8]
+            if size < 8:
+                val = val & jnp.uint64((1 << (8 * size)) - 1)
+        elif region == "stack":
+            val = self._stack_load(ptr, size)
+        else:  # mapval
+            _, key, off = self._mapval_decode(ptr)
+            slot = (off >> jnp.uint64(3)).astype(jnp.int32)
+            val = self.maps[mname][key, slot]
+            if size < 8:
+                val = val & jnp.uint64((1 << (8 * size)) - 1)
+        self._wreg(P, insn.dst, val)
+
+    def _exec_store(self, pc: int, insn: Insn, P) -> None:
+        size = mem_size(insn.op)
+        region, mname, base = self.vinfo.mem_info[pc]
+        val = jnp.uint64(insn.imm & M64) if not insn.op.startswith("stx") \
+            else self.regs[insn.src]
+        ptr = self.regs[insn.dst] + jnp.uint64(insn.off & M64)
+        if region == "ctx":
+            slot = (base + insn.off) // 8
+            self.ctx = self.ctx.at[slot].set(_sel(P, val, self.ctx[slot]))
+        elif region == "stack":
+            self._stack_store(P, ptr, size, val)
+        else:  # mapval
+            _, key, off = self._mapval_decode(ptr)
+            slot = (off >> jnp.uint64(3)).astype(jnp.int32)
+            old = self.maps[mname][key, slot]
+            self.maps[mname] = self.maps[mname].at[key, slot].set(
+                _sel(P, val, old))
+
+    # ---- helpers -----------------------------------------------------------
+    def _call(self, pc: int, insn: Insn, P):
+        hid = insn.imm
+        # the verifier proved exactly which map reaches this call site
+        mname = self.vinfo.call_map.get(pc)
+        if mname is None:
+            raise JaxcError(f"helper at insn {pc} has no static map binding")
+        mi = self.map_index[mname]
+        d = self.decls[mi]
+        key = self._stack_load(self.regs[2], d.key_size).astype(jnp.uint64)
+        valid = key < jnp.uint64(d.max_entries)
+        ki = jnp.minimum(key, jnp.uint64(d.max_entries - 1)).astype(jnp.int32)
+        if hid == 1:  # map_lookup_elem(map, key*)
+            enc = (jnp.uint64(_map_tag(mi))
+                   | ((key & jnp.uint64(0xFFFFFFFF)) << jnp.uint64(24)))
+            return jnp.where(valid, enc, jnp.uint64(0))
+        if hid == 2:  # map_update_elem(map, key*, value*, flags)
+            n_slots = d.value_size // 8
+            row = [self._stack_load(self.regs[3] + jnp.uint64(8 * s), 8)
+                   for s in range(n_slots)]
+            newrow = jnp.stack(row)
+            old = self.maps[d.name][ki]
+            take = jnp.logical_and(P, valid)
+            self.maps[d.name] = self.maps[d.name].at[ki].set(
+                jnp.where(take, newrow, old))
+            return jnp.where(valid, jnp.uint64(0), jnp.uint64(M64))
+        if hid == 64:  # ema_update(map, key*, sample, weight)
+            w = jnp.maximum(self.regs[4], jnp.uint64(1))
+            old = self.maps[d.name][ki, 0]
+            new = (old * (w - jnp.uint64(1)) + self.regs[3]) // w
+            take = jnp.logical_and(P, valid)
+            self.maps[d.name] = self.maps[d.name].at[ki, 0].set(
+                jnp.where(take, new, old))
+            return new
+        raise JaxcError(f"helper {hid} not supported in-graph")
+
+    # ---- loops -------------------------------------------------------------
+    def _snapshot(self, active, exit_preds):
+        return (active, tuple(self.regs), self.stack, self.ctx,
+                tuple(self.maps[n] for n in self.map_names),
+                self.done, self.ret, tuple(exit_preds))
+
+    def _restore(self, carry):
+        active, regs, stack, ctx, maps_t, done, ret, exps = carry
+        self.regs = list(regs)
+        self.stack = stack
+        self.ctx = ctx
+        self.maps = {n: m for n, m in zip(self.map_names, maps_t)}
+        self.done = done
+        self.ret = ret
+        return active, list(exps)
+
+    def _lower_loop(self, L: Loop, entry_pred, route) -> None:
+        """One natural loop -> one ``lax.fori_loop``.
+
+        The carry threads (active, regs, stack, ctx, maps, done, ret,
+        per-exit-target predicates).  Each iteration executes header +
+        body under ``active``; taking an exit edge latches that target's
+        predicate and drops out of ``active``, so later iterations leave
+        the state untouched.  The verifier's trip bound caps the counter:
+        ``bound`` body passes plus one final header visit that takes the
+        exit test."""
+        h = L.header
+        bound = self.vinfo.loop_bounds[h]
+        body_blocks = sorted(L.body)
+        exit_targets = list(L.exit_targets)
+        inner = {M.header for M in self.cfg.inner_loops(L)}
+
+        false_ = jnp.asarray(False)
+        init = self._snapshot(entry_pred, [false_] * len(exit_targets))
+
+        def body(_k, carry):
+            active, exps = self._restore(carry)
+            out = self._exec_region(body_blocks, {h: [active]},
+                                    expand=inner)
+            next_active = _pred_or(out.pop(h, [false_]))
+            new_exps = []
+            for tgt, e in zip(exit_targets, exps):
+                new_exps.append(jnp.logical_or(
+                    e, _pred_or(out.pop(tgt, [false_]))))
+            if out:
+                raise JaxcError(
+                    f"loop at block {h}: unrouted edges {sorted(out)}")
+            return self._snapshot(next_active, new_exps)
+
+        final = lax.fori_loop(0, bound + 1, body, init)
+        _, exps = self._restore(final)
+        for tgt, e in zip(exit_targets, exps):
+            route(tgt, e)
+
+
 def compile_jax(prog: Program):
     """Return (fn, map_names).
 
@@ -88,204 +400,12 @@ def compile_jax(prog: Program):
     """
     check_supported(prog)
     vinfo = verify_with_info(prog)
-    insns = prog.insns
-    decls = list(prog.maps)
-    map_index = {d.name: i for i, d in enumerate(decls)}
-    n_fields = prog.ctx_type.size // 8
-
-    def u64(x):
-        return jnp.asarray(x, jnp.uint64)
 
     def run(ctx_vec, map_arrays: Dict[str, jnp.ndarray]):
-        with jax.enable_x64(True):
-            ctx = jnp.asarray(ctx_vec, jnp.uint64)
-            maps = {k: jnp.asarray(v, jnp.uint64) for k, v in map_arrays.items()}
-            regs: List[jnp.ndarray] = [u64(0)] * 11
-            regs[1] = u64(_CTX_TAG)
-            regs[FP_REG] = u64(_STACK_TAG | STACK_SIZE)
-            stack = jnp.zeros(STACK_SIZE // 8, jnp.uint64)  # u64 slots
+        with enable_x64(True):
+            return _Lowerer(prog, vinfo, ctx_vec, map_arrays).run()
 
-            true_ = jnp.asarray(True)
-            false_ = jnp.asarray(False)
-            # incoming predicates per pc
-            incoming: Dict[int, List[jnp.ndarray]] = {0: [true_]}
-            ret = u64(0)
-            done = false_
-
-            def pred_or(ps):
-                p = ps[0]
-                for q in ps[1:]:
-                    p = jnp.logical_or(p, q)
-                return p
-
-            def sel(p, new, old):
-                return jnp.where(p, new, old)
-
-            def wreg(p, idx, val):
-                regs[idx] = sel(p, jnp.asarray(val, jnp.uint64), regs[idx])
-
-            def stack_load(ptr, size):
-                # u64-slot stack: require 8-aligned 8-byte access for dynamic
-                slot = ((ptr & jnp.uint64(0xFFFFFFFF)) >> 3).astype(jnp.int32)
-                word = stack[slot]
-                if size == 8:
-                    return word
-                sh = ((ptr & jnp.uint64(7)) * 8).astype(jnp.uint64)
-                mask = jnp.uint64((1 << (8 * size)) - 1)
-                return (word >> sh) & mask
-
-            def stack_store(p, ptr, size, val):
-                nonlocal stack
-                off = ptr & jnp.uint64(0xFFFFFFFF)
-                slot = (off >> 3).astype(jnp.int32)
-                word = stack[slot]
-                if size == 8:
-                    new = jnp.asarray(val, jnp.uint64)
-                else:
-                    sh = ((off & jnp.uint64(7)) * 8).astype(jnp.uint64)
-                    mask = jnp.uint64((1 << (8 * size)) - 1)
-                    new = (word & ~(mask << sh)) | ((jnp.asarray(val, jnp.uint64) & mask) << sh)
-                stack = stack.at[slot].set(sel(p, new, word))
-
-            def mapval_decode(ptr):
-                mi = ((ptr >> jnp.uint64(56)) - 16).astype(jnp.int32)
-                key = ((ptr >> jnp.uint64(24)) & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32)
-                off = (ptr & jnp.uint64(0xFFFFFF))
-                return mi, key, off
-
-            for pc, insn in enumerate(insns):
-                ps = incoming.get(pc)
-                if ps is None:
-                    continue  # statically unreachable
-                P = pred_or(ps)
-                op = insn.op
-
-                def flow_to(tgt, p):
-                    incoming.setdefault(tgt, []).append(p)
-
-                if op == "exit":
-                    take = jnp.logical_and(P, jnp.logical_not(done))
-                    ret = sel(take, regs[0], ret)
-                    done = jnp.logical_or(done, P)
-                    continue
-                if op == "ja":
-                    flow_to(pc + 1 + insn.off, P)
-                    continue
-                if op == "lddw":
-                    wreg(P, insn.dst, jnp.uint64(insn.imm & M64))
-                    flow_to(pc + 1, P)
-                    continue
-                if op == "ldmap":
-                    mi = map_index[insn.map_name]
-                    wreg(P, insn.dst, jnp.uint64(_map_tag(mi)))
-                    flow_to(pc + 1, P)
-                    continue
-                if op == "call":
-                    self_ret = self_call(pc, insn, P, regs, stack_load,
-                                         maps, decls)
-                    wreg(P, 0, self_ret)
-                    for r in (1, 2, 3, 4, 5):
-                        wreg(P, r, jnp.uint64(0))
-                    flow_to(pc + 1, P)
-                    continue
-                if is_alu(op):
-                    width = alu_width(op)
-                    base = alu_base(op)
-                    a = regs[insn.dst]
-                    b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
-                        else regs[insn.src]
-                    wreg(P, insn.dst, _alu_jax(base, width, a, b))
-                    flow_to(pc + 1, P)
-                    continue
-                if is_jump_cond(op):
-                    base = jump_base(op)
-                    a = regs[insn.dst]
-                    b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
-                        else regs[insn.src]
-                    c = _cmp_jax(base, a, b)
-                    flow_to(pc + 1 + insn.off, jnp.logical_and(P, c))
-                    flow_to(pc + 1, jnp.logical_and(P, jnp.logical_not(c)))
-                    continue
-                if is_load(op):
-                    size = mem_size(op)
-                    region, mname, base = vinfo.mem_info[pc]
-                    ptr = regs[insn.src] + jnp.uint64(insn.off & M64)
-                    if region == "ctx":
-                        off = base + insn.off  # static (verified)
-                        val = ctx[off // 8]
-                        if size < 8:
-                            val = val & jnp.uint64((1 << (8 * size)) - 1)
-                    elif region == "stack":
-                        val = stack_load(ptr, size)
-                    else:  # mapval
-                        mi, key, off = mapval_decode(ptr)
-                        slot = (off >> jnp.uint64(3)).astype(jnp.int32)
-                        val = maps[mname][key, slot]
-                        if size < 8:
-                            val = val & jnp.uint64((1 << (8 * size)) - 1)
-                    wreg(P, insn.dst, val)
-                    flow_to(pc + 1, P)
-                    continue
-                if is_store(op):
-                    size = mem_size(op)
-                    region, mname, base = vinfo.mem_info[pc]
-                    val = jnp.uint64(insn.imm & M64) if not op.startswith("stx") \
-                        else regs[insn.src]
-                    ptr = regs[insn.dst] + jnp.uint64(insn.off & M64)
-                    if region == "ctx":
-                        slot = (base + insn.off) // 8
-                        ctx = ctx.at[slot].set(sel(P, val, ctx[slot]))
-                    elif region == "stack":
-                        stack_store(P, ptr, size, val)
-                    else:  # mapval
-                        mi, key, off = mapval_decode(ptr)
-                        slot = (off >> jnp.uint64(3)).astype(jnp.int32)
-                        old = maps[mname][key, slot]
-                        maps[mname] = maps[mname].at[key, slot].set(
-                            sel(P, val, old))
-                    flow_to(pc + 1, P)
-                    continue
-                raise JaxcError(f"unhandled op {op}")
-
-            ret32 = ret
-            return ret32, ctx, maps
-
-    def self_call(pc: int, insn: Insn, P, regs, stack_load, maps, decls):
-        hid = insn.imm
-        # the verifier proved exactly which map reaches this call site
-        mname = vinfo.call_map[pc]
-        if mname is None:
-            raise JaxcError(f"helper at insn {pc} has no static map binding")
-        mi_static = map_index[mname]
-        d = decls[mi_static]
-        key = stack_load(regs[2], d.key_size).astype(jnp.uint64)
-        valid = key < jnp.uint64(d.max_entries)
-        ki = jnp.minimum(key, jnp.uint64(d.max_entries - 1)).astype(jnp.int32)
-        if hid == 1:  # map_lookup_elem(map, key*)
-            enc = (jnp.uint64(_map_tag(mi_static))
-                   | ((key & jnp.uint64(0xFFFFFFFF)) << jnp.uint64(24)))
-            return jnp.where(valid, enc, jnp.uint64(0))
-        if hid == 2:  # map_update_elem(map, key*, value*, flags)
-            n_slots = d.value_size // 8
-            row = [stack_load(regs[3] + jnp.uint64(8 * s), 8)
-                   for s in range(n_slots)]
-            newrow = jnp.stack(row)
-            old = maps[d.name][ki]
-            take = jnp.logical_and(P, valid)
-            maps[d.name] = maps[d.name].at[ki].set(
-                jnp.where(take, newrow, old))
-            return jnp.where(valid, jnp.uint64(0), jnp.uint64(M64))
-        if hid == 64:  # ema_update(map, key*, sample, weight)
-            w = jnp.maximum(regs[4], jnp.uint64(1))
-            old = maps[d.name][ki, 0]
-            new = (old * (w - jnp.uint64(1)) + regs[3]) // w
-            take = jnp.logical_and(P, valid)
-            maps[d.name] = maps[d.name].at[ki, 0].set(
-                jnp.where(take, new, old))
-            return new
-        raise JaxcError(f"helper {hid} not supported in-graph")
-
-    return run, [d.name for d in decls]
+    return run, [d.name for d in prog.maps]
 
 
 def _alu_jax(base: str, width: int, a, b):
@@ -323,7 +443,8 @@ def _alu_jax(base: str, width: int, a, b):
     if base == "arsh":
         sa = a.astype(jnp.int64) if width == 64 else \
             (a & mask32).astype(jnp.uint32).astype(jnp.int32)
-        return fin((sa >> sh.astype(sa.dtype)).astype(jnp.int64).astype(jnp.uint64))
+        return fin((sa >> sh.astype(sa.dtype)).astype(jnp.int64)
+                   .astype(jnp.uint64))
     if base == "neg":
         return fin(jnp.uint64(0) - a)
     raise JaxcError(f"ALU base {base}")
@@ -363,7 +484,7 @@ def map_to_array(m: BpfMap) -> jnp.ndarray:
     for i in range(m.max_entries):
         buf = m.lookup(i.to_bytes(4, "little"))
         out[i] = np.frombuffer(bytes(buf), dtype="<u8")
-    with jax.enable_x64(True):
+    with enable_x64(True):
         return jnp.asarray(out)
 
 
@@ -377,7 +498,7 @@ def array_to_map(arr, m: BpfMap) -> None:
 
 def ctx_to_vec(ctx_buf: bytearray) -> jnp.ndarray:
     import numpy as np
-    with jax.enable_x64(True):
+    with enable_x64(True):
         return jnp.asarray(np.frombuffer(bytes(ctx_buf), dtype="<u8"))
 
 

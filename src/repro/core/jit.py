@@ -61,6 +61,7 @@ import struct
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from . import helpers as H
+from .cfg import CFG, leaders as _leaders
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   is_imm_form, is_jump_cond, is_load, is_store, jump_base,
                   mem_size, s64)
@@ -82,17 +83,6 @@ _STRUCT_FMT = {1: "<B", 2: "<H", 4: "<I", 8: "<Q"}
 _STACK_ESCAPE_HIDS = frozenset(
     hid for hid, h in H.HELPERS.items()
     if any(a in (H.ARG_STACK_KEY, H.ARG_STACK_VALUE) for a in h.args))
-
-
-def _leaders(insns: List[Insn]) -> List[int]:
-    leaders = {0}
-    for pc, insn in enumerate(insns):
-        if insn.op == "ja" or is_jump_cond(insn.op):
-            leaders.add(pc + 1 + insn.off)
-            leaders.add(pc + 1)
-        if insn.op == "exit" and pc + 1 < len(insns):
-            leaders.add(pc + 1)
-    return sorted(x for x in leaders if x < len(insns))
 
 
 def _sval(expr: str) -> str:
@@ -207,61 +197,9 @@ class _Gen:
 # ---------------------------------------------------------------------------
 
 class _StructAbort(Exception):
-    """Structured reconstruction exceeded its duplication/nesting budget."""
-
-
-class _Blocks:
-    """Basic blocks of a forward-only CFG plus its post-dominator tree."""
-
-    EXIT = -1  # virtual exit node
-
-    def __init__(self, insns: List[Insn]):
-        self.insns = insns
-        self.leaders = _leaders(insns)
-        self.block_of = {pc: i for i, pc in enumerate(self.leaders)}
-        self.n = len(self.leaders)
-        self.ranges: List[Tuple[int, int]] = []
-        self.succs: List[List[int]] = []
-        for bi, start in enumerate(self.leaders):
-            end = self.leaders[bi + 1] if bi + 1 < self.n else len(insns)
-            self.ranges.append((start, end))
-            last = insns[end - 1]
-            if last.op == "exit":
-                self.succs.append([self.EXIT])
-            elif last.op == "ja":
-                self.succs.append([self._tgt(end - 1, last)])
-            elif is_jump_cond(last.op):
-                self.succs.append([self._tgt(end - 1, last), bi + 1])
-            else:
-                self.succs.append([bi + 1])
-        self._build_pdom()
-
-    def _tgt(self, pc: int, insn: Insn) -> int:
-        t = pc + 1 + insn.off
-        # a (necessarily unreachable) jump may target one-past-the-end;
-        # route it to the virtual exit so the pdom tree stays well formed
-        return self.block_of.get(t, self.EXIT)
-
-    def _build_pdom(self) -> None:
-        self.ipdom: Dict[int, int] = {self.EXIT: self.EXIT}
-        self.depth: Dict[int, int] = {self.EXIT: 0}
-        for b in range(self.n - 1, -1, -1):
-            ss = [s if s == self.EXIT or s < self.n else self.EXIT
-                  for s in self.succs[b]]
-            d = ss[0]
-            for s in ss[1:]:
-                d = self.ncpd(d, s)
-            self.ipdom[b] = d
-            self.depth[b] = self.depth[d] + 1
-
-    def ncpd(self, a: int, b: int) -> int:
-        """Nearest common post-dominator of two nodes."""
-        while a != b:
-            if self.depth[a] < self.depth[b]:
-                b = self.ipdom[b]
-            else:
-                a = self.ipdom[a]
-        return a
+    """Structured reconstruction exceeded its duplication/nesting budget
+    (or hit a shape — multi-exit loop, cross-loop edge — that the
+    structured emitter does not model)."""
 
 
 # ---- call-site specialized helper closures --------------------------------
@@ -353,7 +291,10 @@ class _GenV2(_Gen):
         super().__init__(prog)
         self.vinfo = vinfo
         self.resolved = resolved_maps
-        self.blocks = _Blocks(prog.insns)
+        # the verifier already built the shared CFG; reuse it so both
+        # tiers agree on block/loop structure by construction
+        self.blocks = getattr(vinfo, "cfg", None) or CFG(prog.insns)
+        self._loops: List[Tuple[int, int]] = []   # (header, exit) stack
         self.env_extra: Dict[str, object] = {}
         self.ctx_writes: Set[int] = set()
         self.ctx_reads: Set[int] = set()
@@ -658,18 +599,69 @@ class _GenV2(_Gen):
         return ("fall", bi + 1)
 
     # structured emission --------------------------------------------------
+    # Natural loops become native Python `while True:` constructs: an edge
+    # back to the innermost active header emits `continue`, an edge to its
+    # (single) exit target emits `break`.  Shapes the emitter does not
+    # model — multi-exit-target loops, edges crossing to an outer loop's
+    # header/exit — raise _StructAbort and fall back to the dispatcher.
     def emit_structured(self) -> None:
         self._budget = max(4 * self.blocks.n, 64)
-        self._chain(0, _Blocks.EXIT, 0)
+        self._loops = []
+        self._chain(0, CFG.EXIT, 0)
 
-    def _chain(self, b: int, end: int, depth: int) -> None:
+    def _loop_ctl(self, b: int) -> Optional[str]:
+        """`continue`/`break` if b is the innermost loop's header/exit;
+        abort on a cross-loop edge."""
+        if not self._loops:
+            return None
+        h, ex = self._loops[-1]
+        if b == h:
+            return "continue"
+        if b == ex:
+            return "break"
+        for oh, oex in self._loops[:-1]:
+            if b in (oh, oex):
+                raise _StructAbort  # multi-level break/continue
+        return None
+
+    def _enter_loop(self, b: int, depth: int) -> int:
+        """Emit `while True:` + the loop interior; return the exit block."""
+        L = self.blocks.loops[b]
+        targets = set(L.exit_targets)
+        if len(targets) != 1:
+            raise _StructAbort
+        ex = targets.pop()
+        self.w("while True:")
+        self._loops.append((b, ex))
+        self.indent += 1
+        before = len(self.lines)
+        self._chain(b, None, depth + 1, entering=True)
+        if len(self.lines) == before:
+            self.w("pass")  # pragma: no cover — loops always emit
+        self.indent -= 1
+        self._loops.pop()
+        return ex
+
+    def _chain(self, b: int, end: int, depth: int,
+               entering: bool = False) -> None:
         bl = self.blocks
         while b != end:
-            if b == _Blocks.EXIT or depth > 40 or self.indent > 50:
+            if b == CFG.EXIT or depth > 40 or self.indent > 50:
                 raise _StructAbort
             self._budget -= 1
             if self._budget < 0:
                 raise _StructAbort
+            if not entering:
+                ctl = self._loop_ctl(b)
+                if ctl is not None:
+                    self.w(ctl)
+                    return
+                if b in bl.loops:
+                    if any(h == b for h, _ in self._loops):
+                        raise _StructAbort  # re-entering an active loop
+                    b = self._enter_loop(b, depth)
+                    continue
+            entering = False
             term = self._block_term(b)
             kind = term[0]
             if kind == "exit":
@@ -679,6 +671,30 @@ class _GenV2(_Gen):
                 b = term[1]
                 continue
             _, cond, ncond, t, f = term
+            # conditional edges straight to the loop header/exit emit the
+            # control statement inline — ncpd does not cross back edges
+            t_ctl, f_ctl = self._loop_ctl(t), self._loop_ctl(f)
+            if t_ctl or f_ctl:
+                if t_ctl and f_ctl:
+                    self.w(f"if {cond}:")
+                    self.indent += 1
+                    self.w(t_ctl)
+                    self.indent -= 1
+                    self.w(f_ctl)
+                    return
+                if t_ctl:
+                    self.w(f"if {cond}:")
+                    self.indent += 1
+                    self.w(t_ctl)
+                    self.indent -= 1
+                    b = f
+                else:
+                    self.w(f"if {ncond}:")
+                    self.indent += 1
+                    self.w(f_ctl)
+                    self.indent -= 1
+                    b = t
+                continue
             m = bl.ncpd(t, f)
             if t == m and f == m:
                 b = m  # conditions are side-effect free: branch is a no-op
@@ -694,7 +710,7 @@ class _GenV2(_Gen):
                 self._arm(t, m, depth + 1)
                 self.w("else:")
                 self._arm(f, m, depth + 1)
-            if m == _Blocks.EXIT:
+            if m == CFG.EXIT:
                 return  # both arms returned
             b = m
 
@@ -706,10 +722,36 @@ class _GenV2(_Gen):
             self.w("pass")
         self.indent -= 1
 
+    # dispatcher fallback (loopy CFGs) -------------------------------------
+    def emit_dispatcher(self) -> None:
+        """v1-style `while True` block dispatcher, still driven by the v2
+        specialized per-insn emitters — the fallback when a CFG *with back
+        edges* resists structured reconstruction (a guard chain is a
+        single forward pass and cannot re-enter earlier blocks)."""
+        self.w("bb = 0")
+        self.w("while True:")
+        self.indent += 1
+        for bi in range(self.blocks.n):
+            self.w(f"if bb == {bi}:")
+            self.indent += 1
+            term = self._block_term(bi)
+            kind = term[0]
+            if kind == "exit":
+                self.emit_epilogue_return()
+            else:
+                if kind in ("ja", "fall"):
+                    self.w(f"bb = {term[1]}")
+                else:
+                    _, cond, _, t, f = term
+                    self.w(f"bb = {t} if {cond} else {f}")
+                self.w("continue")
+            self.indent -= 1
+        self.indent -= 1
+
     # guard-chain fallback -------------------------------------------------
     def emit_guard_chain(self) -> None:
         """Single forward pass over `if bb == i` guards — loop-free because
-        every verified jump goes forward."""
+        every jump in a back-edge-free CFG goes forward."""
         for bi in range(self.blocks.n):
             if bi > 0:
                 self.w(f"if bb == {bi}:")
@@ -968,8 +1010,11 @@ def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
         g.lines.clear()
         g.indent = 1
         structured = False
-        g.w("bb = 0")
-        g.emit_guard_chain()
+        if g.blocks.has_loops:
+            g.emit_dispatcher()
+        else:
+            g.w("bb = 0")
+            g.emit_guard_chain()
 
     body = _fix_empty_blocks(_dce(g.lines))
     lines = ["def _run(ctx):"] + _build_prologue(g, body) + body

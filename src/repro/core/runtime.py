@@ -533,7 +533,13 @@ class PolicyRuntime:
         t1 = time.perf_counter()
         resolved = self._resolve_maps(program)
         if self.use_interpreter:
-            vm = VM(program.insns, resolved, printk=self._printk_log.append)
+            # fuel: the verifier's proven dynamic-step bound (plus slack
+            # for helper-internal work) as runtime defense-in-depth; the
+            # proven bound always wins — clamping below it would fault
+            # verified programs on the interpreter tier only
+            fuel = max(4 * vinfo.max_steps, 4096)
+            vm = VM(program.insns, resolved,
+                    printk=self._printk_log.append, fuel=fuel)
             fn = vm.run
         else:
             # the verifier's region analysis feeds the specializing (v2)

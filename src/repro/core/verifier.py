@@ -7,9 +7,16 @@ branch refinement.  Guarantees (before any policy executes):
     (ctx struct, 512-byte stack, map value of declared size)
   * null safety — ``map_lookup_elem`` results are ``map_value_or_null`` and
     must be branch-tested against NULL before dereference
-  * bounded execution — the CFG must be forward-only (a DAG); loops must be
-    compile-time unrolled by the frontend (classic eBPF discipline).  Any
-    back edge is rejected as a potentially unbounded loop.
+  * bounded execution — a back edge is accepted only when it closes a
+    *natural* loop (shared CFG layer, :mod:`repro.core.cfg`) whose trip
+    count the verifier can bound: a monotone counter (stack slot or
+    register) stepped by a positive constant on every iteration and
+    tested against a constant — or verifier-interval-bounded — limit
+    with an ordered comparison, subject to a per-loop fuel cap
+    (kernel-5.3 / PREVAIL-style bounded loops).  Any other back edge is
+    rejected as a potentially unbounded loop; abstract interpretation
+    runs to a widened fixpoint so loop bodies are verified under the
+    join of all iterations.
   * ctx field permissions — input fields are read-only; writing one is
     rejected (the paper's "input-field write" bug class)
   * division safety — a divisor whose abstract interval contains 0 rejects
@@ -29,10 +36,12 @@ examples, e.g.::
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from typing import Dict, List, Optional, Tuple
 
 from . import helpers as H
+from .cfg import CFG, IrreducibleError, Loop
 from .context import CtxType
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   is_imm_form, is_jump_cond, is_load, is_store, jump_base,
@@ -40,6 +49,12 @@ from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
 from .program import MapDecl, Program
 
 U64_MAX = (1 << 64) - 1
+
+# bounded-loop limits (kernel-style): per-loop trip-count cap, and a cap on
+# abstract re-analysis so the widened fixpoint is itself bounded
+LOOP_FUEL_CAP = 1 << 16
+_WIDEN_AFTER = 2          # joins at one pc before widening kicks in
+_ANALYSIS_STEPS_PER_INSN = 256
 
 
 class VerifierError(Exception):
@@ -108,9 +123,25 @@ def join_vals(a: AVal, b: AVal) -> AVal:
     if a.kind in (SCALAR, CTX, STACK, MAPVAL):
         return AVal(a.kind, min(a.lo, b.lo), max(a.hi, b.hi), a.map_name)
     if a.kind == MAPVAL_OR_NULL:
+        if a.null_id == 0 or b.null_id == 0:
+            # a tainted (cross-iteration) pointer stays unrefinable
+            return AVal(MAPVAL_OR_NULL, 0, 0, a.map_name, 0)
         # different lookups joined: keep or-null with fresh id
         return AVal(MAPVAL_OR_NULL, 0, 0, a.map_name, next(_null_ids))
     return AVal(UNINIT)
+
+
+def widen_vals(old: AVal, new: AVal) -> AVal:
+    """Jump growing interval bounds to the domain extremes so joins at
+    loop headers reach a fixpoint (classic widen; branch refinement
+    inside the loop then narrows where it matters)."""
+    if old.kind != new.kind or old.map_name != new.map_name:
+        return new  # join already degraded the kind
+    if new.kind in (SCALAR, CTX, STACK, MAPVAL):
+        lo = new.lo if new.lo >= old.lo else 0
+        hi = new.hi if new.hi <= old.hi else U64_MAX
+        return AVal(new.kind, lo, hi, new.map_name, new.null_id)
+    return new
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +158,50 @@ class AState:
 def join_states(a: AState, b: AState) -> AState:
     return AState(tuple(join_vals(x, y) for x, y in zip(a.regs, b.regs)),
                   a.stack_init & b.stack_init)
+
+
+def widen_states(old: AState, new: AState) -> AState:
+    return AState(tuple(widen_vals(x, y) for x, y in zip(old.regs, new.regs)),
+                  new.stack_init)
+
+
+def states_equiv(a: AState, b: AState) -> bool:
+    """Equality modulo a consistent renaming of lookup-result null ids.
+
+    Helper calls mint a fresh ``null_id`` on every abstract visit, so loop
+    re-analysis never reaches literal equality; what must stabilize is the
+    *grouping* of or-null copies, which a bijection check captures."""
+    if a.stack_init != b.stack_init:
+        return False
+    fwd: Dict[int, int] = {}
+    bwd: Dict[int, int] = {}
+    for x, y in zip(a.regs, b.regs):
+        if x.kind != y.kind:
+            return False
+        if x.kind == MAPVAL_OR_NULL:
+            if x.map_name != y.map_name:
+                return False
+            if fwd.setdefault(x.null_id, y.null_id) != y.null_id:
+                return False
+            if bwd.setdefault(y.null_id, x.null_id) != x.null_id:
+                return False
+        elif x != y:
+            return False
+    return True
+
+
+def taint_or_null(st: AState) -> AState:
+    """Propagate along a back edge: lookup results from a previous
+    iteration can no longer be refined by this iteration's null checks
+    (a fresh check must follow a fresh lookup), so their ids collapse to
+    the unrefinable group 0."""
+    if not any(v.kind == MAPVAL_OR_NULL and v.null_id for v in st.regs):
+        return st
+    regs = tuple(
+        AVal(MAPVAL_OR_NULL, v.lo, v.hi, v.map_name, 0)
+        if v.kind == MAPVAL_OR_NULL and v.null_id else v
+        for v in st.regs)
+    return AState(regs, st.stack_init)
 
 
 # ---------------------------------------------------------------------------
@@ -203,49 +278,98 @@ class Verifier:
         self.prog = program
         self.ctx: CtxType = program.ctx_type
         self.map_decls: Dict[str, MapDecl] = {d.name: d for d in program.maps}
-        # pc -> (region kind, map_name) for every memory insn, and
-        # pc -> map_name for every helper call; consumed by jaxc, which
-        # needs static region types for if-converted codegen.
-        self.mem_info: Dict[int, Tuple[str, Optional[str]]] = {}
+        # pc -> (region kind, map_name, const offset or None) for every
+        # memory insn, and pc -> map_name for every helper call; consumed
+        # by the JIT and jaxc, which need static region types.
+        self.mem_info: Dict[int, Tuple[str, Optional[str],
+                                       Optional[int]]] = {}
         self.call_map: Dict[int, Optional[str]] = {}
+        # filled by verify(): shared CFG, proven per-loop trip bounds
+        # (header block -> iterations), and a whole-program dynamic step
+        # bound the interpreter uses as its fuel budget
+        self.cfg: Optional[CFG] = None
+        self.loop_bounds: Dict[int, int] = {}
+        self.max_steps: int = 0
 
     # -- public -------------------------------------------------------------
     def verify(self) -> None:
         insns = self.prog.insns
         if not insns:
             raise VerifierError("empty program")
-        self._check_cfg(insns)
+        self._check_structure(insns)
+        try:
+            self.cfg = CFG(insns)
+        except IrreducibleError as e:
+            raise VerifierError(
+                "back-edge detected: irreducible control flow (the edge "
+                "does not close a natural loop, so no trip bound can be "
+                "proven); restructure into a single-entry loop", e.pc)
 
         init_regs = [AVal(UNINIT)] * 11
         init_regs[1] = AVal(CTX, 0, 0)
         init_regs[FP_REG] = AVal(STACK, STACK_SIZE, STACK_SIZE)
         states: Dict[int, AState] = {0: AState(tuple(init_regs), 0)}
 
-        exits = 0
-        for pc in range(len(insns)):
-            st = states.get(pc)
-            if st is None:
-                continue  # unreachable
+        # worklist fixpoint, lowest pc first: on a loop-free CFG this is
+        # the classic single forward pass; back edges re-enqueue their
+        # header until joins (with widening) stabilize
+        budget = _ANALYSIS_STEPS_PER_INSN * len(insns)
+        joins: Dict[int, int] = {}
+        exit_pcs = set()
+        heap = [0]
+        queued = {0}
+        while heap:
+            pc = heapq.heappop(heap)
+            queued.discard(pc)
+            budget -= 1
+            if budget < 0:
+                raise VerifierError(
+                    "verifier analysis budget exhausted (abstract loop "
+                    "state did not stabilize)")
+            st = states[pc]
             for tgt, nst in self._step(pc, insns[pc], st):
                 if tgt == -1:
-                    exits += 1
+                    exit_pcs.add(pc)
                     continue
                 if tgt >= len(insns):
-                    raise VerifierError("jump falls off the end of the program", pc)
-                states[tgt] = nst if tgt not in states else join_states(states[tgt], nst)
-        if exits == 0:
+                    raise VerifierError(
+                        "jump falls off the end of the program", pc)
+                if tgt <= pc:
+                    nst = taint_or_null(nst)
+                old = states.get(tgt)
+                if old is None:
+                    states[tgt] = nst
+                else:
+                    joined = join_states(old, nst)
+                    # widening applies to loop re-analysis only: count
+                    # joins arriving along back edges — an ordinary
+                    # multi-way forward merge must keep its precise join
+                    # (widening there would e.g. pull a many-armed
+                    # divisor's lower bound down to 0)
+                    if tgt <= pc:
+                        joins[tgt] = joins.get(tgt, 0) + 1
+                        if joins[tgt] > _WIDEN_AFTER:
+                            joined = widen_states(old, joined)
+                    if states_equiv(joined, old):
+                        continue
+                    states[tgt] = joined
+                if tgt not in queued:
+                    queued.add(tgt)
+                    heapq.heappush(heap, tgt)
+        self._states = states
+        # loop proofs before the exit check: an infinite loop with no
+        # reachable exit is reported as the unbounded loop it is
+        self._prove_loop_bounds(states)
+        if not exit_pcs:
             raise VerifierError("no reachable exit instruction")
+        self.max_steps = self._step_bound()
 
-    # -- CFG ----------------------------------------------------------------
-    def _check_cfg(self, insns: List[Insn]) -> None:
+    # -- CFG structure -------------------------------------------------------
+    def _check_structure(self, insns: List[Insn]) -> None:
         for pc, insn in enumerate(insns):
             if insn.op == "ja" or is_jump_cond(insn.op):
                 tgt = pc + 1 + insn.off
-                if tgt <= pc:
-                    raise VerifierError(
-                        "back-edge detected: potentially unbounded loop "
-                        "(loops must be unrolled with a compile-time bound)", pc)
-                if tgt > len(insns):
+                if tgt > len(insns) or tgt < 0:
                     raise VerifierError("jump out of program bounds", pc)
         last = insns[-1]
         if last.op not in ("exit", "ja") and not is_jump_cond(last.op):
@@ -254,6 +378,313 @@ class Verifier:
         if is_jump_cond(last.op):
             raise VerifierError("program may fall through past the last insn",
                                 len(insns) - 1)
+
+    # -- bounded-loop proof ---------------------------------------------------
+    # A loop is accepted when some exit test, executed on every iteration,
+    # compares a monotone counter against a bounded limit:
+    #   * counter cell: an 8-byte stack slot at a constant offset, or a
+    #     register — written inside the loop only by `add64i cell, +step`
+    #     (slot form: load/add/store against the same slot), with at least
+    #     one increment on every path to every latch (dominance check)
+    #   * limit: a constant immediate, or a register whose abstract
+    #     interval at the exit test has a finite upper bound (e.g. a
+    #     clamped ctx field) — the "ctx-field-interval limit" form
+    #   * comparison: unsigned jlt/jle (continue) or jge/jgt (exit);
+    #     unsigned monotonicity then caps iterations at ceil(limit/step)
+    # Everything here reads the *fixpoint* region info (mem_info), so slot
+    # identity and constancy are verifier facts, not syntax guesses.
+
+    def _reject_loop(self, L: Loop, reason: str) -> None:
+        pc = L.back_edge_pcs[0]
+        header_pc = self.cfg.leaders[L.header]
+        raise VerifierError(
+            f"back-edge at insn {pc} targets insn {header_pc}: cannot "
+            f"prove a bounded trip count ({reason}); supported form: a "
+            "loop counter stepped by a positive constant every iteration "
+            "and tested with an unsigned jlt/jle/jge/jgt against a "
+            "constant or verifier-bounded limit — unroll the loop or "
+            "restructure it (unbounded loops are rejected)")
+
+    def _prove_loop_bounds(self, states: Dict[int, AState]) -> None:
+        for h in sorted(self.cfg.loops):
+            L = self.cfg.loops[h]
+            bound, why = self._prove_one_loop(L, states)
+            if bound is None:
+                self._reject_loop(L, why)
+            if bound > LOOP_FUEL_CAP:
+                self._reject_loop(
+                    L, f"proven trip bound {bound} exceeds the per-loop "
+                       f"fuel cap {LOOP_FUEL_CAP}")
+            self.loop_bounds[h] = bound
+
+    def _const_stack_off(self, pc: int, insn: Insn) -> Optional[int]:
+        """Absolute stack byte offset of a memory insn, if constant."""
+        info = self.mem_info.get(pc)
+        if info is None or info[0] != "stack" or info[2] is None:
+            return None
+        return info[2] + insn.off
+
+    def _trace_reg(self, block: int, upto_pc: int, reg: int, *,
+                   through_adds: bool = False):
+        """Resolve what ``reg`` holds at ``upto_pc``: ('stack', off) for a
+        fresh slot load, ('const', v), or ('reg', reg) if untouched in
+        the block.  Follows mov chains; anything else -> None.
+
+        ``through_adds`` (counter tracing only) skips `add64i reg, +c`
+        writes: a do-while exit test on the post-increment value still
+        tests the same monotone cell, and the +c only makes the tested
+        value larger, so the ceil(limit/step) bound stays sound.  Never
+        set for init/limit tracing, where the offset would be wrong."""
+        insns = self.prog.insns
+        start = self.cfg.ranges[block][0]
+        for pc in range(upto_pc - 1, start - 1, -1):
+            insn = insns[pc]
+            writes = self._writes_reg(insn, reg)
+            if not writes:
+                continue
+            if through_adds and insn.op == "add64i" and insn.dst == reg \
+                    and insn.imm > 0:
+                continue
+            if insn.op == "ldxdw" and insn.dst == reg:
+                off = self._const_stack_off(pc, insn)
+                if off is None:
+                    return None
+                # a later store in this block must not clobber the slot
+                for p2 in range(pc + 1, upto_pc):
+                    i2 = insns[p2]
+                    if is_store(i2.op) and self._overlaps_slot(p2, i2, off):
+                        return None
+                return ("stack", off)
+            if insn.op in ("mov64i", "lddw") and insn.dst == reg:
+                return ("const", u64(insn.imm))
+            if insn.op == "mov64" and insn.dst == reg and not \
+                    is_imm_form(insn.op):
+                return self._trace_reg(block, pc, insn.src)
+            return None
+        return ("reg", reg)
+
+    @staticmethod
+    def _writes_reg(insn: Insn, reg: int) -> bool:
+        op = insn.op
+        if op == "call":
+            return reg in (0, 1, 2, 3, 4, 5)
+        if op in ("lddw", "ldmap") or is_load(op) or is_alu(op):
+            return insn.dst == reg
+        return False
+
+    def _overlaps_slot(self, pc: int, insn: Insn, cell_off: int) -> bool:
+        """Could this store touch [cell_off, cell_off+8)?  Unknown-offset
+        stack stores conservatively overlap."""
+        info = self.mem_info.get(pc)
+        if info is None or info[0] != "stack":
+            return False
+        if info[2] is None:
+            return True
+        off = info[2] + insn.off
+        return off < cell_off + 8 and cell_off < off + mem_size(insn.op)
+
+    def _cell_steps(self, L: Loop, cell) -> Tuple[Optional[List[Tuple[int, int]]], str]:
+        """All in-loop writes to the counter cell.  Returns (list of
+        (block, step) increments, reason) — None list means disproven."""
+        insns = self.prog.insns
+        incs: List[Tuple[int, int]] = []
+        for b in sorted(L.body):
+            for pc in self.cfg.block_insns(b):
+                insn = insns[pc]
+                if cell[0] == "reg":
+                    if not self._writes_reg(insn, cell[1]):
+                        continue
+                    if insn.op == "add64i" and insn.dst == cell[1] \
+                            and 0 < insn.imm:
+                        incs.append((b, insn.imm))
+                        continue
+                    return None, (f"loop counter r{cell[1]} is modified at "
+                                  f"insn {pc} by {insn.op!r} (only "
+                                  "`add64i` with a positive constant is "
+                                  "a provable step)")
+                else:
+                    if not is_store(insn.op):
+                        continue
+                    if not self._overlaps_slot(pc, insn, cell[1]):
+                        continue
+                    step = self._slot_increment(b, pc, cell[1])
+                    if step is None:
+                        return None, (f"loop counter slot fp{cell[1] - STACK_SIZE:+d} "
+                                      f"is written at insn {pc} by something "
+                                      "other than `counter += positive "
+                                      "constant`")
+                    incs.append((b, step))
+        if not incs:
+            kind = (f"r{cell[1]}" if cell[0] == "reg"
+                    else f"slot fp{cell[1] - STACK_SIZE:+d}")
+            return None, (f"the tested value ({kind}) is never advanced "
+                          "inside the loop")
+        return incs, ""
+
+    def _slot_increment(self, block: int, store_pc: int,
+                        cell_off: int) -> Optional[int]:
+        """Match `ldxdw rX, [cell]; add64i rX, +c; stxdw [cell], rX`."""
+        insns = self.prog.insns
+        insn = insns[store_pc]
+        if insn.op != "stxdw":
+            return None
+        if self._const_stack_off(store_pc, insn) != cell_off:
+            return None
+        rx = insn.src
+        start = self.cfg.ranges[block][0]
+        step = None
+        for pc in range(store_pc - 1, start - 1, -1):
+            i2 = insns[pc]
+            if i2.op == "add64i" and i2.dst == rx and step is None \
+                    and 0 < i2.imm:
+                step = i2.imm
+                continue
+            if i2.op == "ldxdw" and i2.dst == rx:
+                if step is None:
+                    return None
+                if self._const_stack_off(pc, i2) != cell_off:
+                    return None
+                return step
+            if self._writes_reg(i2, rx):
+                return None
+            if is_store(i2.op) and self._overlaps_slot(pc, i2, cell_off):
+                return None
+        return None
+
+    def _cell_init(self, L: Loop, cell) -> Optional[int]:
+        """Constant value of the counter cell on loop entry, if provable:
+        the header has a single non-latch predecessor that dominates it,
+        and that block's last write to the cell is a constant."""
+        cfg = self.cfg
+        entries = [p for p in cfg.preds[L.header] if p not in L.body]
+        if len(entries) != 1 or not cfg.dominates(entries[0], L.header):
+            return None
+        p = entries[0]
+        insns = self.prog.insns
+        s, e = cfg.ranges[p]
+        for pc in range(e - 1, s - 1, -1):
+            insn = insns[pc]
+            if cell[0] == "reg":
+                if self._writes_reg(insn, cell[1]):
+                    if insn.op in ("mov64i", "lddw"):
+                        return u64(insn.imm)
+                    return None
+            elif is_store(insn.op) and self._overlaps_slot(pc, insn,
+                                                           cell[1]):
+                if insn.op == "stxdw" \
+                        and self._const_stack_off(pc, insn) == cell[1]:
+                    src = self._trace_reg(p, pc, insn.src)
+                    if src is not None and src[0] == "const":
+                        return src[1]
+                return None
+        return None
+
+    def _prove_one_loop(self, L: Loop, states
+                        ) -> Tuple[Optional[int], str]:
+        insns = self.prog.insns
+        cfg = self.cfg
+        # a latch the fixpoint never reached cannot re-enter the header
+        # (e.g. a body that returns on every path): the back edge is dead
+        # code, so the loop is vacuously bounded
+        latches = [lt for lt in L.latches
+                   if cfg.leaders[lt] in states]
+        if not latches:
+            return 0, ""
+        reasons: List[str] = []
+        for b in sorted(L.body):
+            pc = cfg.terminator_pc(b)
+            insn = insns[pc]
+            if not is_jump_cond(insn.op):
+                continue
+            taken, fall = cfg.succs[b]
+            t_out, f_out = taken not in L.body, fall not in L.body
+            if not (t_out ^ f_out):
+                continue  # not a loop exit test
+            base = jump_base(insn.op)
+            # normalize to "continue while counter < / <= limit"
+            if t_out and base in ("jge", "jgt"):
+                strict = base == "jge"       # continue while counter <  K
+            elif f_out and base in ("jlt", "jle"):
+                strict = base == "jlt"
+            else:
+                reasons.append(
+                    f"exit test at insn {pc} uses {base!r}; only unsigned "
+                    "jlt/jle (continue) or jge/jgt (exit) are provable")
+                continue
+            if not all(cfg.dominates(b, lt) for lt in latches):
+                reasons.append(
+                    f"exit test at insn {pc} is not executed on every "
+                    "iteration")
+                continue
+            cell = self._trace_reg(b, pc, insn.dst, through_adds=True)
+            if cell is None or cell[0] == "const":
+                reasons.append(
+                    f"exit test at insn {pc}: the tested value is not a "
+                    "recognizable counter (stack slot or register)")
+                continue
+            # limit: immediate, traced constant, or interval-bounded reg
+            if is_imm_form(insn.op):
+                limit = u64(insn.imm)
+            else:
+                src = self._trace_reg(b, pc, insn.src)
+                if src is not None and src[0] == "const":
+                    limit = src[1]
+                else:
+                    branch_st = states.get(pc)
+                    if branch_st is None:
+                        reasons.append(
+                            f"exit test at insn {pc} is unreachable, so "
+                            "its limit register has no verified interval")
+                        continue
+                    lv = branch_st.regs[insn.src]
+                    if lv.kind == SCALAR and lv.hi <= LOOP_FUEL_CAP:
+                        limit = lv.hi
+                    else:
+                        reasons.append(
+                            f"exit test at insn {pc}: limit register "
+                            f"r{insn.src} has no finite verified upper "
+                            f"bound (interval hi="
+                            f"{'∞' if lv.kind != SCALAR else lv.hi})")
+                        continue
+            incs, why = self._cell_steps(L, cell)
+            if incs is None:
+                reasons.append(why)
+                continue
+            if not any(all(cfg.dominates(ib, lt) for lt in latches)
+                       for ib, _ in incs):
+                reasons.append(
+                    "no counter increment lies on every path through the "
+                    "loop (a conditional `i += c` cannot prove progress)")
+                continue
+            step = min(s for _, s in incs)
+            # constant entry value tightens the bound (an unsigned counter
+            # of unknown start still bounds at ceil(limit/step))
+            init = self._cell_init(L, cell) or 0
+            span = limit - init
+            if strict:
+                bound = max(0, (span + step - 1) // step)
+            else:
+                bound = span // step + 1 if span >= 0 else 0
+            return bound, ""
+        return None, ("; ".join(reasons) if reasons
+                      else "no exit test compares a counter against a "
+                           "bounded limit")
+
+    def _step_bound(self) -> int:
+        """Dynamic-step upper bound for the interpreter's fuel check."""
+        cfg = self.cfg
+        total = 0
+        for b in range(cfg.n):
+            mult = 1
+            h = cfg.loop_of_block.get(b)
+            while h is not None:
+                mult *= self.loop_bounds.get(h, 1) + 1
+                h = cfg.loops[h].parent
+            s, e = cfg.ranges[b]
+            total += (e - s) * mult
+            if total > (1 << 31):
+                return 1 << 31
+        return total + 16
 
     # -- single abstract step ------------------------------------------------
     def _step(self, pc: int, insn: Insn, st: AState):
@@ -349,8 +780,9 @@ class Verifier:
         taken_tgt = pc + 1 + insn.off
         fall_tgt = pc + 1
 
-        # NULL-check refinement for map_value_or_null
-        if a.kind == MAPVAL_OR_NULL and base in ("jeq", "jne") \
+        # NULL-check refinement for map_value_or_null (id 0 = tainted by a
+        # back edge: the check still branches, but refines nothing)
+        if a.kind == MAPVAL_OR_NULL and a.null_id and base in ("jeq", "jne") \
                 and b.is_const and b.lo == 0:
             null_st = self._refine_null(st, a.null_id, to_null=True)
             ok_st = self._refine_null(st, a.null_id, to_null=False)
@@ -427,10 +859,16 @@ class Verifier:
     def _record_mem(self, pc: int, v: AVal) -> None:
         prev = self.mem_info.get(pc)
         cur = (v.kind, v.map_name, v.lo if v.lo == v.hi else None)
-        # joins can revisit a pc; region identity must be unique (it is for
-        # accepted programs — ambiguous regions fail _mem_region)
         if prev is None or prev == cur:
             self.mem_info[pc] = cur
+        elif prev[0] == cur[0] and prev[1] == cur[1]:
+            # loop re-analysis can revisit a pc with a widened offset: the
+            # region is still unique, but the offset is only static if
+            # every visit agrees (the JIT/jaxc key codegen off this)
+            self.mem_info[pc] = (cur[0], cur[1],
+                                 cur[2] if prev[2] == cur[2] else None)
+        # differing region kinds cannot survive to acceptance: the joined
+        # state degrades to uninit and _mem_region rejects it
 
     def _mem_region(self, pc: int, reg_idx: int, v: AVal, off: int, size: int,
                     *, is_write: bool) -> None:

@@ -25,7 +25,7 @@ from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   mem_size, s64, u32, u64)
 from .maps import BpfMap
 
-INSN_BUDGET = 1_000_000  # kernel-style dynamic budget
+INSN_BUDGET = 1_000_000  # kernel-style dynamic budget (default fuel)
 
 
 class VMError(Exception):
@@ -118,10 +118,17 @@ class VM:
     """Interprets one program against a ctx buffer and resolved maps."""
 
     def __init__(self, insns: List[Insn], resolved_maps: Dict[str, BpfMap],
-                 *, printk: Optional[Callable[[int], None]] = None):
+                 *, printk: Optional[Callable[[int], None]] = None,
+                 fuel: Optional[int] = None):
+        """``fuel`` caps dynamic instruction count.  The runtime passes the
+        verifier's proven step bound here so that even with bounded loops
+        accepted statically, the interpreter keeps a runtime
+        defense-in-depth: a bug in the bound proof (or a hand-run
+        unverified program) trips the fuel check instead of spinning."""
         self.insns = insns
         self.maps = resolved_maps
         self.printk = printk or (lambda v: None)
+        self.fuel = INSN_BUDGET if fuel is None else max(1, int(fuel))
 
     def run(self, ctx_buf: bytearray) -> int:
         regs: List[object] = [0] * 11
@@ -130,11 +137,14 @@ class VM:
         regs[FP_REG] = Ptr("stack", stack, STACK_SIZE)
         pc = 0
         steps = 0
+        fuel = self.fuel
         n = len(self.insns)
         while True:
             steps += 1
-            if steps > INSN_BUDGET:
-                raise VMError("instruction budget exceeded (runaway loop)")
+            if steps > fuel:
+                raise VMError(
+                    f"instruction budget exceeded ({fuel} steps): runaway "
+                    "loop (verifier bound violated or unverified program)")
             if not (0 <= pc < n):
                 raise VMError(f"pc {pc} out of program bounds")
             insn = self.insns[pc]

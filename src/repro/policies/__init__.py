@@ -3,6 +3,8 @@
 from .casestudies import (adapt_map, adapt_profiler, adapt_tuner,
                           bad_channels, env_defaults, net_accounting,
                           net_stats, ring_mid_v2)
+from .loops import (LOOP_POLICIES, histogram_bucket_tuner,
+                    latency_argmin_tuner)
 from .perf import (expert_chunked_a2a, grad_compress,
                    grad_compress_bidir, tpu_size_aware)
 from .table1 import (SAFE_POLICIES, adaptive_channels, bandwidth_probe,
@@ -11,7 +13,8 @@ from .table1 import (SAFE_POLICIES, adaptive_channels, bandwidth_probe,
 from .unsafe import UNSAFE_PROGRAMS
 
 __all__ = [
-    "SAFE_POLICIES", "UNSAFE_PROGRAMS", "adaptive_channels",
+    "LOOP_POLICIES", "SAFE_POLICIES", "UNSAFE_PROGRAMS",
+    "adaptive_channels", "histogram_bucket_tuner", "latency_argmin_tuner",
     "adapt_map", "adapt_profiler", "adapt_tuner", "bad_channels",
     "bandwidth_probe", "env_defaults", "latency_feedback", "native_baseline",
     "net_accounting", "net_stats", "noop", "ring_mid_v2", "size_aware",

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
+
 from ..collectives.dispatch import dispatcher
 from ..core.context import AxisKind
 from ..models import loss_fn
@@ -161,7 +163,7 @@ def make_train_step(cfg: ModelConfig, ax: MeshAxes, mesh: Mesh,
         metrics["loss"] = loss
         return params, opt_state, metrics
 
-    sm = jax.shard_map(
+    sm = shard_map(
         local_step, mesh=mesh,
         in_specs=(param_specs, opt_specs, bspecs),
         out_specs=(param_specs, opt_specs, metric_specs),
@@ -201,7 +203,7 @@ def make_serve_step(cfg: ModelConfig, ax: MeshAxes, mesh: Mesh,
         def local_prefill(params, batch):
             return prefill(params, batch, cfg, ax)
 
-        sm = jax.shard_map(local_prefill, mesh=mesh,
+        sm = shard_map(local_prefill, mesh=mesh,
                            in_specs=(param_specs, bspecs),
                            out_specs=out_spec, check_vma=False)
         return jax.jit(sm)
@@ -211,7 +213,7 @@ def make_serve_step(cfg: ModelConfig, ax: MeshAxes, mesh: Mesh,
     def local_decode(params, token, caches, pos):
         return decode_step(params, token, caches, pos, cfg, ax)
 
-    sm = jax.shard_map(
+    sm = shard_map(
         local_decode, mesh=mesh,
         in_specs=(param_specs, tok_spec, cache_specs, P(dp_axes)),
         out_specs=(tok_spec, cache_specs), check_vma=False)

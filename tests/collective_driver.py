@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.core.context import Algo, Proto
 from repro.collectives import algorithms as alg

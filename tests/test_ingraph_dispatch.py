@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import enable_x64
 from repro.collectives.ingraph import InGraphSelector
 from repro.core import map_decl, policy
 from repro.core.context import Algo
@@ -58,10 +59,12 @@ def test_decisions_adapt_without_retrace():
         return algo, state
 
     # fast regime -> default(0); slow regime -> tree(2); recovery -> default
+    # (x64 scope wraps the jit calls: 0.4.x boundary-canonicalization rule)
     seen = []
-    for lat in [1_000] * 4 + [5_000_000] * 6 + [1_000] * 8:
-        algo, state = step(state, jnp.uint32(lat))
-        seen.append(int(algo))
+    with enable_x64(True):
+        for lat in [1_000] * 4 + [5_000_000] * 6 + [1_000] * 8:
+            algo, state = step(state, jnp.uint32(lat))
+            seen.append(int(algo))
     assert len(traces) == 1, "must not retrace"
     assert seen[0] == 0 and 2 in seen, seen
     assert seen[-1] == 0, f"should recover: {seen}"
@@ -77,9 +80,11 @@ def test_ingraph_allreduce_correct_on_8_devices():
     code = """
 import jax, jax.numpy as jnp, numpy as np, sys
 sys.path.insert(0, %r)
-from jax import lax, shard_map
+from jax import lax
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 from test_ingraph_dispatch import adaptive_ingraph
+from repro.compat import enable_x64
 from repro.collectives.ingraph import InGraphSelector
 
 sel = InGraphSelector(adaptive_ingraph.program)
@@ -97,10 +102,11 @@ sm = jax.jit(shard_map(f, mesh=mesh,
 want = jax.jit(shard_map(lambda v: lax.psum(v, "x"), mesh=mesh,
                          in_specs=P("x"), out_specs=P("x")))(x)
 algos = []
-for lat in [1000]*3 + [5_000_000]*4:
-    y, algo, state = sm(x, state, jnp.uint32(lat))
-    assert np.allclose(np.asarray(y), np.asarray(want), atol=1e-4), "wrong result"
-    algos.append(int(np.asarray(algo)))
+with enable_x64(True):
+    for lat in [1000]*3 + [5_000_000]*4:
+        y, algo, state = sm(x, state, jnp.uint32(lat))
+        assert np.allclose(np.asarray(y), np.asarray(want), atol=1e-4), "wrong result"
+        algos.append(int(np.asarray(algo)))
 assert algos[0] == 0 and algos[-1] == 2, algos
 print("INGRAPH_OK", algos)
 """

@@ -9,6 +9,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.compat import enable_x64
 from repro.core import PolicyRuntime, make_ctx
 from repro.core.context import POLICY_CONTEXT
 from repro.core.jaxc import (JaxcError, compile_jax, ctx_to_vec,
@@ -38,8 +39,12 @@ def _run_both(pol, ctx_kwargs, seed_maps=None):
     jctx = make_ctx("tuner", **ctx_kwargs)
     vec = ctx_to_vec(jctx.buf)
     arrays = {n: map_to_array(rt2_map(pol, n, seed_maps)) for n in names}
-    jret, vec_out, arrays_out = jax.jit(fn)(vec, arrays)
-    return hctx, np.asarray(vec_out), int(hret), int(jret)
+    # hold the x64 scope across the jit boundary: on the 0.4.x line a
+    # context manager *inside* the trace cannot re-widen inputs that the
+    # outer bind already canonicalized to 32-bit
+    with enable_x64(True):
+        jret, vec_out, arrays_out = jax.jit(fn)(vec, arrays)
+        return hctx, np.asarray(vec_out), int(hret), int(jret)
 
 
 def rt2_map(pol, name, seed_maps):
@@ -96,17 +101,19 @@ def test_adaptive_policy_state_evolves_in_graph():
     m.update_u64(5, 1, slot=2)
 
     arrays = {"adapt_map": map_to_array(m)}
-    for step in range(3):
-        ctx = make_ctx("tuner", comm_id=5)
-        vec = ctx_to_vec(ctx.buf)
-        ret, vec, arrays = jit_fn(vec, arrays)
-        # host tier on a parallel copy
-        hctx = make_ctx("tuner", comm_id=5)
-        rt.invoke("tuner", hctx)
-        nch = int(np.asarray(vec)[FIELDS.index("n_channels")])
-        assert nch == hctx["n_channels"], f"step {step}"
-    # contention backoff: 10 -> 8 -> 6 -> 4
-    assert int(np.asarray(arrays["adapt_map"])[5, 1]) == 4
+    # x64 scope wraps the jit calls (0.4.x boundary-canonicalization rule)
+    with enable_x64(True):
+        for step in range(3):
+            ctx = make_ctx("tuner", comm_id=5)
+            vec = ctx_to_vec(ctx.buf)
+            ret, vec, arrays = jit_fn(vec, arrays)
+            # host tier on a parallel copy
+            hctx = make_ctx("tuner", comm_id=5)
+            rt.invoke("tuner", hctx)
+            nch = int(np.asarray(vec)[FIELDS.index("n_channels")])
+            assert nch == hctx["n_channels"], f"step {step}"
+        # contention backoff: 10 -> 8 -> 6 -> 4
+        assert int(np.asarray(arrays["adapt_map"])[5, 1]) == 4
 
 
 def test_hash_map_policy_rejected_in_graph():
@@ -126,5 +133,8 @@ def test_jaxc_composes_with_outer_jit_32bit():
         return x * nch, vec_out
 
     vec = ctx_to_vec(make_ctx("tuner", msg_size=MiB).buf)
-    y, _ = jax.jit(step)(jnp.uint32(3), vec)
+    # the x64 scope wraps the outer jit (0.4.x requirement); the outer
+    # program still computes in explicit 32-bit dtypes throughout
+    with enable_x64(True):
+        y, _ = jax.jit(step)(jnp.uint32(3), vec)
     assert int(y) == 3

@@ -1,0 +1,770 @@
+"""Bounded loops end-to-end: shared CFG, verifier bound proofs, frontend
+loop bytecode, VM fuel, JIT v1/v2 loop codegen, jaxc fori_loop lowering.
+
+The differential property test generates random verified bounded-loop
+programs (seeded, no hypothesis dependency) and asserts identical results
+and ctx/map state across interpreter, JIT v1, JIT v2, and jaxc (the jaxc
+leg skips cleanly when the jax build lacks a working enable_x64).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import PolicyRuntime, assemble, make_ctx, map_decl, verify
+from repro.core.cfg import CFG
+from repro.core.context import POLICY_CONTEXT
+from repro.core.frontend import CompileError, _MAX_UNROLL, compile_policy
+from repro.core.jit import compile_program
+from repro.core.verifier import (LOOP_FUEL_CAP, VerifierError,
+                                 verify_with_info)
+from repro.core.vm import VM, VMError
+from repro.policies.loops import (LOOP_POLICIES, histogram_bucket_tuner,
+                                  latency_argmin_tuner)
+
+FIELDS = list(POLICY_CONTEXT.fields)
+
+
+def _tuner(text, **kw):
+    return assemble(text, section="tuner", **kw)
+
+
+BOUNDED_REG = _tuner("""
+    mov64  r6, 0
+    mov64  r7, 0
+loop:
+    jge    r6, 10, done
+    add64i r7, 2
+    add64i r6, 1
+    ja     loop
+done:
+    mov64  r0, r7
+    exit
+""")
+
+
+# ---------------------------------------------------------------------------
+# CFG layer
+# ---------------------------------------------------------------------------
+
+def test_cfg_detects_natural_loop():
+    c = CFG(BOUNDED_REG.insns)
+    assert c.has_loops
+    (h, L), = c.loops.items()
+    assert h == L.header
+    assert L.latches and L.exit_edges
+    assert all(b in L.body for b in L.latches)
+    # block order is a topological order of the forward CFG
+    for u, ss in enumerate(c.fwd_succs):
+        assert all(s == CFG.EXIT or s > u for s in ss)
+
+
+def test_cfg_loop_free_program_has_no_loops():
+    from repro.policies import size_aware
+    c = CFG(size_aware.program.insns)
+    assert not c.has_loops
+    assert c.back_edges == []
+
+
+# ---------------------------------------------------------------------------
+# Verifier: accept / reject
+# ---------------------------------------------------------------------------
+
+def test_register_counter_loop_accepted():
+    v = verify_with_info(BOUNDED_REG)
+    assert list(v.loop_bounds.values()) == [10]
+    assert v.max_steps > len(BOUNDED_REG.insns)
+
+
+def test_slot_counter_loop_accepted():
+    prog = _tuner("""
+    mov64  r2, 0
+    stxdw  [r10-8], r2
+    mov64  r7, 0
+loop:
+    ldxdw  r2, [r10-8]
+    jge    r2, 200, done
+    add64i r7, 3
+    ldxdw  r2, [r10-8]
+    add64i r2, 1
+    stxdw  [r10-8], r2
+    ja     loop
+done:
+    mov64  r0, r7
+    exit
+    """)
+    v = verify_with_info(prog)
+    assert list(v.loop_bounds.values()) == [200]
+
+
+def test_interval_bounded_limit_accepted():
+    """The limit may be a register whose interval the verifier bounded —
+    here a ctx field clamped by a branch (the ctx-field-interval form)."""
+    prog = _tuner("""
+    ldxdw  r8, [r1+n_ranks]
+    jle    r8, 64, capped
+    mov64  r8, 64
+capped:
+    mov64  r6, 0
+    mov64  r7, 0
+loop:
+    jge    r6, r8, done
+    add64i r7, 1
+    add64i r6, 1
+    ja     loop
+done:
+    mov64  r0, r7
+    exit
+    """)
+    v = verify_with_info(prog)
+    assert list(v.loop_bounds.values()) == [64]
+
+
+def test_unclamped_ctx_limit_rejected():
+    prog = _tuner("""
+    ldxdw  r8, [r1+n_ranks]
+    mov64  r6, 0
+loop:
+    jge    r6, r8, done
+    add64i r6, 1
+    ja     loop
+done:
+    mov64  r0, 0
+    exit
+    """)
+    with pytest.raises(VerifierError, match="no finite verified upper"):
+        verify(prog)
+
+
+def test_unbounded_loop_rejected_with_actionable_message():
+    """Golden message: names the back edge, the loop, the reason, and the
+    supported form."""
+    prog = _tuner("""
+    mov64  r6, 0
+loop:
+    add64i r6, 1
+    ja     loop
+""")
+    with pytest.raises(VerifierError) as ei:
+        verify(prog)
+    msg = str(ei.value)
+    assert "back-edge at insn" in msg
+    assert "cannot prove a bounded trip count" in msg
+    assert "unbounded loops are rejected" in msg
+
+
+def test_jeq_exit_rejected_with_reason():
+    prog = _tuner("""
+    mov64  r6, 0
+loop:
+    add64i r6, 1
+    jeq    r6, 1000, done
+    ja     loop
+done:
+    mov64  r0, 0
+    exit
+    """)
+    with pytest.raises(VerifierError) as ei:
+        verify(prog)
+    msg = str(ei.value)
+    assert "back-edge at insn" in msg
+    assert "jeq" in msg
+
+
+def test_non_advancing_counter_rejected():
+    prog = _tuner("""
+    mov64  r6, 0
+    mov64  r7, 0
+loop:
+    jge    r6, 10, done
+    add64i r7, 1
+    ja     loop
+done:
+    mov64  r0, r7
+    exit
+    """)
+    with pytest.raises(VerifierError, match="never advanced"):
+        verify(prog)
+
+
+def test_conditional_increment_rejected():
+    """`if cond: i += 1` cannot prove progress on every path."""
+    prog = _tuner("""
+    mov64  r6, 0
+    mov64  r7, 0
+loop:
+    jge    r6, 10, done
+    jgt    r7, 100, skip
+    add64i r6, 1
+skip:
+    add64i r7, 1
+    ja     loop
+done:
+    mov64  r0, r7
+    exit
+    """)
+    with pytest.raises(VerifierError, match="every path"):
+        verify(prog)
+
+
+def test_counter_overwrite_rejected():
+    prog = _tuner("""
+    mov64  r6, 0
+loop:
+    jge    r6, 10, done
+    add64i r6, 1
+    mov64i r6, 0
+    ja     loop
+done:
+    mov64  r0, 0
+    exit
+    """)
+    with pytest.raises(VerifierError, match="modified at insn"):
+        verify(prog)
+
+
+def test_fuel_cap_rejected():
+    prog = _tuner(f"""
+    mov64  r6, 0
+loop:
+    jge    r6, {LOOP_FUEL_CAP * 2}, done
+    add64i r6, 1
+    ja     loop
+done:
+    mov64  r0, 0
+    exit
+    """)
+    with pytest.raises(VerifierError, match="fuel cap"):
+        verify(prog)
+
+
+def test_loop_body_still_memory_checked():
+    """Widened loop state must not weaken memory safety: an OOB stack
+    write inside a bounded loop still rejects."""
+    prog = _tuner("""
+    mov64  r6, 0
+loop:
+    jge    r6, 10, done
+    stxdw  [r10-520], r6
+    add64i r6, 1
+    ja     loop
+done:
+    mov64  r0, 0
+    exit
+    """)
+    with pytest.raises(VerifierError, match="stack access out of bounds"):
+        verify(prog)
+
+
+def test_unsafe_suite_unbounded_loop_still_golden():
+    from repro.policies.unsafe import UNSAFE_PROGRAMS
+    prog, fragment = UNSAFE_PROGRAMS["unbounded_loop"]
+    with pytest.raises(VerifierError, match=fragment):
+        verify(prog)
+
+
+def test_forward_multiway_merge_keeps_precise_join():
+    """Widening must not fire at ordinary forward merge points: a 5-armed
+    divisor that is nonzero on every arm stays provably nonzero."""
+    prog = _tuner("""
+    ldxdw  r3, [r1+msg_size]
+    mov64  r2, 5
+    jgt    r3, 400, m
+    mov64  r2, 4
+    jgt    r3, 300, m
+    mov64  r2, 3
+    jgt    r3, 200, m
+    mov64  r2, 2
+    jgt    r3, 100, m
+    mov64  r2, 1
+m:
+    mov64  r0, 1000
+    div64  r0, r2
+    exit
+    """)
+    verify(prog)  # must not raise "contains 0"
+
+
+def test_dead_loop_with_register_limit_verifies_cleanly():
+    """A fully unreachable loop is vacuously bounded (its back edge is
+    dead code); crucially the register-limit proof path must not escape
+    with a raw KeyError for pcs the fixpoint never reached."""
+    prog = _tuner("""
+    mov64  r0, 0
+    exit
+loop:
+    jge    r6, r7, done
+    add64i r6, 1
+    ja     loop
+done:
+    exit
+    """)
+    v = verify_with_info(prog)
+    assert list(v.loop_bounds.values()) == [0]
+
+
+@pytest.mark.slow
+def test_interpreter_fuel_covers_large_verified_loops():
+    """The runtime must never clamp fuel below the verifier's proven step
+    bound: a verified 65535-iteration loop runs on the interpreter tier."""
+    def big(ctx):
+        acc = 0
+        for i in range(65535):
+            acc = acc + i
+        return acc % 1000003
+
+    prog = compile_policy(big, section="tuner")
+    v = verify_with_info(prog)
+    assert v.max_steps > 250_000  # the shape that exposed the old clamp
+    rt = PolicyRuntime(use_interpreter=True)
+    lp = rt.load(prog)
+    assert lp.fn(make_ctx("tuner").buf) == sum(range(65535)) % 1000003
+
+
+# ---------------------------------------------------------------------------
+# Frontend
+# ---------------------------------------------------------------------------
+
+def _unrolled_size_probe():
+    def probe(ctx):
+        acc = 0
+        for i in range(200):
+            acc = acc + i
+        return acc
+    return compile_policy(probe, section="tuner")
+
+
+def test_frontend_emits_real_loop_above_unroll_limit():
+    prog = _unrolled_size_probe()
+    # an unrolled 200-iteration loop would exceed 400 insns; the real
+    # loop stays tiny and carries exactly one back edge
+    assert len(prog.insns) < 40
+    v = verify_with_info(prog)
+    assert list(v.loop_bounds.values()) == [200]
+    ret = VM(prog.insns, {}).run(make_ctx("tuner").buf)
+    assert ret == sum(range(200))
+
+
+def test_frontend_still_unrolls_small_loops():
+    def small(ctx):
+        acc = 0
+        for i in range(8):
+            acc = acc + i
+        return acc
+    prog = compile_policy(small, section="tuner")
+    assert not CFG(prog.insns).has_loops
+
+
+def test_frontend_nonconstant_bound_actionable_error():
+    def bad(ctx):
+        total = 0
+        for i in range(ctx.n_ranks):
+            total = total + i
+        return total
+    with pytest.raises(CompileError) as ei:
+        compile_policy(bad, section="tuner")
+    msg = str(ei.value)
+    assert "compile-time constant" in msg
+    assert "ctx.n_ranks" in msg
+    assert "verifier proves" in msg
+    assert str(_MAX_UNROLL) in msg
+
+
+def test_frontend_descending_range_actionable_error():
+    def down(ctx):
+        acc = 0
+        for i in range(200, 0, -1):
+            acc = acc + i
+        return acc
+    with pytest.raises(CompileError, match="descending"):
+        compile_policy(down, section="tuner")
+
+
+def test_loop_variable_does_not_outlive_real_loop():
+    """Post-loop reads of the loop variable fail loudly (the slot holds
+    the exit value, not Python's last iterate) — matching the unrolled
+    path's behavior instead of silently diverging from Python."""
+    def leaky(ctx):
+        acc = 0
+        for i in range(96):
+            acc = acc + i
+        return acc + i
+    with pytest.raises(CompileError, match="unknown name 'i'"):
+        compile_policy(leaky, section="tuner")
+
+
+def test_same_name_nested_loops_rejected():
+    def shadow(ctx):
+        acc = 0
+        for i in range(96):
+            for i in range(70):
+                acc = acc + 1
+        return acc
+    with pytest.raises(CompileError, match="distinct names"):
+        compile_policy(shadow, section="tuner")
+
+
+def test_sequential_loops_reuse_counter_slot():
+    def twice(ctx):
+        acc = 0
+        for i in range(96):
+            acc = acc + i
+        for i in range(70):
+            acc = acc + i
+        return acc % 100003
+    prog = compile_policy(twice, section="tuner")
+    verify(prog)
+    want = (sum(range(96)) + sum(range(70))) % 100003
+    assert VM(prog.insns, {}).run(make_ctx("tuner").buf) == want
+
+
+def test_readme_argmin_example_compiles_and_runs():
+    """The README's bounded-loops quickstart must compile verbatim."""
+    lat = map_decl("config_lat_map", kind="array", value_size=8,
+                   max_entries=96, shared=True)
+
+    def argmin_tuner(ctx):
+        best = 0
+        best_lat = 0xFFFFFFFFFFFFFFFF
+        for i in range(96):
+            st = lat.lookup(i)
+            if st is not None:
+                if st[0] > 0:
+                    if st[0] < best_lat:
+                        best_lat = st[0]
+                        best = i
+        ctx.n_channels = min(best + 1, max(ctx.max_channels, 1))
+        return 0
+
+    prog = compile_policy(argmin_tuner, section="tuner", maps=[lat])
+    rt = PolicyRuntime()
+    rt.load(prog)
+    rt.maps.get("config_lat_map").update_u64(5, 42, slot=0)
+    ctx = make_ctx("tuner", max_channels=32)
+    rt.invoke("tuner", ctx)
+    assert ctx["n_channels"] == 6
+
+
+def test_loop_variable_shadowing_local_rejected_in_both_paths():
+    """A loop variable shadowing an existing local is rejected loudly —
+    in the unrolled path it would silently read the stale local (scalars
+    shadow consts), in the real-loop path it would clobber the slot."""
+    def small(ctx):
+        i = 5
+        acc = 0
+        for i in range(10):
+            acc = acc + 1
+        return acc + i
+
+    def big(ctx):
+        i = 5
+        acc = 0
+        for i in range(100):
+            acc = acc + 1
+        return acc + i
+
+    for fn in (small, big):
+        with pytest.raises(CompileError, match="shadows an existing local"):
+            compile_policy(fn, section="tuner")
+
+
+def test_const_shadowing_loop_var_consistent_across_unroll_boundary():
+    """Looping over a name that was a module const unbinds it afterward
+    in BOTH compilation strategies — post-loop reads fail loudly instead
+    of flipping between an error (unrolled) and the stale const (real)."""
+    def shadows_small(ctx):
+        acc = 0
+        for K7 in range(10):
+            acc = acc + K7
+        return acc + K7
+
+    def shadows_big(ctx):
+        acc = 0
+        for K7 in range(100):
+            acc = acc + K7
+        return acc + K7
+
+    for fn in (shadows_small, shadows_big):
+        with pytest.raises(CompileError, match="unknown name 'K7'"):
+            compile_policy(fn, section="tuner", extra_consts={"K7": 7})
+
+
+def test_nonzero_start_range_bound_uses_trip_count():
+    """range(60000, 70000) has 10k trips — the prover must recover the
+    constant init so the bound is the real trip count, not limit/step
+    (which would spuriously trip the 65536 fuel cap)."""
+    def offset_scan(ctx):
+        acc = 0
+        for i in range(60000, 70000):
+            acc = acc + i
+        return acc % 1000003
+
+    prog = compile_policy(offset_scan, section="tuner")
+    v = verify_with_info(prog)
+    assert list(v.loop_bounds.values()) == [10000]
+    ret = VM(prog.insns, {}).run(make_ctx("tuner").buf)
+    assert ret == sum(range(60000, 70000)) % 1000003
+
+
+def test_frontend_fuel_cap_error():
+    def huge(ctx):
+        acc = 0
+        for i in range(1 << 20):
+            acc = acc + 1
+        return acc
+    with pytest.raises(CompileError, match="fuel cap"):
+        compile_policy(huge, section="tuner")
+
+
+def test_loop_with_dead_latch_verifies():
+    """A body that returns on every path leaves the latch unreachable;
+    the dead latch must still close its natural loop (not read as
+    irreducible control flow)."""
+    def always_returns(ctx):
+        for i in range(100):
+            return 2
+        return 0
+
+    prog = compile_policy(always_returns, section="tuner")
+    v = verify_with_info(prog)
+    # the back edge is dead code, so the loop is vacuously bounded
+    assert list(v.loop_bounds.values()) == [0]
+    assert VM(prog.insns, {}).run(make_ctx("tuner").buf) == 2
+    assert compile_program(prog, {}, info=v)(make_ctx("tuner").buf) == 2
+
+
+def test_single_block_do_while_accepted():
+    """Post-increment exit test in the same block as the increment — the
+    canonical do-while — matches the documented provable form."""
+    prog = _tuner("""
+    mov64  r7, 0
+    mov64  r8, 0
+inner:
+    add64i r8, 3
+    add64i r7, 2
+    jlt    r7, 9, inner
+    mov64  r0, r8
+    exit
+    """)
+    v = verify_with_info(prog)
+    (bound,) = v.loop_bounds.values()
+    assert bound >= 5  # >= the real 5 trips (ceil(9/2) is conservative)
+    assert VM(prog.insns, {}).run(make_ctx("tuner").buf) == 15
+    assert compile_program(prog, {}, info=v)(make_ctx("tuner").buf) == 15
+
+
+# ---------------------------------------------------------------------------
+# VM fuel
+# ---------------------------------------------------------------------------
+
+def test_vm_fuel_trips_on_budget():
+    with pytest.raises(VMError, match="instruction budget exceeded"):
+        VM(BOUNDED_REG.insns, {}, fuel=5).run(make_ctx("tuner").buf)
+
+
+def test_vm_fuel_default_suffices():
+    assert VM(BOUNDED_REG.insns, {}).run(make_ctx("tuner").buf) == 20
+
+
+# ---------------------------------------------------------------------------
+# JIT codegen
+# ---------------------------------------------------------------------------
+
+def test_v2_emits_native_while_loop():
+    prog = _unrolled_size_probe()
+    fn = compile_program(prog, {})
+    assert fn.__bpf_structured__
+    assert "while True:" in fn.__bpf_source__
+    assert fn(make_ctx("tuner").buf) == sum(range(200))
+
+
+def test_v2_dispatcher_fallback_on_multi_exit_loop():
+    """Two distinct exit targets defeat structured reconstruction; the
+    dispatcher fallback must still execute the loop correctly."""
+    prog = _tuner("""
+    mov64  r6, 0
+    mov64  r7, 0
+loop:
+    jge    r6, 10, out1
+    jeq    r7, 7, out2
+    add64i r7, 1
+    add64i r6, 1
+    ja     loop
+out2:
+    mov64  r0, 99
+    exit
+out1:
+    mov64  r0, r7
+    exit
+    """)
+    want = VM(prog.insns, {}).run(make_ctx("tuner").buf)
+    fn = compile_program(prog, {})
+    assert not fn.__bpf_structured__
+    assert "while True:" in fn.__bpf_source__  # dispatcher, not guard chain
+    assert fn(make_ctx("tuner").buf) == want == 99
+
+
+# ---------------------------------------------------------------------------
+# Differential: the shipped loop policies across all four tiers
+# ---------------------------------------------------------------------------
+
+def _seed_maps(rt):
+    for name in rt.maps.names():
+        m = rt.maps.get(name)
+        for k in range(0, m.max_entries, 3):
+            m.update_u64(k, 100 + 17 * k, slot=0)
+
+
+def _jaxc_or_skip():
+    from repro.compat import have_x64
+    if not have_x64():
+        pytest.skip("jax build lacks a working enable_x64")
+    import jax
+    from repro.compat import enable_x64
+    from repro.core.jaxc import compile_jax, ctx_to_vec, map_to_array
+    return jax, enable_x64, compile_jax, ctx_to_vec, map_to_array
+
+
+@pytest.mark.parametrize("pol", LOOP_POLICIES,
+                         ids=lambda p: p.program.name)
+def test_loop_policy_identical_across_tiers(pol):
+    prog = pol.program
+    ctx_kw = dict(msg_size=8 << 20, comm_id=2, n_ranks=8, max_channels=32)
+    results = {}
+    for tier in ("interp", "v1", "v2"):
+        rt = PolicyRuntime(use_interpreter=(tier == "interp"))
+        lp = rt.load(prog)
+        _seed_maps(rt)
+        fn = lp.fn
+        if tier == "v1":
+            resolved = {d.name: rt.maps.get(d.name) for d in prog.maps}
+            fn = compile_program(prog, resolved, codegen="v1")
+        ctx = make_ctx("tuner", **ctx_kw)
+        ret = fn(ctx.buf)
+        state = {d.name: [rt.maps.get(d.name).lookup_u64(k)
+                          for k in range(rt.maps.get(d.name).max_entries)]
+                 for d in prog.maps}
+        results[tier] = (ret, bytes(ctx.buf), state)
+    assert results["interp"] == results["v1"] == results["v2"]
+
+    jax, enable_x64, compile_jax, ctx_to_vec, map_to_array = _jaxc_or_skip()
+    rt = PolicyRuntime(use_interpreter=True)
+    rt.load(prog)
+    _seed_maps(rt)
+    arrays = {d.name: map_to_array(rt.maps.get(d.name)) for d in prog.maps}
+    fn, names = compile_jax(prog)
+    ctx = make_ctx("tuner", **ctx_kw)
+    with enable_x64(True):
+        jret, vec_out, arrays_out = jax.jit(fn)(ctx_to_vec(ctx.buf), arrays)
+    want_ret, want_buf, want_state = results["interp"]
+    assert int(jret) == want_ret
+    assert np.asarray(vec_out).astype("<u8").tobytes() == want_buf
+    for name in names:
+        got = [int(x) for x in np.asarray(arrays_out[name])[:, 0]]
+        assert got == want_state[name], name
+
+
+# ---------------------------------------------------------------------------
+# Differential property test: random bounded-loop programs
+# ---------------------------------------------------------------------------
+
+_BODY_OPS = [
+    ("add64i", "imm"), ("xor64i", "imm"), ("or64i", "imm"),
+    ("and64i", "imm"), ("lsh64i", "shift"), ("rsh64i", "shift"),
+    ("mul64i", "imm"), ("add64", "reg"), ("xor64", "reg"), ("sub64", "reg"),
+]
+
+
+def _random_loop_program(rng: random.Random):
+    """A random but always-verifiable bounded loop: r6 counts to a random
+    limit; r7/r8 churn through random ALU ops with a random conditional
+    region inside the body."""
+    limit = rng.randint(65, 300)
+    step = rng.choice([1, 1, 1, 2, 3])
+    lines = [
+        "    mov64  r6, 0",
+        f"    mov64  r7, {rng.randint(0, 1 << 30)}",
+        f"    mov64  r8, {rng.randint(1, 1 << 30)}",
+        "loop:",
+        f"    jge    r6, {limit}, done",
+    ]
+    n_ops = rng.randint(1, 6)
+    for _ in range(n_ops):
+        op, kind = rng.choice(_BODY_OPS)
+        dst = rng.choice(["r7", "r8"])
+        if kind == "imm":
+            lines.append(f"    {op} {dst}, {rng.randint(1, 1 << 20)}")
+        elif kind == "shift":
+            lines.append(f"    {op} {dst}, {rng.randint(1, 13)}")
+        else:
+            src = "r8" if dst == "r7" else "r7"
+            lines.append(f"    {op} {dst}, {src}")
+    if rng.random() < 0.7:  # conditional region in the body
+        lines.append(f"    jgt    r7, {rng.randint(0, 1 << 32)}, skip")
+        lines.append(f"    add64i r8, {rng.randint(1, 999)}")
+        lines.append("skip:")
+    lines += [
+        f"    add64i r6, {step}",
+        "    ja     loop",
+        "done:",
+        "    xor64  r7, r8",
+        "    mov64  r0, r7",
+        "    exit",
+    ]
+    return _tuner("\n".join(lines))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_bounded_loops_identical_across_tiers(seed):
+    rng = random.Random(0xBEEF + seed)
+    prog = _random_loop_program(rng)
+    vinfo = verify_with_info(prog)  # must verify
+    assert vinfo.loop_bounds
+    buf = make_ctx("tuner", msg_size=1 << 20).buf
+    want = VM(prog.insns, {}).run(bytearray(buf))
+    f1 = compile_program(prog, {}, codegen="v1")
+    f2 = compile_program(prog, {}, info=vinfo)
+    assert f1(bytearray(buf)) == want
+    assert f2(bytearray(buf)) == want
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_bounded_loops_match_jaxc(seed):
+    jax, enable_x64, compile_jax, ctx_to_vec, _ = _jaxc_or_skip()
+    rng = random.Random(0xFACE + seed)
+    prog = _random_loop_program(rng)
+    buf = make_ctx("tuner", msg_size=1 << 20).buf
+    want = VM(prog.insns, {}).run(bytearray(buf))
+    fn, _names = compile_jax(prog)
+    with enable_x64(True):
+        jret, _, _ = jax.jit(fn)(ctx_to_vec(bytearray(buf)), {})
+    assert int(jret) == want
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration
+# ---------------------------------------------------------------------------
+
+def test_loop_policy_attaches_and_decides():
+    rt = PolicyRuntime()
+    rt.load(latency_argmin_tuner.program)
+    m = rt.maps.get("config_lat_map")
+    m.update_u64(11, 50, slot=0)   # config 11 is fastest
+    m.update_u64(3, 900, slot=0)
+    ctx = make_ctx("tuner", msg_size=8 << 20, max_channels=32)
+    rt.invoke("tuner", ctx)
+    assert ctx["n_channels"] == 12  # argmin config + 1
+
+
+def test_histogram_tuner_adapts_to_traffic_class():
+    rt = PolicyRuntime()
+    rt.load(histogram_bucket_tuner.program)
+    small = make_ctx("tuner", msg_size=1 << 10, max_channels=32)
+    for _ in range(5):
+        rt.invoke("tuner", small)
+    assert small["algorithm"] != 1  # tree for latency-bound traffic
+    big = make_ctx("tuner", msg_size=64 << 20, max_channels=32)
+    for _ in range(9):
+        rt.invoke("tuner", big)
+    assert big["algorithm"] == 1    # ring once big transfers dominate
