@@ -92,6 +92,25 @@ def smoke() -> dict:
         "min_speedup": LOOP_SPEEDUP_MIN, "ok": ok}
     rec["ok"] = rec["ok"] and ok
 
+    # pallas tier (gated on a working x64 scope): the differential is the
+    # invariant — one kernel decision must agree with the interpreter
+    # (return value AND ctx out).  The timing column is informational:
+    # through the host bridge each call pays the host<->device state
+    # sync, which vanishes when callers keep state in-graph.
+    from repro.compat import have_x64
+    if have_x64():
+        rt_pal = PolicyRuntime(tier="pallas")
+        lp_pal = rt_pal.load(latency_argmin_tuner.program)
+        _seed_loop(rt_pal)
+        b_vm, b_pal = bytearray(ctx.buf), bytearray(ctx.buf)
+        ok = (lp_vm.fn(b_vm) == lp_pal.fn(b_pal)
+              and bytes(b_vm) == bytes(b_pal))
+        pal_ns = _bench(lp_pal.fn, bytearray(ctx.buf), n=64)
+        rec["policies"]["latency_argmin_tuner[pallas]"] = {
+            "pallas_bridge_ns": round(pal_ns, 1),
+            "interp_ns": round(vm_ns, 1), "differential_ok": ok, "ok": ok}
+        rec["ok"] = rec["ok"] and ok
+
     rt = PolicyRuntime()
     rt.load(T.static_override.program)
 

@@ -6,8 +6,10 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run --ci       # CI guard
 
 ``--ci`` is the single entry the builder runs as the merge gate: the
-perf-smoke suite (JIT >= interpreter, cache >= uncached) followed by the
-tier-1 pytest suite; exit status is nonzero if either fails.
+perf-smoke suite (JIT >= interpreter, cache >= uncached, pallas-tier
+differential row), the ``table1_pallas`` five-tier differential
+(interp == v1 == v2 == jaxc == pallas, zero retraces), then the tier-1
+pytest suite; exit status is nonzero if any leg fails.
 
 Prints ``section,name,key=value,...`` CSV-ish lines and writes
 results/bench.json.
@@ -66,6 +68,19 @@ def run_ci() -> int:
                        cwd=repo, env=env)
     if r.returncode != 0:
         print("CI: perf smoke FAILED", flush=True)
+        failures += 1
+
+    print("=== ci: table1_pallas differential ===", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.table1_overhead import pallas_differential;"
+         "rec = pallas_differential();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: table1_pallas differential FAILED", flush=True)
         failures += 1
 
     print("=== ci: tier-1 pytest ===", flush=True)

@@ -117,6 +117,106 @@ def _run_loop_section(report, ctx) -> None:
                differential_ok=differential_ok, jaxc_ok=jaxc_ok)
 
 
+def _host_tier_results(prog, ctx, seed_fn):
+    """(ret, ctx bytes, map state) for interp / JIT v1 / JIT v2."""
+    results = {}
+    for tier, kw in [("interp", dict(use_interpreter=True)),
+                     ("jit_v2", {}), ("jit_v1", {})]:
+        rt = PolicyRuntime(**kw)
+        lp = rt.load(prog)
+        seed_fn(rt)
+        fn = lp.fn
+        if tier == "jit_v1":
+            resolved = {d.name: rt.maps.get(d.name) for d in prog.maps}
+            fn = compile_program(prog, resolved, codegen="v1")
+        buf = bytearray(ctx.buf)
+        ret = fn(buf)
+        state = {d.name: [rt.maps.get(d.name).lookup_u64(k)
+                          for k in range(rt.maps.get(d.name).max_entries)]
+                 for d in prog.maps}
+        results[tier] = (ret, bytes(buf), state)
+    return results
+
+
+def pallas_differential(report=None):
+    """``table1_pallas``: the four-tier ladder closes — interp == v1 ==
+    v2 == jaxc == pallas (return value, ctx out, map state) on every
+    in-graph-eligible Table-1 and loop policy, with ZERO retraces across
+    decisions on the in-graph path.  Reused verbatim as a CI gate by
+    ``benchmarks.run --ci``."""
+    import jax
+
+    from repro.compat import enable_x64, have_x64
+    from repro.core.jaxc import (JaxcError, check_supported, compile_jax,
+                                 ctx_to_vec, map_to_array)
+    from repro.core.pallasc import compile_pallas
+    from repro.policies.loops import LOOP_POLICIES
+
+    rec = {"suite": "table1_pallas", "ok": True, "policies": {}}
+    if not have_x64():
+        rec["skipped"] = "jax build lacks a working enable_x64"
+        return rec
+    ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
+                   max_channels=32)
+    table1 = [(p.program, seed_maps) for p in
+              (T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+               T.latency_feedback, T.bandwidth_probe, T.slo_enforcer)]
+    loops = [(p.program, _seed_loop_maps) for p in LOOP_POLICIES]
+    for prog, seed_fn in table1 + loops:
+        row = {}
+        try:
+            check_supported(prog)
+        except JaxcError as e:
+            # hash-map / host-helper policies stay host-tier-only; the
+            # ladder still closes across the three host tiers
+            host = _host_tier_results(prog, ctx, seed_fn)
+            row["eligible"] = False
+            row["why"] = str(e)
+            row["ok"] = len(set(map(str, host.values()))) == 1
+        else:
+            host = _host_tier_results(prog, ctx, seed_fn)
+            want_ret, want_buf, want_state = host["interp"]
+            host_ok = len(set(map(str, host.values()))) == 1
+            rt = PolicyRuntime(use_interpreter=True)
+            rt.load(prog)
+            seed_fn(rt)
+            arrays = {d.name: map_to_array(rt.maps.get(d.name))
+                      for d in prog.maps}
+            row["eligible"] = True
+            row["ok"] = host_ok
+            for tier, compiler in (("jaxc", compile_jax),
+                                   ("pallas", compile_pallas)):
+                fn, names = compiler(prog)
+                traces = []
+
+                def traced(vec, arrs, _fn=fn, _t=traces):
+                    _t.append(1)
+                    return _fn(vec, arrs)
+                jfn = jax.jit(traced)
+                with enable_x64(True):
+                    ret, vec_out, arrs_out = jfn(
+                        ctx_to_vec(bytearray(ctx.buf)), arrays)
+                    # second decision feeds the updated map state back in:
+                    # closed-loop adaptation must not retrace
+                    jfn(ctx_to_vec(bytearray(ctx.buf)),
+                        {n: arrs_out[n] for n in names})
+                tier_ok = (
+                    int(ret) == want_ret
+                    and np.asarray(vec_out).astype("<u8").tobytes()
+                    == want_buf
+                    and all([int(x) for x in np.asarray(arrs_out[n])[:, 0]]
+                            == want_state[n] for n in names)
+                    and len(traces) == 1)
+                row[tier + "_ok"] = tier_ok
+                row[tier + "_retraces"] = len(traces) - 1
+                row["ok"] = row["ok"] and tier_ok
+        rec["policies"][prog.name] = row
+        rec["ok"] = rec["ok"] and row["ok"]
+        if report is not None:
+            report("table1_pallas", prog.name, **row)
+    return rec
+
+
 def run(report):
     ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
                    max_channels=32)
@@ -170,6 +270,10 @@ def run(report):
     # check across interpreter / JIT v1 / JIT v2 (+ jaxc where the build
     # allows), then per-tier timings — the loop-heavy analogue of Table 1
     _run_loop_section(report, ctx)
+
+    # the full four-tier ladder: interp == v1 == v2 == jaxc == pallas on
+    # every in-graph-eligible policy, zero retraces across decisions
+    pallas_differential(report)
 
     # dispatch layer: cold full path vs epoch-keyed decision-cache hits
     rt = PolicyRuntime()

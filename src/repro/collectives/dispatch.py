@@ -110,6 +110,10 @@ class DispatchConfig:
     decision_log_max: int = 4096
     # memoize decisions of pure (helper-free) tuner policies
     enable_decision_cache: bool = True
+    # within-epoch entry cap; overflow evicts the OLDEST HALF (insertion
+    # order), never the whole cache — a burst of distinct keys must not
+    # trigger a periodic full-recompute storm on the hot entries
+    decision_cache_max: int = 4096
 
 
 @functools.lru_cache(maxsize=4096)
@@ -164,14 +168,18 @@ class CollectiveDispatcher:
             maxlen=None if log_max is None else max(log_max, 0))
         self.net_calls = 0
         self.net_bytes = 0
-        # epoch-keyed decision memo (see module docstring); stale-epoch
-        # entries are harmless because the epoch is part of the key; the
-        # dict is flushed on every epoch change and capped within an
-        # epoch (4096 entries) to bound memory
-        self._decision_cache: Dict[Tuple, Decision] = {}
-        self._cache_epoch = -1
-        self._cache_fingerprint = 0
-        self._cacheable = False
+        # Epoch-keyed decision memo, published as one immutable
+        # *generation* tuple (epoch, chain_fingerprint, cacheable, dict)
+        # so concurrent decide() calls read a consistent snapshot in a
+        # single GIL-atomic attribute load.  A hot-reload epoch bump
+        # racing a decide() can therefore never pair one epoch's purity
+        # verdict with another epoch's fingerprint, and a stale in-flight
+        # thread inserts into ITS generation's dict — unreachable from
+        # any thread that has observed the swap.  The lock guards only
+        # the (rare) resync and eviction paths, never the hit path.
+        self._cache_lock = threading.Lock()
+        self._cache_gen: Tuple[int, int, bool, Dict[Tuple, Decision]] = \
+            (-1, 0, False, {})
         self.cache_hits = 0
         self.cache_misses = 0
         self._apply_env_plugin()
@@ -208,41 +216,69 @@ class CollectiveDispatcher:
         self.apply_env(n_devices=n_devices, tp=tp, dp=dp, n_pods=n_pods)
 
     # ------------------------------------------------------------------
-    def _policy_cacheable(self) -> bool:
+    def _policy_cacheable(self, links=None) -> bool:
         """A tuner decision can be memoized iff it is a pure function of
         the ctx inputs: no policy attached (framework default), or a chain
         in which every program calls no helpers (no map reads/writes, no
         clock, no randomness) — statically decidable from the bytecode.
         One stateful program anywhere in the chain disables memoization:
         first-non-deferring-wins means any link may end up deciding."""
+        if links is None:
+            links = self.runtime.chain("tuner")
         return all(
             not any(i.op == "call" for i in link.program.insns)
-            for link in self.runtime.chain("tuner"))
+            for link in links)
+
+    def _resync_cache(self) -> Tuple[int, int, bool, Dict[Tuple, Decision]]:
+        """Rebuild the cache generation after a hot-reload epoch bump.
+
+        The purity probe and the fingerprint must describe the SAME
+        published chain (re-read the links tuple — identity changes on
+        every publish — and retry on movement), and the epoch is read
+        *before* the probe and re-checked *after* it: a swap landing
+        mid-probe restarts the pairing, so the generation can never
+        attach a new epoch to an older chain's fingerprint (which would
+        leave the cache silently disabled — every insert rejected by
+        the fingerprint guard — until some later unrelated bump)."""
+        with self._cache_lock:
+            gen = self._cache_gen
+            if self.runtime.epoch == gen[0]:
+                return gen                  # another thread already did it
+            while True:
+                ep = self.runtime.epoch
+                links = self.runtime.chain("tuner")
+                fp = self.runtime.chain_fingerprint("tuner")
+                if self.runtime.chain("tuner") is not links:
+                    continue                # republished mid-probe: re-pair
+                cacheable = self.config.enable_decision_cache \
+                    and self._policy_cacheable(links)
+                if self.runtime.epoch != ep:
+                    continue                # epoch moved mid-probe: re-pair
+                gen = (ep, fp, cacheable, {})
+                self._cache_gen = gen
+                return gen
 
     def decide(self, coll: int, size_bytes: int, n: int, *,
                axis_kind: int = AxisKind.DATA, dtype_bytes: int = 4,
                axis_name: str = "?") -> Decision:
         cfg = self.config
-        ep = self.runtime.epoch
-        if ep != self._cache_epoch:
+        gen = self._cache_gen               # one atomic snapshot read
+        if self.runtime.epoch != gen[0]:
             # hot-reload/attach/detach happened: flush and re-probe purity
-            self._decision_cache.clear()
-            self._cacheable = cfg.enable_decision_cache \
-                and self._policy_cacheable()
-            self._cache_epoch = ep
+            gen = self._resync_cache()
+        gen_epoch, gen_fp, cacheable, cache = gen
+        cid = _comm_id(axis_name, n)
+        key = None
+        if cacheable:
             # the chain fingerprint joins the epoch in every cache key:
             # epoch says "something changed", the fingerprint pins *which*
             # chain composition produced the cached decision
-            self._cache_fingerprint = self.runtime.chain_fingerprint("tuner")
-        cid = _comm_id(axis_name, n)
-        key = None
-        if self._cacheable:
-            key = (ep, self._cache_fingerprint,
+            key = (gen_epoch, gen_fp,
                    coll, size_bytes, n, axis_kind, dtype_bytes, cid,
                    cfg.default_algo, cfg.default_proto,
                    cfg.default_channels, cfg.max_channels,
                    cfg.hw.n_links)  # topo_links is a policy ctx input
-            d = self._decision_cache.get(key)
+            d = cache.get(key)
             if d is not None:
                 # memoization elides policy + cost-table work only; the
                 # log and data-plane hooks still observe every dispatch
@@ -298,12 +334,58 @@ class CollectiveDispatcher:
                      size_bytes=size_bytes, n_ranks=n, axis_kind=axis_kind,
                      comm_id=cid, from_policy=from_policy)
         if key is not None:
-            if len(self._decision_cache) >= 4096:
-                self._decision_cache.clear()  # bound within-epoch growth
-            self._decision_cache[key] = d
+            if len(cache) >= cfg.decision_cache_max:
+                self._evict_oldest_half(cache)
+            # insert guard: publish into the generation only while its
+            # (epoch, fingerprint) pairing still holds.  A swap that
+            # landed between our invoke and this insert must not plant
+            # the NEW chain's decision where stale in-flight readers of
+            # this generation would mistake it for a cacheable one (the
+            # new chain may be stateful: its decisions must never be
+            # served from the cache).
+            if self.runtime.epoch == gen_epoch \
+                    and self.runtime.chain_fingerprint("tuner") == gen_fp:
+                cache[key] = d
         self.decisions.append(d)
         self._net_hook(d)
         return d
+
+    def _evict_oldest_half(self, cache: Dict[Tuple, Decision]) -> None:
+        """Within-epoch overflow: drop the oldest half by insertion order
+        (dicts preserve it).  Clearing everything instead would wipe the
+        hot entries too and cause a periodic full-recompute storm under
+        bursts of distinct keys."""
+        with self._cache_lock:
+            n = len(cache)
+            if n < self.config.decision_cache_max:
+                return                      # another thread already evicted
+            # list(dict) is a single C-level op, safe against concurrent
+            # lock-free inserts from the hit path
+            for k in list(cache)[:max(n // 2, 1)]:
+                cache.pop(k, None)
+
+    # ------------------------------------------------------------------
+    def make_ingraph(self, *, tier: str = "pallas"):
+        """Route the attached tuner policy through an in-graph tier.
+
+        Returns ``(selector, state)``: an
+        :class:`~repro.collectives.ingraph.InGraphSelector` compiled from
+        the highest-precedence attached tuner program (``tier="pallas"``
+        for the single-kernel lowering, ``"jaxc"`` for the pure-JAX one)
+        plus device-resident map state seeded from THIS runtime's live
+        maps — host-accumulated telemetry moves in-graph, and from then
+        on decisions run inside the compiled step with zero host
+        round-trips and zero retraces.  Thread ``state`` through the
+        step function; :func:`repro.core.jaxc.array_to_map` writes it
+        back to the host maps if host observers need it."""
+        from .ingraph import InGraphSelector
+        lp = self.runtime.attached("tuner")
+        if lp is None:
+            raise RuntimeError(
+                "no tuner policy attached; attach one before routing "
+                "decisions in-graph")
+        sel = InGraphSelector(lp.program, tier=tier)
+        return sel, sel.init_state(self.runtime.maps)
 
     def _net_hook(self, d: Decision) -> None:
         if not self.config.enable_net_hook:
@@ -377,8 +459,13 @@ class CollectiveDispatcher:
     def clear_decision_cache(self) -> None:
         """Manual invalidation hook (e.g. after mutating ``config``
         mid-run outside the epoch mechanism)."""
-        self._decision_cache.clear()
-        self._cache_epoch = -1
+        with self._cache_lock:
+            self._cache_gen = (-1, 0, False, {})
+
+    @property
+    def decision_cache_len(self) -> int:
+        """Entries in the current cache generation (introspection)."""
+        return len(self._cache_gen[3])
 
 
 _DISPATCHER: Optional[CollectiveDispatcher] = None

@@ -8,8 +8,14 @@ functionally-threaded eBPF array map and drives ``lax.switch`` over
 pre-lowered algorithm branches — closed-loop adaptation with ZERO retraces
 and ZERO host round-trips.
 
+Two in-graph tiers share this entry point: ``tier="jaxc"`` (pure-JAX
+if-conversion) and ``tier="pallas"`` (the same CFG lowering packaged as
+one ``pl.pallas_call`` kernel with VMEM-resident state — zero host
+marginal cost on-TPU).  Both carry the array-map state as operands, so
+closed-loop adaptation keeps zero retraces either way.
+
 Usage:
-    sel = InGraphSelector(policy_program)        # verified -> jaxc
+    sel = InGraphSelector(policy_program, tier="pallas")
     state = sel.init_state()
     ...inside your jitted step:
     y, state = sel.all_reduce(x, "model", state, latency_ns=obs)
@@ -17,7 +23,7 @@ Usage:
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +34,7 @@ from ..core.context import Algo, CollType, POLICY_CONTEXT, Proto
 from ..core.jaxc import compile_jax, map_to_array
 from ..core.maps import MapRegistry
 from ..core.program import Program
-from ..core.verifier import verify
+from ..core.verifier import verify_with_info
 from . import algorithms as alg
 
 _FIELDS = list(POLICY_CONTEXT.fields)
@@ -45,14 +51,27 @@ _BRANCHES = [
 
 
 class InGraphSelector:
-    def __init__(self, program: Program):
-        verify(program)
+    def __init__(self, program: Program, *, tier: str = "jaxc"):
+        if tier not in ("jaxc", "pallas"):
+            raise ValueError(f"unknown in-graph tier {tier!r}; "
+                             "use 'jaxc' or 'pallas'")
+        vinfo = verify_with_info(program)
         self.program = program
-        self._fn, self.map_names = compile_jax(program)
+        self.tier = tier
+        if tier == "pallas":
+            from ..core.pallasc import compile_pallas
+            self._fn, self.map_names = compile_pallas(program, vinfo)
+        else:
+            self._fn, self.map_names = compile_jax(program, vinfo)
 
-    def init_state(self) -> Dict[str, jnp.ndarray]:
-        """Device-resident map state (thread through your step fn)."""
-        reg = MapRegistry()
+    def init_state(self, registry: Optional[MapRegistry] = None
+                   ) -> Dict[str, jnp.ndarray]:
+        """Device-resident map state (thread through your step fn).
+
+        With ``registry`` (e.g. a live runtime's ``maps``), the state is
+        seeded from the existing host maps — telemetry a profiler
+        already accumulated moves in-graph instead of starting cold."""
+        reg = registry or MapRegistry()
         out = {}
         for d in self.program.maps:
             m = reg.create(d.name, d.kind, key_size=d.key_size,

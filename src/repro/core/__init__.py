@@ -3,9 +3,11 @@
 Layers:
   isa / asm / frontend   — bytecode, assembler, restricted-Python compiler
   verifier               — PREVAIL-style load-time static verification
-  vm / jit / jaxc        — interpreter (oracle), host JIT, in-graph JAX tier
+  vm / jit               — interpreter (oracle), specializing host JIT
+  jaxc / pallasc         — in-graph tiers: pure-JAX if-conversion, and the
+                           single-Pallas-kernel lowering (zero host cost)
   maps                   — typed cross-plugin state (composability substrate)
-  runtime                — load/attach/hot-reload lifecycle
+  runtime                — load/attach/hot-reload lifecycle, tier selection
 """
 
 from .asm import AsmError, assemble

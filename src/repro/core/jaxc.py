@@ -391,15 +391,21 @@ class _Lowerer:
             route(tgt, e)
 
 
-def compile_jax(prog: Program):
+def compile_jax(prog: Program, vinfo=None):
     """Return (fn, map_names).
 
     ``fn(ctx_vec, map_arrays) -> (ret, ctx_vec_out, map_arrays_out)`` where
     ``ctx_vec`` is uint64[n_fields] and ``map_arrays`` is a dict
     name -> uint64[max_entries, value_slots].  Pure; jit/vmap/scan-safe.
+
+    ``vinfo`` reuses a prior :func:`verify_with_info` result (the shared
+    cfg / loop_bounds / mem_info artifacts) so callers that already
+    verified — the runtime's load path, the pallas tier — pay for one
+    static pass, not two.
     """
     check_supported(prog)
-    vinfo = verify_with_info(prog)
+    if vinfo is None:
+        vinfo = verify_with_info(prog)
 
     def run(ctx_vec, map_arrays: Dict[str, jnp.ndarray]):
         with enable_x64(True):

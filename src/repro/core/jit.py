@@ -220,7 +220,7 @@ def _mk_lookup(m: BpfMap):
             mems.append(v)
             return (len(mems) - 1) << 32
         return f
-    lookup = m.lookup
+    lookup = m.lookup_ref   # live view: the program writes through it
 
     def f(mems, kp):
         o = kp & M32
@@ -256,22 +256,24 @@ def _mk_delete(m: BpfMap):
 
 def _mk_ema(m: BpfMap):
     ks, vs = m.key_size, m.value_size
-    lookup = m.lookup
+    lookup = m.lookup_ref
     update = m.update
+    lock = m.lock
 
     def f(mems, kp, sample, weight):
         w = weight if weight > 1 else 1
         o = kp & M32
         key = bytes(mems[kp >> 32][o:o + ks])
-        v = lookup(key)
-        old = 0 if v is None else int.from_bytes(v[0:8], "little")
-        new = ((old * (w - 1) + sample) // w) & M64
-        if v is None:
-            buf = bytearray(vs)
-            buf[0:8] = new.to_bytes(8, "little")
-            update(key, bytes(buf))
-        else:
-            v[0:8] = new.to_bytes(8, "little")
+        with lock:          # lock-held RMW (maps.py mutation contract)
+            v = lookup(key)
+            old = 0 if v is None else int.from_bytes(v[0:8], "little")
+            new = ((old * (w - 1) + sample) // w) & M64
+            if v is None:
+                buf = bytearray(vs)
+                buf[0:8] = new.to_bytes(8, "little")
+                update(key, bytes(buf))
+            else:
+                v[0:8] = new.to_bytes(8, "little")
         return new
     return f
 
@@ -513,6 +515,11 @@ class _GenV2(_Gen):
         self.env_extra[f"_slots{idx}"] = self.resolved[map_name]._slots
         return f"_slots{idx}"
 
+    def _inline_lock(self, map_name: str) -> str:
+        idx = self.inline_maps.setdefault(map_name, len(self.inline_maps))
+        self.env_extra[f"_mlk{idx}"] = self.resolved[map_name].lock
+        return f"_mlk{idx}"
+
     def _emit_call(self, pc: int, insn: Insn) -> None:
         h = H.HELPERS[insn.imm]
         w = self.w
@@ -547,17 +554,22 @@ class _GenV2(_Gen):
                 return
             # the inline ema reads/writes a full 8-byte slot in place;
             # undersized values take the closure path, which mirrors the
-            # VM's slice-assign (slot-growing) semantics exactly
+            # VM's slice-assign (slot-growing) semantics exactly.  The
+            # RMW holds the per-map lock (maps.py mutation contract): a
+            # racing host update_u64 must not be lost between the read
+            # and the writeback.
             if h.name == "ema_update" and m.value_size >= 8:
                 slots = self._inline_slot(mname)
+                lk = self._inline_lock(mname)
                 u8, p8 = self._use_u(8), self._use_p(8)
                 w(f"_k = {u4}(stack, r2 & {M32})[0]")
                 w("_w = r4 if r4 > 1 else 1")
                 w(f"if _k < {m.max_entries}:")
-                w(f"    _v = {slots}[_k]")
-                w(f"    _old = {u8}(_v, 0)[0]")
-                w(f"    r0 = ((_old * (_w - 1) + r3) // _w) & {M64}")
-                w(f"    {p8}(_v, 0, r0)")
+                w(f"    with {lk}:")
+                w(f"        _v = {slots}[_k]")
+                w(f"        _old = {u8}(_v, 0)[0]")
+                w(f"        r0 = ((_old * (_w - 1) + r3) // _w) & {M64}")
+                w(f"        {p8}(_v, 0, r0)")
                 w("else:")
                 w(f"    r0 = (r3 // _w) & {M64}")
                 return
@@ -852,7 +864,7 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
 
     def _h_map_lookup_elem(mems, r1, r2, r3, r4, r5) -> int:
         m = map_by_handle[r1]
-        v = m.lookup(_buf(mems, r2, m.key_size))
+        v = m.lookup_ref(_buf(mems, r2, m.key_size))
         if v is None:
             return 0
         mems.append(v)
@@ -882,15 +894,16 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
         m = map_by_handle[r1]
         key = _buf(mems, r2, m.key_size)
         w = max(1, r4)
-        v = m.lookup(key)
-        old = 0 if v is None else int.from_bytes(v[0:8], "little")
-        new = ((old * (w - 1) + r3) // w) & M64
-        if v is None:
-            buf = bytearray(m.value_size)
-            buf[0:8] = new.to_bytes(8, "little")
-            m.update(key, bytes(buf))
-        else:
-            v[0:8] = new.to_bytes(8, "little")
+        with m.lock:        # lock-held RMW (maps.py mutation contract)
+            v = m.lookup_ref(key)
+            old = 0 if v is None else int.from_bytes(v[0:8], "little")
+            new = ((old * (w - 1) + r3) // w) & M64
+            if v is None:
+                buf = bytearray(m.value_size)
+                buf[0:8] = new.to_bytes(8, "little")
+                m.update(key, bytes(buf))
+            else:
+                v[0:8] = new.to_bytes(8, "little")
         return new
 
     def _dead():

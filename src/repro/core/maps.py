@@ -14,11 +14,24 @@ Keys and values are fixed-size byte strings; the verifier checks that policy
 programs pass correctly-sized stack buffers.  Host-side code uses the typed
 ``lookup_u64``/``update_u64`` convenience accessors.
 
-Concurrency: a lock-striped design — updates take a per-stripe mutex;
-lookups return an immutable bytes snapshot.  Policy programs receive a
-*pointer* to the value slot (mutable view) exactly like kernel eBPF; per the
-kernel model, racing element writes are allowed and tear-free per 8-byte
-slot (guaranteed here by the GIL + bytearray slice assignment).
+Concurrency — the mutation contract:
+
+  * ``lookup()`` (and the typed host accessors built on it) **copies the
+    value out under the per-map lock**: cross-thread callers get a
+    consistent snapshot that can never tear mid-``update()`` and whose
+    mutation cannot alias map storage.
+  * ``lookup_ref()`` returns the **live** backing bytearray — the
+    kernel-eBPF "pointer to the value slot".  Only the execution tiers
+    (VM / JIT) use it; direct pointer stores through it are tear-free
+    per 8-byte slot (GIL + single slice assignment), matching the kernel
+    model where racing element writes are allowed per-slot.
+  * every multi-slot **writeback path holds the per-map lock** —
+    ``update()``, ``update_u64()``, and the tiers' read-modify-write
+    helpers (``ema_update``) — so host readers can never observe a
+    half-applied multi-slot value or lose an update to an unlocked RMW.
+  * host code composing its own read-modify-write transactions takes
+    :attr:`BpfMap.lock` explicitly (an RLock, so the typed accessors
+    nest inside it).
 """
 
 from __future__ import annotations
@@ -50,8 +63,28 @@ class BpfMap:
         # under one critical section
         self._lock = threading.RLock()
 
-    # -- raw interface used by the VM/JIT tiers ---------------------------
+    @property
+    def lock(self) -> threading.RLock:
+        """The per-map mutex every writeback path holds; host callers
+        composing their own read-modify-write transactions take it too."""
+        return self._lock
+
+    # -- raw interface -----------------------------------------------------
     def lookup(self, key: bytes) -> Optional[bytearray]:
+        """Copy-out lookup for cross-thread (host-side) callers.
+
+        The copy is taken under the map lock, so it can never tear
+        against a lock-held writeback, and mutating it cannot alias map
+        storage.  Execution tiers use :meth:`lookup_ref` for kernel-style
+        pointer semantics."""
+        with self._lock:
+            v = self.lookup_ref(key)
+            return None if v is None else bytearray(v)
+
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
+        """Live view of the value cell (the eBPF value pointer) — VM/JIT
+        tiers only.  Single-slot stores through it are GIL-atomic;
+        multi-slot writebacks must hold :attr:`lock`."""
         raise NotImplementedError
 
     def update(self, key: bytes, value: bytes) -> int:
@@ -83,8 +116,11 @@ class BpfMap:
 
     def update_u64(self, key: int, value: int, slot: int = 0) -> None:
         kb = struct.pack("<I", key) if self.key_size == 4 else struct.pack("<Q", key)
+        # lock-held writeback through the live view (lookup_ref, not the
+        # copy-out lookup: pack_into on a copy would silently drop the
+        # write)
         with self._lock:
-            v = self.lookup(kb)
+            v = self.lookup_ref(kb)
             if v is None:
                 buf = bytearray(self.value_size)
                 struct.pack_into("<Q", buf, slot * 8, value & U64)
@@ -94,7 +130,8 @@ class BpfMap:
 
     def snapshot(self) -> Dict[bytes, bytes]:
         with self._lock:
-            return {bytes(k): bytes(self.lookup(k)) for k in list(self.keys())}
+            return {bytes(k): bytes(self.lookup_ref(k))
+                    for k in list(self.keys())}
 
 
 class ArrayMap(BpfMap):
@@ -109,7 +146,7 @@ class ArrayMap(BpfMap):
         idx = struct.unpack("<I", key)[0]
         return idx if idx < self.max_entries else None
 
-    def lookup(self, key: bytes) -> Optional[bytearray]:
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
         idx = self._index(key)
         return None if idx is None else self._slots[idx]
 
@@ -118,7 +155,8 @@ class ArrayMap(BpfMap):
         idx = self._index(key)
         if idx is None:
             return -1
-        self._slots[idx][:] = value
+        with self._lock:
+            self._slots[idx][:] = value
         return 0
 
     def delete(self, key: bytes) -> int:
@@ -137,7 +175,7 @@ class HashMap(BpfMap):
         super().__init__(name, key_size, value_size, max_entries)
         self._table: Dict[bytes, bytearray] = {}
 
-    def lookup(self, key: bytes) -> Optional[bytearray]:
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
         self._check_key(key)
         return self._table.get(bytes(key))
 
@@ -182,7 +220,7 @@ class PerCpuArrayMap(ArrayMap):
             self._tls.cpu = cpu
         return cpu
 
-    def lookup(self, key: bytes) -> Optional[bytearray]:
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
         idx = self._index(key)
         return None if idx is None else self._cpu_slots[self._cpu()][idx]
 

@@ -196,17 +196,40 @@ _EMPTY_CHAIN = _Chain(links=(), fn=None, counted_fn=None, fingerprint=0)
 
 
 class PolicyRuntime:
-    """One runtime per process, holding maps + per-section link chains."""
+    """One runtime per process, holding maps + per-section link chains.
+
+    ``tier`` selects the execution tier every loaded program runs on:
+
+      * ``"jit"``    — specializing host JIT (v2 codegen), the default
+      * ``"interp"`` — reference interpreter (differential ground truth)
+      * ``"jaxc"``   — pure-JAX in-graph lowering behind the host bridge
+      * ``"pallas"`` — single-Pallas-kernel in-graph lowering behind the
+        host bridge (zero host marginal cost once callers move the state
+        in-graph; see :mod:`repro.core.pallasc`)
+
+    All tiers reuse ONE verifier pass: the load path verifies once and
+    hands the cfg / loop_bounds / max_steps artifacts to whichever
+    compiler the tier selects.  ``use_interpreter=True`` is the legacy
+    spelling of ``tier="interp"``."""
+
+    TIERS = ("jit", "interp", "jaxc", "pallas")
 
     def __init__(self, *, use_interpreter: bool = False,
+                 tier: Optional[str] = None,
                  printk_log_max: int = 4096):
+        if tier is None:
+            tier = "interp" if use_interpreter else "jit"
+        if tier not in self.TIERS:
+            raise ValueError(f"unknown tier {tier!r}; valid tiers: "
+                             f"{', '.join(self.TIERS)}")
+        self.tier = tier
         self.maps = MapRegistry()
         self._chains: Dict[str, _Chain] = {s: _EMPTY_CHAIN for s in CTX_TYPES}
         self._epoch = 0
         self._next_link_id = 1
         self._load_lock = threading.Lock()
         self.stats = RuntimeStats()
-        self.use_interpreter = use_interpreter
+        self.use_interpreter = tier == "interp"
         # bounded ring buffer — chatty policies on long-running jobs must
         # not leak memory through trace_printk (same leak class the
         # decision log fixed in PR 1); maxlen=None keeps an unbounded log
@@ -532,7 +555,7 @@ class PolicyRuntime:
                 raise
         t1 = time.perf_counter()
         resolved = self._resolve_maps(program)
-        if self.use_interpreter:
+        if self.tier == "interp":
             # fuel: the verifier's proven dynamic-step bound (plus slack
             # for helper-internal work) as runtime defense-in-depth; the
             # proven bound always wins — clamping below it would fault
@@ -541,6 +564,11 @@ class PolicyRuntime:
             vm = VM(program.insns, resolved,
                     printk=self._printk_log.append, fuel=fuel)
             fn = vm.run
+        elif self.tier in ("jaxc", "pallas"):
+            # in-graph tiers behind the host bridge; the verifier's
+            # cfg/loop_bounds/region artifacts are reused, never recomputed
+            from .pallasc import compile_host
+            fn = compile_host(program, resolved, vinfo, tier=self.tier)
         else:
             # the verifier's region analysis feeds the specializing (v2)
             # code generator — one static pass pays for both safety and speed

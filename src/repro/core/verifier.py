@@ -606,6 +606,15 @@ class Verifier:
                 strict = base == "jge"       # continue while counter <  K
             elif f_out and base in ("jlt", "jle"):
                 strict = base == "jlt"
+            elif base in self._SIGNED_TO_UNSIGNED:
+                reasons.append(
+                    f"exit test at insn {pc} uses signed {base!r}: a "
+                    "counter holding a large-unsigned (negative-signed) "
+                    "value orders differently under signed comparison, so "
+                    "no unsigned monotone trip bound follows; compare "
+                    "with unsigned jlt/jle (continue) or jge/jgt (exit) "
+                    "instead")
+                continue
             else:
                 reasons.append(
                     f"exit test at insn {pc} uses {base!r}; only unsigned "
@@ -657,9 +666,35 @@ class Verifier:
                     "loop (a conditional `i += c` cannot prove progress)")
                 continue
             step = min(s for _, s in incs)
+            # u64 wraparound guard: the ceil(span/step) formula assumes
+            # the counter climbs monotonically toward the limit.  If one
+            # iteration's advance can carry a passing counter across
+            # 2**64, it re-enters from 0 below the limit and the formula
+            # undercounts the trips — the tiers then disagree on how
+            # many iterations actually run.  The largest passing value
+            # is limit-1 under a strict test (continue while < limit)
+            # but limit itself under a non-strict (<=) one — the exact
+            # limit + advance == 2**64 case is an infinite loop.
+            advance = sum(s for _, s in incs)
+            max_pass = limit - 1 if strict else limit
+            if limit > 0 and max_pass + advance > U64_MAX:
+                reasons.append(
+                    f"exit test at insn {pc}: the counter may wrap "
+                    f"around 2**64 before the exit test fires (limit "
+                    f"{limit} with per-iteration advance up to {advance}"
+                    "); a limit this close to 2**64 — typically a "
+                    "negative-signed constant — cannot be bounded")
+                continue
             # constant entry value tightens the bound (an unsigned counter
-            # of unknown start still bounds at ceil(limit/step))
+            # of unknown start still bounds at ceil(limit/step): every
+            # passing test reads a value < limit, consecutive passes are
+            # >= step apart, and the guard above rules out wrapping back
+            # under the limit).  A large-unsigned (negative-signed) entry
+            # value may wrap before the FIRST test, so it gets the
+            # unknown-start bound, not the (negative) span.
             init = self._cell_init(L, cell) or 0
+            if init + advance > U64_MAX:
+                init = 0
             span = limit - init
             if strict:
                 bound = max(0, (span + step - 1) // step)
@@ -811,10 +846,35 @@ class Verifier:
             return states
         return [(taken_tgt, st), (fall_tgt, st)]
 
-    @staticmethod
-    def _refine_scalar(a: AVal, base: str, k: int):
+    _SIGNED_TO_UNSIGNED = {"jsgt": "jgt", "jsge": "jge",
+                           "jslt": "jlt", "jsle": "jle"}
+
+    @classmethod
+    def _refine_scalar(cls, a: AVal, base: str, k: int):
         """Return (taken_val, fall_val); None = infeasible edge (pruned)."""
         lo, hi = a.lo, a.hi
+
+        if base in cls._SIGNED_TO_UNSIGNED:
+            # Signed refinement is sound only when the interval sits
+            # entirely within one signed half-plane: there signed order
+            # agrees with unsigned order on the raw u64 encodings.  An
+            # interval spanning the sign boundary is non-convex under
+            # signed order, so it must not be refined (treating a
+            # large-unsigned value as if the unsigned bound applied is
+            # exactly the wrong-trip-bound bug class).
+            half = 1 << 63
+            if not (hi < half or lo >= half):
+                return (a, a)
+            a_neg, k_neg = lo >= half, k >= half
+            if a_neg != k_neg:
+                # different signed halves: the comparison is statically
+                # decided (negative < non-negative), so one edge prunes
+                a_lt_k = a_neg
+                taken = a_lt_k if base in ("jslt", "jsle") \
+                    else not a_lt_k
+                return (a, None) if taken else (None, a)
+            base = cls._SIGNED_TO_UNSIGNED[base]
+            # same half: fall through to the unsigned refinement below
 
         def iv(l, h):
             return None if l > h else AVal(SCALAR, l, h)
@@ -841,7 +901,7 @@ class Verifier:
             return (iv(lo, min(hi, k - 1)), iv(max(lo, k), hi))
         if base == "jle":
             return (iv(lo, min(hi, k)), iv(max(lo, k + 1), hi))
-        # signed / jset: no refinement
+        # jset: no refinement
         return (a, a)
 
     @staticmethod

@@ -254,7 +254,9 @@ class VM:
                 raise VMError("map_lookup_elem: r1 must be a map pointer")
             m: BpfMap = mp.mem
             key = stack_bytes(kp, m.key_size)
-            v = m.lookup(key)
+            # live view: the program dereferences the returned pointer
+            # (kernel semantics); host-side readers get copies instead
+            v = m.lookup_ref(key)
             regs[0] = 0 if v is None else Ptr("mapval", v, 0)
         elif h.name == "map_update_elem":
             mp, kp, vp = regs[1], regs[2], regs[3]
@@ -287,15 +289,18 @@ class VM:
             m = mp.mem
             key = stack_bytes(kp, m.key_size)
             w = max(1, int(weight) if not isinstance(weight, Ptr) else 1)
-            v = m.lookup(key)
-            old = 0 if v is None else int.from_bytes(v[0:8], "little")
-            new = (old * (w - 1) + int(sample)) // w
-            if v is None:
-                buf = bytearray(m.value_size)
-                buf[0:8] = u64(new).to_bytes(8, "little")
-                m.update(key, bytes(buf))
-            else:
-                v[0:8] = u64(new).to_bytes(8, "little")
+            # the read-modify-write must hold the map lock or a racing
+            # update_u64/update loses its write between our read and store
+            with m.lock:
+                v = m.lookup_ref(key)
+                old = 0 if v is None else int.from_bytes(v[0:8], "little")
+                new = (old * (w - 1) + int(sample)) // w
+                if v is None:
+                    buf = bytearray(m.value_size)
+                    buf[0:8] = u64(new).to_bytes(8, "little")
+                    m.update(key, bytes(buf))
+                else:
+                    v[0:8] = u64(new).to_bytes(8, "little")
             regs[0] = u64(new)
         else:
             raise VMError(f"helper {h.name} not implemented")

@@ -742,6 +742,210 @@ def test_random_bounded_loops_match_jaxc(seed):
     assert int(jret) == want
 
 
+_rand_map = map_decl("rand_loop_map", kind="array", value_size=8,
+                     max_entries=8)
+
+
+def _random_map_loop_program(rng: random.Random):
+    """A seeded bounded loop that also accumulates into an array-map cell
+    through the looked-up value pointer, so the differential covers map
+    state — not just the return value — on every tier."""
+    limit = rng.randint(65, 200)
+    step = rng.choice([1, 1, 2, 3])
+    key = rng.randint(0, 7)
+    lines = [
+        f"    mov64  r7, {rng.randint(1, 1 << 20)}",
+        "    mov64  r6, 0",
+        f"    stw    [r10-4], {key}",
+        "    ldmap  r1, rand_loop_map",
+        "    mov64  r2, r10",
+        "    add64i r2, -4",
+        "    call   map_lookup_elem",
+        "    jeqi   r0, 0, out",
+        "    mov64  r9, r0",
+        "loop:",
+        f"    jge    r6, {limit}, out",
+    ]
+    for _ in range(rng.randint(1, 3)):
+        op, kind = rng.choice(_BODY_OPS)
+        if kind == "imm":
+            lines.append(f"    {op} r7, {rng.randint(1, 1 << 16)}")
+        elif kind == "shift":
+            lines.append(f"    {op} r7, {rng.randint(1, 13)}")
+        else:
+            lines.append(f"    {op} r7, r6")
+    lines += [
+        "    ldxdw  r8, [r9+0]",
+        "    add64  r8, r7",
+        "    stxdw  [r9+0], r8",
+        f"    add64i r6, {step}",
+        "    ja     loop",
+        "out:",
+        "    mov64  r0, r7",
+        "    exit",
+    ]
+    return _tuner("\n".join(lines), maps=(_rand_map,))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_bounded_loops_match_pallas(seed):
+    """interp == pallas on >= 20 seeded random loop programs, map state
+    compared after each run (the pallas analogue of the jaxc leg, with
+    map writebacks in the loop body)."""
+    jax, enable_x64, _, ctx_to_vec, map_to_array = _jaxc_or_skip()
+    from repro.core.maps import MapRegistry
+    from repro.core.pallasc import compile_pallas
+
+    rng = random.Random(0xD00D + seed)
+    prog = _random_map_loop_program(rng)
+    vinfo = verify_with_info(prog)  # must verify
+    assert vinfo.loop_bounds
+    buf = make_ctx("tuner", msg_size=1 << 20).buf
+
+    reg = MapRegistry()
+    m = reg.create("rand_loop_map", "array", value_size=8, max_entries=8)
+    for k in range(8):
+        m.update_u64(k, rng.randint(0, 1 << 30))
+    arrays = {"rand_loop_map": map_to_array(m)}
+    want = VM(prog.insns, {"rand_loop_map": m}).run(bytearray(buf))
+    want_state = [m.lookup_u64(k) for k in range(8)]
+
+    fn, _names = compile_pallas(prog, vinfo)
+    with enable_x64(True):
+        ret, _, arrs = jax.jit(fn)(ctx_to_vec(bytearray(buf)), arrays)
+    assert int(ret) == want
+    got = [int(x) for x in np.asarray(arrs["rand_loop_map"])[:, 0]]
+    assert got == want_state
+
+
+# ---------------------------------------------------------------------------
+# Signed-compare / wraparound trip bounds (interval-domain bugfix)
+# ---------------------------------------------------------------------------
+
+WRAP_INIT_DO_WHILE = """
+    lddw   r6, -1
+loop:
+    add64i r6, 1
+    jgei   r6, 100, done
+    ja     loop
+done:
+    mov64  r0, r6
+    exit
+"""
+
+
+def test_negative_init_do_while_gets_real_trip_bound():
+    """A counter starting at -1 (u64 2**64-1) wraps to 0 on the first
+    post-increment test and then really runs 100 more passes.  The
+    pre-fix signed span reasoning proved trip bound 0 — jaxc would run
+    ONE fori iteration while the VM/JIT ran 101, silently diverging."""
+    prog = _tuner(WRAP_INIT_DO_WHILE)
+    vinfo = verify_with_info(prog)
+    assert vinfo.loop_bounds == {1: 100}
+    want = VM(prog.insns, {}, fuel=4 * vinfo.max_steps).run(
+        make_ctx("tuner").buf)
+    assert want == 100                      # the loop genuinely ran
+
+
+def test_negative_init_do_while_identical_across_tiers():
+    jax, enable_x64, compile_jax, ctx_to_vec, _ = _jaxc_or_skip()
+    prog = _tuner(WRAP_INIT_DO_WHILE)
+    buf = make_ctx("tuner").buf
+    want = VM(prog.insns, {}).run(bytearray(buf))
+    f2 = compile_program(prog, {})
+    assert f2(bytearray(buf)) == want
+    fn, _ = compile_jax(prog)
+    with enable_x64(True):
+        jret, _, _ = jax.jit(fn)(ctx_to_vec(bytearray(buf)), {})
+    assert int(jret) == want, \
+        "jaxc ran a different trip count than the interpreter"
+
+
+def test_limit_near_u64_max_rejected_as_wraparound():
+    """A limit within one iteration's advance of 2**64 (a negative-signed
+    constant) could carry a passing counter across the wrap and back
+    under the limit — the bound formula would undercount, so reject."""
+    with pytest.raises(VerifierError) as ei:
+        verify(_tuner("""
+            lddw   r6, -2000
+        loop:
+            jgei   r6, -1000, done
+            add64i r6, 3000
+            ja     loop
+        done:
+            mov64  r0, 0
+            exit
+        """))
+    msg = str(ei.value)
+    assert "wrap around 2**64" in msg
+    assert "negative-signed" in msg
+
+
+@pytest.mark.parametrize("op", ["jslti", "jsgti"])
+def test_signed_exit_test_rejected_with_signed_message(op):
+    """Signed loop exits reject with a message that names the signed/
+    unsigned hazard and the unsigned alternative, not a generic one."""
+    body = f"""
+        mov64  r6, 0
+    loop:
+        add64i r6, 1
+        {op}  r6, 100, {'loop' if op == 'jslti' else 'done'}
+    """ + ("""
+        mov64  r0, 0
+        exit
+    """ if op == "jslti" else """
+        ja     loop
+    done:
+        mov64  r0, 0
+        exit
+    """)
+    with pytest.raises(VerifierError) as ei:
+        verify(_tuner(body))
+    msg = str(ei.value)
+    assert "signed" in msg
+    assert "large-unsigned (negative-signed)" in msg
+    assert "unsigned jlt/jle" in msg
+
+
+def test_nonstrict_exit_landing_exactly_on_wrap_rejected():
+    """`jle` keeps the counter alive AT the limit, so a step that carries
+    it from exactly `limit` to exactly 2**64 wraps to 0 <= limit and the
+    loop is infinite — yet the span formula proves a small finite bound
+    (65536 here, inside the fuel cap).  The wraparound guard must use
+    limit (not limit-1) as the largest passing value for non-strict
+    tests."""
+    step = 1 << 48
+    with pytest.raises(VerifierError, match="wrap around 2\\*\\*64"):
+        verify(_tuner(f"""
+            mov64  r6, 0
+        loop:
+            jlei   r6, {-step}, body
+            ja     done
+        body:
+            add64i r6, {step}
+            ja     loop
+        done:
+            mov64  r0, 0
+            exit
+        """))
+
+
+def test_normal_loops_keep_exact_bounds_after_wrap_guard():
+    """Regression guard: the wraparound checks must not disturb ordinary
+    ascending loops' exact bounds."""
+    v = verify_with_info(_tuner("""
+        mov64  r6, 5
+    loop:
+        jge    r6, 105, done
+        add64i r6, 1
+        ja     loop
+    done:
+        mov64  r0, r6
+        exit
+    """))
+    assert v.loop_bounds == {1: 100}
+
+
 # ---------------------------------------------------------------------------
 # Runtime integration
 # ---------------------------------------------------------------------------

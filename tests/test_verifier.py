@@ -244,3 +244,77 @@ def test_pointer_comparison_order_rejected():
     """)
     with pytest.raises(VerifierError, match="ordered comparison"):
         verify(prog)
+
+
+# ---------------------------------------------------------------------------
+# Signed interval refinement (jsgt/jslt/jsge/jsle against an immediate)
+# ---------------------------------------------------------------------------
+
+def test_signed_guard_refines_within_nonnegative_half():
+    """A 4-byte load is provably in the non-negative signed half, where
+    signed order equals unsigned order — a jsgt 0 guard must refine the
+    divisor interval to [1, ...] so the division verifies.  (Pre-fix the
+    signed compare refined nothing and the program was rejected.)"""
+    verify(_tuner("""
+        ldxw   r2, [r1+msg_size]
+        jsgti  r2, 0, ok
+        mov64  r0, 0
+        exit
+    ok:
+        mov64  r3, 1000
+        div64  r3, r2
+        mov64  r0, r3
+        exit
+    """))
+
+
+def test_signed_guard_must_not_refine_boundary_spanning_interval():
+    """An 8-byte load spans the sign boundary: a large-unsigned value is
+    negative-signed, so `jsgt 0` does NOT prove the value nonzero in
+    unsigned terms — refining here is exactly the wrong-bound bug class.
+    The divisor keeps 0 in its interval and the division still rejects."""
+    with pytest.raises(VerifierError, match="contains 0"):
+        verify(_tuner("""
+            ldxdw  r2, [r1+msg_size]
+            jsgti  r2, 0, ok
+            mov64  r0, 0
+            exit
+        ok:
+            mov64  r3, 1000
+            div64  r3, r2
+            mov64  r0, r3
+            exit
+        """))
+
+
+def test_signed_compare_across_halves_prunes_infeasible_edge():
+    """A provably non-negative value can never be jslt a negative
+    immediate: the taken edge is statically infeasible, so code behind
+    it (here an out-of-bounds ctx access) is pruned, not verified."""
+    verify(_tuner("""
+        ldxw   r2, [r1+msg_size]
+        jslti  r2, -5, bad
+        mov64  r0, 0
+        exit
+    bad:
+        ldxdw  r3, [r1+512]
+        mov64  r0, 0
+        exit
+    """))
+
+
+def test_signed_refinement_matches_vm_on_negative_half():
+    """Both-negative signed comparison refines on the u64 encodings
+    (signed order == unsigned order within the negative half), and the
+    accepted program agrees with the interpreter."""
+    prog = _tuner("""
+        lddw   r2, -10
+        jslti  r2, -5, small
+        mov64  r0, 1
+        exit
+    small:
+        mov64  r0, 2
+        exit
+    """)
+    verify(prog)
+    assert VM(prog.insns, {}).run(make_ctx("tuner").buf) == 2
