@@ -4,11 +4,15 @@ Asserts the fast-path performance invariants cheaply:
 
 * the specializing (v2) JIT tier is not slower than the interpreter tier
   on any Table 1 policy,
-* a warm decision-cache hit is not slower than an uncached dispatch, and
+* a warm decision-cache hit is not slower than an uncached dispatch,
 * on the loop-heavy bounded-loop policy, v2's native-``while`` codegen
   clears the interpreter by the LOOP_SPEEDUP_MIN factor — a regression
   to per-iteration dispatch (or an accidental fall back to the
-  dispatcher loop) trips this threshold.
+  dispatcher loop) trips this threshold, and
+* the pallas tiers (uint64 and the Mosaic-ready 32-bit-pair lowering)
+  agree with the interpreter AND their device-resident bridge performs
+  ZERO map uploads across a warm repeated-call loop (the bridge-sync
+  win, asserted via dirty counters rather than wall-clock).
 
 Prints a one-line JSON perf record (and reports rows when driven by
 ``benchmarks.run``).  Run standalone:
@@ -92,23 +96,33 @@ def smoke() -> dict:
         "min_speedup": LOOP_SPEEDUP_MIN, "ok": ok}
     rec["ok"] = rec["ok"] and ok
 
-    # pallas tier (gated on a working x64 scope): the differential is the
-    # invariant — one kernel decision must agree with the interpreter
-    # (return value AND ctx out).  The timing column is informational:
-    # through the host bridge each call pays the host<->device state
-    # sync, which vanishes when callers keep state in-graph.
+    # pallas tiers: the differential is the invariant — one kernel
+    # decision must agree with the interpreter (return value AND ctx
+    # out).  The warm repeated-call loop makes the device-resident
+    # bridge win CI-visible: with clean host maps, repeat calls must
+    # perform ZERO map uploads (asserted structurally via the bridge's
+    # dirty counters — timing columns stay informational, so CI cannot
+    # flake on machine noise).  The uint64 tier needs a working x64
+    # scope; the 32-bit-pair tier runs everywhere.
     from repro.compat import have_x64
-    if have_x64():
-        rt_pal = PolicyRuntime(tier="pallas")
+    pallas_tiers = ["pallas32"] + (["pallas"] if have_x64() else [])
+    for tier in pallas_tiers:
+        rt_pal = PolicyRuntime(tier=tier)
         lp_pal = rt_pal.load(latency_argmin_tuner.program)
         _seed_loop(rt_pal)
         b_vm, b_pal = bytearray(ctx.buf), bytearray(ctx.buf)
         ok = (lp_vm.fn(b_vm) == lp_pal.fn(b_pal)
               and bytes(b_vm) == bytes(b_pal))
-        pal_ns = _bench(lp_pal.fn, bytearray(ctx.buf), n=64)
-        rec["policies"]["latency_argmin_tuner[pallas]"] = {
-            "pallas_bridge_ns": round(pal_ns, 1),
-            "interp_ns": round(vm_ns, 1), "differential_ok": ok, "ok": ok}
+        bridge = lp_pal.fn
+        cold_uploads = bridge.stats.map_uploads
+        warm_ns = _bench(bridge, bytearray(ctx.buf), n=64)
+        warm_uploads = bridge.stats.map_uploads - cold_uploads
+        ok = ok and warm_uploads == 0
+        rec["policies"][f"latency_argmin_tuner[{tier}]"] = {
+            "warm_bridge_ns": round(warm_ns, 1),
+            "interp_ns": round(vm_ns, 1),
+            "warm_uploads": warm_uploads, "cold_uploads": cold_uploads,
+            "differential_ok": ok, "ok": ok}
         rec["ok"] = rec["ok"] and ok
 
     rt = PolicyRuntime()

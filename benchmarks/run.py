@@ -7,9 +7,12 @@ Usage:
 
 ``--ci`` is the single entry the builder runs as the merge gate: the
 perf-smoke suite (JIT >= interpreter, cache >= uncached, pallas-tier
-differential row), the ``table1_pallas`` five-tier differential
-(interp == v1 == v2 == jaxc == pallas, zero retraces), then the tier-1
-pytest suite; exit status is nonzero if any leg fails.
+differential rows incl. the zero-warm-upload bridge assertion), the
+``table1_pallas`` five-tier differential (interp == v1 == v2 == jaxc ==
+pallas, zero retraces), the ``table1_pallas32`` SIX-tier differential
+(+ the Mosaic-ready 32-bit-pair lowering, whose leg runs without
+``enable_x64``), then the tier-1 pytest suite; exit status is nonzero
+if any leg fails.
 
 Prints ``section,name,key=value,...`` CSV-ish lines and writes
 results/bench.json.
@@ -70,18 +73,20 @@ def run_ci() -> int:
         print("CI: perf smoke FAILED", flush=True)
         failures += 1
 
-    print("=== ci: table1_pallas differential ===", flush=True)
-    r = subprocess.run(
-        [sys.executable, "-c",
-         "import json, sys;"
-         "from benchmarks.table1_overhead import pallas_differential;"
-         "rec = pallas_differential();"
-         "print(json.dumps(rec, separators=(',', ':'), default=str));"
-         "sys.exit(0 if rec['ok'] else 1)"],
-        cwd=repo, env=env)
-    if r.returncode != 0:
-        print("CI: table1_pallas differential FAILED", flush=True)
-        failures += 1
+    for suite in ("pallas_differential", "pallas32_differential"):
+        print(f"=== ci: table1_{suite.split('_')[0]} differential ===",
+              flush=True)
+        r = subprocess.run(
+            [sys.executable, "-c",
+             "import json, sys;"
+             f"from benchmarks.table1_overhead import {suite};"
+             f"rec = {suite}();"
+             "print(json.dumps(rec, separators=(',', ':'), default=str));"
+             "sys.exit(0 if rec['ok'] else 1)"],
+            cwd=repo, env=env)
+        if r.returncode != 0:
+            print(f"CI: {suite} FAILED", flush=True)
+            failures += 1
 
     print("=== ci: tier-1 pytest ===", flush=True)
     known_path = os.path.join(repo, "benchmarks", "ci_known_failures.txt")

@@ -217,6 +217,128 @@ def pallas_differential(report=None):
     return rec
 
 
+def pallas32_differential(report=None):
+    """``table1_pallas32``: the SIX-tier ladder closes — interp == v1 ==
+    v2 == jaxc == pallas == pallas32 (return value, ctx out, map state)
+    on every in-graph-eligible Table-1 and loop policy, with ZERO
+    retraces across decisions, and the 32-bit-pair leg runs with jax's
+    default 32-bit types (no ``enable_x64`` anywhere on its path — the
+    Mosaic-compilable property).  Reused verbatim as a CI gate by
+    ``benchmarks.run --ci``.
+
+    Unlike :func:`pallas_differential`, this suite does NOT skip when
+    the build's x64 scope is broken: the uint64 in-graph legs drop out,
+    but the pair leg still gates (that is its reason to exist)."""
+    import jax
+
+    from repro.compat import enable_x64, have_x64
+    from repro.core.jaxc import (JaxcError, check_supported, compile_jax,
+                                 ctx_to_vec, map_to_array)
+    from repro.core.lower32 import (ctx_to_vec32, map_to_array32,
+                                    ret32_to_int, vec32_to_bytes)
+    from repro.core.pallasc import compile_pallas
+    from repro.policies.loops import LOOP_POLICIES
+
+    rec = {"suite": "table1_pallas32", "ok": True,
+           "x64_free_32bit_path": not jax.config.jax_enable_x64,
+           "policies": {}}
+    ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
+                   max_channels=32)
+    table1 = [(p.program, seed_maps) for p in
+              (T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+               T.latency_feedback, T.bandwidth_probe, T.slo_enforcer)]
+    loops = [(p.program, _seed_loop_maps) for p in LOOP_POLICIES]
+    for prog, seed_fn in table1 + loops:
+        row = {}
+        try:
+            check_supported(prog)
+        except JaxcError as e:
+            # hash-map / host-helper policies stay host-tier-only; the
+            # ladder still closes across the three host tiers
+            host = _host_tier_results(prog, ctx, seed_fn)
+            row["eligible"] = False
+            row["why"] = str(e)
+            row["ok"] = len(set(map(str, host.values()))) == 1
+            rec["policies"][prog.name] = row
+            rec["ok"] = rec["ok"] and row["ok"]
+            if report is not None:
+                report("table1_pallas32", prog.name, **row)
+            continue
+
+        host = _host_tier_results(prog, ctx, seed_fn)
+        want_ret, want_buf, want_state = host["interp"]
+        row["eligible"] = True
+        row["ok"] = len(set(map(str, host.values()))) == 1
+
+        def fresh_arrays(to_array):
+            rt = PolicyRuntime(use_interpreter=True)
+            rt.load(prog)
+            seed_fn(rt)
+            return {d.name: to_array(rt.maps.get(d.name))
+                    for d in prog.maps}
+
+        # -- pallas32 leg: no x64, always runs -------------------------
+        arrays = fresh_arrays(map_to_array32)
+        fn32, names = compile_pallas(prog, word_width=32)
+        traces = []
+
+        def traced32(vec, arrs, _fn=fn32, _t=traces):
+            _t.append(1)
+            return _fn(vec, arrs)
+        jfn = jax.jit(traced32)
+        ret, vec_out, arrs_out = jfn(ctx_to_vec32(bytearray(ctx.buf)),
+                                     arrays)
+        # second decision feeds the updated map state back in:
+        # closed-loop adaptation must not retrace
+        jfn(ctx_to_vec32(bytearray(ctx.buf)),
+            {n: arrs_out[n] for n in names})
+        state32 = {}
+        for n in names:
+            a = np.asarray(arrs_out[n])
+            state32[n] = [int(a[k, 0, 0]) | (int(a[k, 0, 1]) << 32)
+                          for k in range(a.shape[0])]
+        ok32 = (ret32_to_int(ret) == want_ret
+                and vec32_to_bytes(vec_out) == want_buf
+                and all(state32[n] == want_state[n] for n in names)
+                and len(traces) == 1)
+        row["pallas32_ok"] = ok32
+        row["pallas32_retraces"] = len(traces) - 1
+        row["ok"] = row["ok"] and ok32
+
+        # -- uint64 in-graph legs (need the x64 scope) -----------------
+        if have_x64():
+            for tier, compiler in (
+                    ("jaxc", compile_jax),
+                    ("pallas", lambda p: compile_pallas(p, word_width=64))):
+                fn, names = compiler(prog)
+                traces = []
+
+                def traced(vec, arrs, _fn=fn, _t=traces):
+                    _t.append(1)
+                    return _fn(vec, arrs)
+                jfn = jax.jit(traced)
+                with enable_x64(True):
+                    ret, vec_out, arrs_out = jfn(
+                        ctx_to_vec(bytearray(ctx.buf)),
+                        fresh_arrays(map_to_array))
+                    jfn(ctx_to_vec(bytearray(ctx.buf)),
+                        {n: arrs_out[n] for n in names})
+                tier_ok = (
+                    int(ret) == want_ret
+                    and np.asarray(vec_out).astype("<u8").tobytes()
+                    == want_buf
+                    and all([int(x) for x in np.asarray(arrs_out[n])[:, 0]]
+                            == want_state[n] for n in names)
+                    and len(traces) == 1)
+                row[tier + "_ok"] = tier_ok
+                row["ok"] = row["ok"] and tier_ok
+        rec["policies"][prog.name] = row
+        rec["ok"] = rec["ok"] and row["ok"]
+        if report is not None:
+            report("table1_pallas32", prog.name, **row)
+    return rec
+
+
 def run(report):
     ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
                    max_channels=32)
@@ -271,9 +393,12 @@ def run(report):
     # allows), then per-tier timings — the loop-heavy analogue of Table 1
     _run_loop_section(report, ctx)
 
-    # the full four-tier ladder: interp == v1 == v2 == jaxc == pallas on
-    # every in-graph-eligible policy, zero retraces across decisions
+    # the full tier ladder: interp == v1 == v2 == jaxc == pallas on
+    # every in-graph-eligible policy, zero retraces across decisions,
+    # then the six-tier ladder including the Mosaic-ready 32-bit-pair
+    # lowering (table1_pallas32; its pair leg runs without enable_x64)
     pallas_differential(report)
+    pallas32_differential(report)
 
     # dispatch layer: cold full path vs epoch-keyed decision-cache hits
     rt = PolicyRuntime()

@@ -371,13 +371,17 @@ class CollectiveDispatcher:
         Returns ``(selector, state)``: an
         :class:`~repro.collectives.ingraph.InGraphSelector` compiled from
         the highest-precedence attached tuner program (``tier="pallas"``
-        for the single-kernel lowering, ``"jaxc"`` for the pure-JAX one)
-        plus device-resident map state seeded from THIS runtime's live
-        maps — host-accumulated telemetry moves in-graph, and from then
-        on decisions run inside the compiled step with zero host
+        for the single-kernel lowering, ``"pallas32"`` for the same
+        kernel in the Mosaic-ready 32-bit-pair representation — no x64
+        scope anywhere — and ``"jaxc"`` for the pure-JAX one) plus
+        device-resident map state seeded from THIS runtime's live maps —
+        host-accumulated telemetry moves in-graph, and from then on
+        decisions run inside the compiled step with zero host
         round-trips and zero retraces.  Thread ``state`` through the
-        step function; :func:`repro.core.jaxc.array_to_map` writes it
-        back to the host maps if host observers need it."""
+        step function; :func:`repro.core.jaxc.array_to_map`
+        (:func:`repro.core.lower32.array32_to_map` for ``pallas32``
+        state) writes it back to the host maps if host observers need
+        it."""
         from .ingraph import InGraphSelector
         lp = self.runtime.attached("tuner")
         if lp is None:

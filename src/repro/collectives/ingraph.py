@@ -8,14 +8,17 @@ functionally-threaded eBPF array map and drives ``lax.switch`` over
 pre-lowered algorithm branches — closed-loop adaptation with ZERO retraces
 and ZERO host round-trips.
 
-Two in-graph tiers share this entry point: ``tier="jaxc"`` (pure-JAX
-if-conversion) and ``tier="pallas"`` (the same CFG lowering packaged as
-one ``pl.pallas_call`` kernel with VMEM-resident state — zero host
-marginal cost on-TPU).  Both carry the array-map state as operands, so
-closed-loop adaptation keeps zero retraces either way.
+Three in-graph tiers share this entry point: ``tier="jaxc"`` (pure-JAX
+if-conversion), ``tier="pallas"`` (the same CFG lowering packaged as one
+``pl.pallas_call`` kernel with VMEM-resident state — zero host marginal
+cost on-TPU), and ``tier="pallas32"`` (the kernel in the Mosaic-ready
+32-bit-pair representation: every u64 as a (lo, hi) uint32 pair, no x64
+scope anywhere — the form hardware Mosaic can actually lower).  All carry
+the array-map state as operands, so closed-loop adaptation keeps zero
+retraces either way.
 
 Usage:
-    sel = InGraphSelector(policy_program, tier="pallas")
+    sel = InGraphSelector(policy_program, tier="pallas32")
     state = sel.init_state()
     ...inside your jitted step:
     y, state = sel.all_reduce(x, "model", state, latency_ns=obs)
@@ -29,9 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..compat import axis_size, enable_x64
+from ..compat import axis_size, maybe_x64
 from ..core.context import Algo, CollType, POLICY_CONTEXT, Proto
 from ..core.jaxc import compile_jax, map_to_array
+from ..core.lower32 import map_to_array32
 from ..core.maps import MapRegistry
 from ..core.program import Program
 from ..core.verifier import verify_with_info
@@ -49,20 +53,30 @@ _BRANCHES = [
                                                          n_channels=2)),
 ]
 
+TIERS = ("jaxc", "pallas", "pallas32")
+
 
 class InGraphSelector:
     def __init__(self, program: Program, *, tier: str = "jaxc"):
-        if tier not in ("jaxc", "pallas"):
+        if tier not in TIERS:
             raise ValueError(f"unknown in-graph tier {tier!r}; "
-                             "use 'jaxc' or 'pallas'")
+                             f"use one of {', '.join(TIERS)}")
         vinfo = verify_with_info(program)
         self.program = program
         self.tier = tier
-        if tier == "pallas":
+        if tier == "pallas32":
             from ..core.pallasc import compile_pallas
-            self._fn, self.map_names = compile_pallas(program, vinfo)
+            self._fn, self.map_names = compile_pallas(program, vinfo,
+                                                      word_width=32)
+            self.word_width = 32
+        elif tier == "pallas":
+            from ..core.pallasc import compile_pallas
+            self._fn, self.map_names = compile_pallas(program, vinfo,
+                                                      word_width=64)
+            self.word_width = 64
         else:
             self._fn, self.map_names = compile_jax(program, vinfo)
+            self.word_width = 64
 
     def init_state(self, registry: Optional[MapRegistry] = None
                    ) -> Dict[str, jnp.ndarray]:
@@ -70,15 +84,50 @@ class InGraphSelector:
 
         With ``registry`` (e.g. a live runtime's ``maps``), the state is
         seeded from the existing host maps — telemetry a profiler
-        already accumulated moves in-graph instead of starting cold."""
+        already accumulated moves in-graph instead of starting cold.
+        The array layout follows the tier's word width: uint64 slots for
+        the 64-bit tiers, uint32 [lo, hi] pairs for ``pallas32``."""
         reg = registry or MapRegistry()
+        to_array = map_to_array32 if self.word_width == 32 else map_to_array
         out = {}
         for d in self.program.maps:
             m = reg.create(d.name, d.kind, key_size=d.key_size,
                            value_size=d.value_size,
                            max_entries=d.max_entries)
-            out[d.name] = map_to_array(m)
+            out[d.name] = to_array(m)
         return out
+
+    def _ctx_vec(self, fields: Dict[str, object]) -> jnp.ndarray:
+        """Build the ctx vector in the tier's representation.
+
+        On the 32-bit path, Python ints split into both lanes exactly.
+        Traced integer operands are at most 32 bits wide here (without
+        x64 jax has no wider integer dtype), so they ride the lo lane
+        losslessly; traced FLOATS (e.g. a float32 latency observation
+        that can exceed 2**32 ns) are split into hi/lo so the policy
+        sees the same value the uint64 tiers would."""
+        if self.word_width == 32:
+            vec = jnp.zeros((len(_FIELDS), 2), jnp.uint32)
+            for name, v in fields.items():
+                i = _IDX[name]
+                if isinstance(v, int):
+                    vec = vec.at[i, 0].set(jnp.uint32(v & 0xFFFFFFFF))
+                    vec = vec.at[i, 1].set(
+                        jnp.uint32((v >> 32) & 0xFFFFFFFF))
+                    continue
+                arr = jnp.asarray(v)
+                if jnp.issubdtype(arr.dtype, jnp.floating):
+                    hi = jnp.floor(arr / (2.0**32))
+                    lo = arr - hi * (2.0**32)
+                    vec = vec.at[i, 0].set(lo.astype(jnp.uint32))
+                    vec = vec.at[i, 1].set(hi.astype(jnp.uint32))
+                else:
+                    vec = vec.at[i, 0].set(arr.astype(jnp.uint32))
+            return vec
+        vec = jnp.zeros((len(_FIELDS),), jnp.uint64)
+        for name, v in fields.items():
+            vec = vec.at[_IDX[name]].set(jnp.asarray(v, jnp.uint64))
+        return vec
 
     def decide(self, state: Dict, *, coll: int, msg_bytes: int, n: int,
                comm_id: int = 0, latency_ns=None
@@ -86,22 +135,25 @@ class InGraphSelector:
         """Run the verified policy in-graph.
 
         Returns (algo_idx int32, channels int32, new_state)."""
-        with enable_x64(True):
-            vec = jnp.zeros((len(_FIELDS),), jnp.uint64)
-            vec = vec.at[_IDX["coll_type"]].set(jnp.uint64(coll))
-            vec = vec.at[_IDX["msg_size"]].set(jnp.uint64(msg_bytes))
-            vec = vec.at[_IDX["n_ranks"]].set(jnp.uint64(n))
-            vec = vec.at[_IDX["comm_id"]].set(jnp.uint64(comm_id))
-            vec = vec.at[_IDX["max_channels"]].set(jnp.uint64(32))
+        with maybe_x64(self.word_width == 64):
+            fields: Dict[str, object] = {
+                "coll_type": int(coll), "msg_size": int(msg_bytes),
+                "n_ranks": int(n), "comm_id": int(comm_id),
+                "max_channels": 32,
+            }
             if latency_ns is not None:
                 # live telemetry rides the ctx 'topo_links' slot? no —
                 # policies read it from the map; feed it there via the
                 # profiler program or pass through dtype_bytes-free field
-                vec = vec.at[_IDX["dtype_bytes"]].set(
-                    jnp.asarray(latency_ns, jnp.uint64))
+                fields["dtype_bytes"] = latency_ns
+            vec = self._ctx_vec(fields)
             _, vec_out, state = self._fn(vec, state)
-            algo = vec_out[_IDX["algorithm"]].astype(jnp.int32)
-            ch = vec_out[_IDX["n_channels"]].astype(jnp.int32)
+            if self.word_width == 32:
+                algo = vec_out[_IDX["algorithm"], 0].astype(jnp.int32)
+                ch = vec_out[_IDX["n_channels"], 0].astype(jnp.int32)
+            else:
+                algo = vec_out[_IDX["algorithm"]].astype(jnp.int32)
+                ch = vec_out[_IDX["n_channels"]].astype(jnp.int32)
         algo = jnp.clip(algo, 0, len(_BRANCHES) - 1)
         return algo, ch, state
 

@@ -68,6 +68,18 @@ except AttributeError:
         frame = core.axis_frame(axis_name)
         return getattr(frame, "size", frame)
 
+def maybe_x64(needed: bool = True):
+    """``enable_x64(True)`` scope when ``needed``, a no-op otherwise.
+
+    The 32-bit-pair policy lowering (``word_width=32`` — every u64 as a
+    (lo, hi) uint32 pair, the Mosaic-compilable representation) never
+    touches 64-bit dtypes, so its compile/execute path must not drag the
+    x64 machinery in; callers that serve both word widths scope with
+    ``maybe_x64(word_width == 64)``."""
+    import contextlib
+    return enable_x64(True) if needed else contextlib.nullcontext()
+
+
 _HAVE_X64 = None
 
 

@@ -85,6 +85,26 @@ def check_supported(prog: Program) -> None:
                 "available in-graph")
 
 
+def written_map_names(prog: Program, vinfo) -> frozenset:
+    """Maps the program can mutate, from the verifier's region facts.
+
+    A map is written iff some store's proven region is a value cell of it,
+    or a mutating helper (``map_update_elem`` / ``ema_update``) statically
+    binds to it.  The host bridge uses this to sync back ONLY these maps
+    after a device call — lookup-only telemetry inputs never round-trip."""
+    out = set()
+    for pc, insn in enumerate(prog.insns):
+        if is_store(insn.op):
+            info = vinfo.mem_info.get(pc)
+            if info is not None and info[0] not in ("ctx", "stack"):
+                out.add(info[1])
+        elif insn.op == "call" and insn.imm in (2, 64):
+            mname = vinfo.call_map.get(pc)
+            if mname is not None:
+                out.add(mname)
+    return frozenset(out)
+
+
 def _u64(x):
     return jnp.asarray(x, jnp.uint64)
 
@@ -105,7 +125,15 @@ class _Lowerer:
 
     Machine state lives in attributes (regs/stack/ctx/maps/done/ret) so
     straight-line emission stays imperative; loops snapshot the state
-    into a ``fori_loop`` carry and restore from the final carry."""
+    into a ``fori_loop`` carry and restore from the final carry.
+
+    The CFG walk (regions, predicates, loop carries) is representation-
+    agnostic: every place a 64-bit machine value is materialized,
+    selected, computed, or compared goes through the ``_imm`` / ``_coerce``
+    / ``_sel`` / ``_alu`` / ``_cmp`` hooks plus the memory/helper methods.
+    The base class keeps the native-uint64 representation; the 32-bit-pair
+    lowering (:mod:`repro.core.lower32`, for Mosaic's 32-bit-only integer
+    units) subclasses it and swaps only those hooks."""
 
     def __init__(self, prog: Program, vinfo, ctx_vec, map_arrays):
         self.prog = prog
@@ -114,16 +142,37 @@ class _Lowerer:
         self.decls = list(prog.maps)
         self.map_index = {d.name: i for i, d in enumerate(self.decls)}
         self.map_names = [d.name for d in self.decls]
+        self._init_state(ctx_vec, map_arrays)
 
+    # ---- representation hooks (overridden by the 32-bit-pair lowerer) ----
+    def _init_state(self, ctx_vec, map_arrays) -> None:
         self.ctx = jnp.asarray(ctx_vec, jnp.uint64)
         self.maps = {k: jnp.asarray(v, jnp.uint64)
                      for k, v in map_arrays.items()}
         self.regs: List[jnp.ndarray] = [_u64(0)] * 11
-        self.regs[1] = _u64(_CTX_TAG)
-        self.regs[FP_REG] = _u64(_STACK_TAG | STACK_SIZE)
+        self.regs[1] = self._imm(_CTX_TAG)
+        self.regs[FP_REG] = self._imm(_STACK_TAG | STACK_SIZE)
         self.stack = jnp.zeros(STACK_SIZE // 8, jnp.uint64)  # u64 slots
         self.done = jnp.asarray(False)
-        self.ret = _u64(0)
+        self.ret = self._imm(0)
+
+    def _imm(self, imm: int):
+        """Materialize a 64-bit immediate in the machine representation."""
+        return jnp.uint64(imm & M64)
+
+    def _coerce(self, val):
+        """Coerce a helper/ALU result into the machine representation."""
+        return jnp.asarray(val, jnp.uint64)
+
+    def _sel(self, p, new, old):
+        """Predicated select over machine values."""
+        return _sel(p, new, old)
+
+    def _alu(self, base: str, width: int, a, b):
+        return _alu_jax(base, width, a, b)
+
+    def _cmp(self, base: str, a, b):
+        return _cmp_jax(base, a, b)
 
     # ---- entry -----------------------------------------------------------
     def run(self):
@@ -179,7 +228,7 @@ class _Lowerer:
             op = insn.op
             if op == "exit":
                 take = jnp.logical_and(P, jnp.logical_not(self.done))
-                self.ret = _sel(take, self.regs[0], self.ret)
+                self.ret = self._sel(take, self.regs[0], self.ret)
                 self.done = jnp.logical_or(self.done, P)
                 return
             if op == "ja":
@@ -187,9 +236,9 @@ class _Lowerer:
                 return
             if is_jump_cond(op):
                 a = self.regs[insn.dst]
-                v = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+                v = self._imm(insn.imm) if is_imm_form(op) \
                     else self.regs[insn.src]
-                c = _cmp_jax(jump_base(op), a, v)
+                c = self._cmp(jump_base(op), a, v)
                 taken, fall = self.cfg.succs[b]
                 route(taken, jnp.logical_and(P, c))
                 route(fall, jnp.logical_and(P, jnp.logical_not(c)))
@@ -199,30 +248,29 @@ class _Lowerer:
 
     # ---- straight-line instructions --------------------------------------
     def _wreg(self, P, idx: int, val) -> None:
-        self.regs[idx] = _sel(P, jnp.asarray(val, jnp.uint64),
-                              self.regs[idx])
+        self.regs[idx] = self._sel(P, self._coerce(val), self.regs[idx])
 
     def _exec_straight(self, pc: int, insn: Insn, P) -> None:
         op = insn.op
         if op == "lddw":
-            self._wreg(P, insn.dst, jnp.uint64(insn.imm & M64))
+            self._wreg(P, insn.dst, self._imm(insn.imm))
             return
         if op == "ldmap":
             mi = self.map_index[insn.map_name]
-            self._wreg(P, insn.dst, jnp.uint64(_map_tag(mi)))
+            self._wreg(P, insn.dst, self._imm(_map_tag(mi)))
             return
         if op == "call":
             ret = self._call(pc, insn, P)
             self._wreg(P, 0, ret)
             for r in (1, 2, 3, 4, 5):
-                self._wreg(P, r, jnp.uint64(0))
+                self._wreg(P, r, self._imm(0))
             return
         if is_alu(op):
             a = self.regs[insn.dst]
-            b = jnp.uint64(insn.imm & M64) if is_imm_form(op) \
+            b = self._imm(insn.imm) if is_imm_form(op) \
                 else self.regs[insn.src]
             self._wreg(P, insn.dst,
-                       _alu_jax(alu_base(op), alu_width(op), a, b))
+                       self._alu(alu_base(op), alu_width(op), a, b))
             return
         if is_load(op):
             self._exec_load(pc, insn, P)

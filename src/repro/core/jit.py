@@ -258,6 +258,7 @@ def _mk_ema(m: BpfMap):
     ks, vs = m.key_size, m.value_size
     lookup = m.lookup_ref
     update = m.update
+    touch = m.touch
     lock = m.lock
 
     def f(mems, kp, sample, weight):
@@ -274,6 +275,7 @@ def _mk_ema(m: BpfMap):
                 update(key, bytes(buf))
             else:
                 v[0:8] = new.to_bytes(8, "little")
+                touch()     # version-tracked for device-bridge caches
         return new
     return f
 
@@ -509,6 +511,9 @@ class _GenV2(_Gen):
         else:
             w(f"_p = r{insn.dst} + {insn.off}")
             w(f"{p}(mems[_p >> 32], _p & {M32}, {vmask})")
+        # the verifier proved which map this store writes through; bump
+        # its content version so device-bridge caches re-upload
+        w(f"{self._inline_touch(info[1])}()")
 
     def _inline_slot(self, map_name: str) -> str:
         idx = self.inline_maps.setdefault(map_name, len(self.inline_maps))
@@ -519,6 +524,11 @@ class _GenV2(_Gen):
         idx = self.inline_maps.setdefault(map_name, len(self.inline_maps))
         self.env_extra[f"_mlk{idx}"] = self.resolved[map_name].lock
         return f"_mlk{idx}"
+
+    def _inline_touch(self, map_name: str) -> str:
+        idx = self.inline_maps.setdefault(map_name, len(self.inline_maps))
+        self.env_extra[f"_mtc{idx}"] = self.resolved[map_name].touch
+        return f"_mtc{idx}"
 
     def _emit_call(self, pc: int, insn: Insn) -> None:
         h = H.HELPERS[insn.imm]
@@ -561,6 +571,7 @@ class _GenV2(_Gen):
             if h.name == "ema_update" and m.value_size >= 8:
                 slots = self._inline_slot(mname)
                 lk = self._inline_lock(mname)
+                tc = self._inline_touch(mname)
                 u8, p8 = self._use_u(8), self._use_p(8)
                 w(f"_k = {u4}(stack, r2 & {M32})[0]")
                 w("_w = r4 if r4 > 1 else 1")
@@ -570,6 +581,8 @@ class _GenV2(_Gen):
                 w(f"        _old = {u8}(_v, 0)[0]")
                 w(f"        r0 = ((_old * (_w - 1) + r3) // _w) & {M64}")
                 w(f"        {p8}(_v, 0, r0)")
+                # version-tracked for device-bridge caches (maps.py)
+                w(f"        {tc}()")
                 w("else:")
                 w(f"    r0 = (r3 // _w) & {M64}")
                 return
@@ -904,6 +917,7 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
                 m.update(key, bytes(buf))
             else:
                 v[0:8] = new.to_bytes(8, "little")
+                m.touch()   # version-tracked for device-bridge caches
         return new
 
     def _dead():

@@ -1,0 +1,482 @@
+"""lower32 — the 32-bit-pair lowering of the u64 policy machine.
+
+Mosaic (the TPU Pallas backend) has no native 64-bit integer ops, so the
+uint64 lowering in :mod:`repro.core.jaxc` only compiles on real TPUs via
+x64 emulation or interpret mode.  This module re-represents EVERY u64
+machine value — registers, stack slots, ctx fields, array-map slots, the
+return value — as a ``(lo, hi)`` pair of uint32, with the full u64
+semantics synthesized from 32-bit ops:
+
+  * add/sub carry/borrow chains (``lo`` wraps, the carry feeds ``hi``),
+  * widening multiply from 16-bit limbs (the classic mulhi synthesis —
+    every partial product and carry provably fits uint32),
+  * pair shifts/rotates split into the in-lane (< 32) and cross-lane
+    (>= 32) half-planes with all shift amounts clamped to [0, 31] so no
+    lane ever sees an out-of-range shift,
+  * 64-bit div/mod as a 64-step shift-subtract long division (statically
+    unrolled; the verifier proves divisors non-zero, zero is defensively
+    treated as one exactly like the uint64 tier),
+  * pairwise compare chains for every signed/unsigned jump condition
+    (hi decides, lo breaks ties — lo compares stay unsigned even for
+    signed conditions).
+
+The control-flow machinery (predicated regions, ``lax.fori_loop`` loop
+carries, exit-predicate routing) is inherited unchanged from
+:class:`repro.core.jaxc._Lowerer`; only the representation hooks are
+overridden.  Loads verify exactly once: ``compile_jax32`` reuses the same
+``verify_with_info`` artifacts as every other tier.
+
+Array layout convention (host <-> device, little-endian friendly):
+the trailing axis holds ``[lo, hi]`` — a uint64 array viewed as ``<u4``
+yields exactly this layout, so host conversion is a reinterpret, not a
+shuffle.  ctx is uint32[n_fields, 2], array maps are
+uint32[max_entries, value_slots, 2], the return value is uint32[2].
+
+None of this path touches the x64 scope: it traces, jits, and executes
+with jax's default 32-bit types enabled only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .isa import FP_REG, STACK_SIZE, Insn, mem_size
+from .jaxc import (JaxcError, _CTX_TAG, _Lowerer, _STACK_TAG, _map_tag,
+                   check_supported)
+from .maps import BpfMap
+from .program import Program
+from .verifier import verify_with_info
+
+M64 = (1 << 64) - 1
+M32 = 0xFFFFFFFF
+
+Pair = Tuple[jnp.ndarray, jnp.ndarray]  # (lo, hi), both uint32
+
+
+# ---------------------------------------------------------------------------
+# Pair primitives — u64 semantics from uint32 lanes
+# ---------------------------------------------------------------------------
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.uint32(x & M32)
+
+
+def pair_const(v: int) -> Pair:
+    v &= M64
+    return (_u32(v), _u32(v >> 32))
+
+
+def pair_select(p, a: Pair, b: Pair) -> Pair:
+    return (jnp.where(p, a[0], b[0]), jnp.where(p, a[1], b[1]))
+
+
+def pair_add(a: Pair, b: Pair) -> Pair:
+    lo = a[0] + b[0]
+    carry = (lo < a[0]).astype(jnp.uint32)
+    return (lo, a[1] + b[1] + carry)
+
+
+def pair_sub(a: Pair, b: Pair) -> Pair:
+    lo = a[0] - b[0]
+    borrow = (a[0] < b[0]).astype(jnp.uint32)
+    return (lo, a[1] - b[1] - borrow)
+
+
+def mul32_wide(a, b) -> Pair:
+    """uint32 x uint32 -> full 64-bit product as (lo, hi).
+
+    16-bit-limb schoolbook multiply; the carry accumulator ``t`` is at
+    most ``0xFFFF + 2*0xFFFF`` and the hi sum equals the true high word
+    (< 2**32), so nothing wraps."""
+    a0, a1 = a & 0xFFFF, a >> 16
+    b0, b1 = b & 0xFFFF, b >> 16
+    p00, p01 = a0 * b0, a0 * b1
+    p10, p11 = a1 * b0, a1 * b1
+    t = (p00 >> 16) + (p01 & 0xFFFF) + (p10 & 0xFFFF)
+    lo = (t << 16) | (p00 & 0xFFFF)
+    hi = p11 + (p01 >> 16) + (p10 >> 16) + (t >> 16)
+    return (lo, hi)
+
+
+def pair_mul(a: Pair, b: Pair) -> Pair:
+    """a * b mod 2**64: lo64(a_lo*b_lo) + ((a_lo*b_hi + a_hi*b_lo) << 32)."""
+    lo, hi00 = mul32_wide(a[0], b[0])
+    return (lo, hi00 + a[0] * b[1] + a[1] * b[0])
+
+
+def pair_lsh(a: Pair, b: Pair) -> Pair:
+    lo, hi = a
+    s = b[0] & 63
+    s31 = s & 31
+    cross = (32 - s31) & 31          # 0 exactly when s31 == 0 (discarded)
+    lo_small = lo << s31
+    hi_small = (hi << s31) | jnp.where(s31 == 0, jnp.uint32(0), lo >> cross)
+    big = s >= 32                    # then s - 32 == s31
+    return (jnp.where(big, jnp.uint32(0), lo_small),
+            jnp.where(big, lo << s31, hi_small))
+
+
+def pair_rsh(a: Pair, b: Pair) -> Pair:
+    lo, hi = a
+    s = b[0] & 63
+    s31 = s & 31
+    cross = (32 - s31) & 31
+    lo_small = (lo >> s31) | jnp.where(s31 == 0, jnp.uint32(0), hi << cross)
+    hi_small = hi >> s31
+    big = s >= 32
+    return (jnp.where(big, hi >> s31, lo_small),
+            jnp.where(big, jnp.uint32(0), hi_small))
+
+
+def pair_arsh(a: Pair, b: Pair) -> Pair:
+    lo, hi = a
+    shi = hi.astype(jnp.int32)
+    s = b[0] & 63
+    s31 = s & 31
+    s31i = s31.astype(jnp.int32)
+    cross = (32 - s31) & 31
+    lo_small = (lo >> s31) | jnp.where(s31 == 0, jnp.uint32(0), hi << cross)
+    hi_small = (shi >> s31i).astype(jnp.uint32)
+    sign_fill = (shi >> 31).astype(jnp.uint32)
+    big = s >= 32
+    return (jnp.where(big, (shi >> s31i).astype(jnp.uint32), lo_small),
+            jnp.where(big, sign_fill, hi_small))
+
+
+def pair_cmp(base: str, a: Pair, b: Pair):
+    """Every jump condition as a pairwise compare chain: the hi lane
+    decides (signed for js* — only hi carries the sign), equal-hi ties
+    break on an UNSIGNED lo compare in both cases."""
+    al, ah = a
+    bl, bh = b
+    if base == "jeq":
+        return jnp.logical_and(ah == bh, al == bl)
+    if base == "jne":
+        return jnp.logical_not(jnp.logical_and(ah == bh, al == bl))
+    if base == "jset":
+        return ((ah & bh) | (al & bl)) != 0
+    hi_eq = ah == bh
+    signed = base in ("jsgt", "jsge", "jslt", "jsle")
+    ha = ah.astype(jnp.int32) if signed else ah
+    hb = bh.astype(jnp.int32) if signed else bh
+    if base in ("jgt", "jsgt"):
+        return (ha > hb) | (hi_eq & (al > bl))
+    if base in ("jge", "jsge"):
+        return (ha > hb) | (hi_eq & (al >= bl))
+    if base in ("jlt", "jslt"):
+        return (ha < hb) | (hi_eq & (al < bl))
+    if base in ("jle", "jsle"):
+        return (ha < hb) | (hi_eq & (al <= bl))
+    raise JaxcError(f"compare base {base}")
+
+
+def pair_divmod(a: Pair, b: Pair) -> Tuple[Pair, Pair]:
+    """(a // b, a % b) by 64-step shift-subtract long division.
+
+    The step index is static, so every per-bit shift amount is a
+    compile-time constant in [0, 31] — nothing here needs a 64-bit lane.
+    b == 0 is defensively treated as 1 (matching the uint64 tier; the
+    verifier proves policy divisors non-zero)."""
+    bz = jnp.logical_and(b[0] == 0, b[1] == 0)
+    b = pair_select(bz, pair_const(1), b)
+    q_lo = q_hi = jnp.uint32(0)
+    r: Pair = pair_const(0)
+    for i in range(63, -1, -1):
+        bit = (a[1] >> (i - 32)) & 1 if i >= 32 else (a[0] >> i) & 1
+        r = ((r[0] << 1) | bit, (r[1] << 1) | (r[0] >> 31))
+        ge = pair_cmp("jge", r, b)
+        r = pair_select(ge, pair_sub(r, b), r)
+        g = ge.astype(jnp.uint32)
+        if i >= 32:
+            q_hi = q_hi | (g << (i - 32))
+        else:
+            q_lo = q_lo | (g << i)
+    return (q_lo, q_hi), r
+
+
+def _alu64_pair(base: str, a: Pair, b: Pair) -> Pair:
+    if base == "mov":
+        return b
+    if base == "add":
+        return pair_add(a, b)
+    if base == "sub":
+        return pair_sub(a, b)
+    if base == "mul":
+        return pair_mul(a, b)
+    if base == "div":
+        return pair_divmod(a, b)[0]
+    if base == "mod":
+        return pair_divmod(a, b)[1]
+    if base == "and":
+        return (a[0] & b[0], a[1] & b[1])
+    if base == "or":
+        return (a[0] | b[0], a[1] | b[1])
+    if base == "xor":
+        return (a[0] ^ b[0], a[1] ^ b[1])
+    if base == "lsh":
+        return pair_lsh(a, b)
+    if base == "rsh":
+        return pair_rsh(a, b)
+    if base == "arsh":
+        return pair_arsh(a, b)
+    if base == "neg":
+        return pair_sub(pair_const(0), a)
+    raise JaxcError(f"ALU base {base}")
+
+
+def _alu32_pair(base: str, a: Pair, b: Pair) -> Pair:
+    """eBPF 32-bit ALU: operate on the lo lanes, zero the hi lane."""
+    al, bl = a[0], b[0]
+    z = jnp.uint32(0)
+    if base == "mov":
+        return (bl, z)
+    if base == "add":
+        return (al + bl, z)
+    if base == "sub":
+        return (al - bl, z)
+    if base == "mul":
+        return (al * bl, z)
+    if base == "div":
+        return (al // jnp.maximum(bl, jnp.uint32(1)), z)
+    if base == "mod":
+        return (al % jnp.maximum(bl, jnp.uint32(1)), z)
+    if base == "and":
+        return (al & bl, z)
+    if base == "or":
+        return (al | bl, z)
+    if base == "xor":
+        return (al ^ bl, z)
+    if base == "lsh":
+        return (al << (bl & 31), z)
+    if base == "rsh":
+        return (al >> (bl & 31), z)
+    if base == "arsh":
+        return ((al.astype(jnp.int32)
+                 >> (bl & 31).astype(jnp.int32)).astype(jnp.uint32), z)
+    if base == "neg":
+        return (z - al, z)
+    raise JaxcError(f"ALU base {base}")
+
+
+# ---------------------------------------------------------------------------
+# The lowerer: jaxc's CFG walk over the pair representation
+# ---------------------------------------------------------------------------
+
+class _Lowerer32(_Lowerer):
+    """`_Lowerer` with every machine value as a (lo, hi) uint32 pair.
+
+    Inherits the region/loop machinery verbatim — the snapshot/restore
+    loop carries thread tuples of pairs through ``lax.fori_loop`` exactly
+    like tuples of uint64 scalars."""
+
+    # ---- representation hooks -------------------------------------------
+    def _init_state(self, ctx_vec, map_arrays) -> None:
+        self.ctx = jnp.asarray(ctx_vec, jnp.uint32)          # [fields, 2]
+        self.maps = {k: jnp.asarray(v, jnp.uint32)           # [n, slots, 2]
+                     for k, v in map_arrays.items()}
+        self.regs = [pair_const(0)] * 11
+        self.regs[1] = pair_const(_CTX_TAG)
+        self.regs[FP_REG] = pair_const(_STACK_TAG | STACK_SIZE)
+        self.stack = jnp.zeros((STACK_SIZE // 8, 2), jnp.uint32)
+        self.done = jnp.asarray(False)
+        self.ret = pair_const(0)
+
+    def _imm(self, imm: int) -> Pair:
+        return pair_const(imm)
+
+    def _coerce(self, val) -> Pair:
+        if not (isinstance(val, tuple) and len(val) == 2):
+            raise JaxcError("pair lowering produced a non-pair value")
+        return val
+
+    def _sel(self, p, new: Pair, old: Pair) -> Pair:
+        return pair_select(p, new, old)
+
+    def _alu(self, base: str, width: int, a: Pair, b: Pair) -> Pair:
+        return _alu64_pair(base, a, b) if width == 64 \
+            else _alu32_pair(base, a, b)
+
+    def _cmp(self, base: str, a: Pair, b: Pair):
+        return pair_cmp(base, a, b)
+
+    # ---- memory ----------------------------------------------------------
+    def _stack_load(self, ptr: Pair, size: int):
+        slot = (ptr[0] >> 3).astype(jnp.int32)   # lo lane holds the offset
+        word: Pair = (self.stack[slot, 0], self.stack[slot, 1])
+        if size == 8:
+            return word
+        sh = (ptr[0] & 7) * 8
+        shifted = pair_rsh(word, (sh, jnp.uint32(0)))
+        return (shifted[0] & _u32((1 << (8 * size)) - 1), jnp.uint32(0))
+
+    def _stack_store(self, P, ptr: Pair, size: int, val: Pair) -> None:
+        slot = (ptr[0] >> 3).astype(jnp.int32)
+        word: Pair = (self.stack[slot, 0], self.stack[slot, 1])
+        if size == 8:
+            new = val
+        else:
+            mask = (1 << (8 * size)) - 1
+            sh: Pair = ((ptr[0] & 7) * 8, jnp.uint32(0))
+            hole = pair_lsh(pair_const(mask), sh)
+            piece = pair_lsh((val[0] & _u32(mask), jnp.uint32(0)), sh)
+            new = ((word[0] & ~hole[0]) | piece[0],
+                   (word[1] & ~hole[1]) | piece[1])
+        sel = pair_select(P, new, word)
+        self.stack = self.stack.at[slot].set(jnp.stack([sel[0], sel[1]]))
+
+    @staticmethod
+    def _mapval_decode(ptr: Pair):
+        lo, hi = ptr
+        mi = ((hi >> 24) - 16).astype(jnp.int32)
+        key = ((hi << 8) | (lo >> 24)).astype(jnp.int32)
+        off = lo & 0xFFFFFF
+        return mi, key, off
+
+    def _exec_load(self, pc: int, insn: Insn, P) -> None:
+        size = mem_size(insn.op)
+        region, mname, base = self.vinfo.mem_info[pc]
+        ptr = pair_add(self.regs[insn.src], pair_const(insn.off & M64))
+        if region == "ctx":
+            off = base + insn.off            # static (verified)
+            val: Pair = (self.ctx[off // 8, 0], self.ctx[off // 8, 1])
+            if size < 8:
+                val = (val[0] & _u32((1 << (8 * size)) - 1), jnp.uint32(0))
+        elif region == "stack":
+            val = self._stack_load(ptr, size)
+        else:  # mapval
+            _, key, off = self._mapval_decode(ptr)
+            slot = (off >> 3).astype(jnp.int32)
+            val = (self.maps[mname][key, slot, 0],
+                   self.maps[mname][key, slot, 1])
+            if size < 8:
+                val = (val[0] & _u32((1 << (8 * size)) - 1), jnp.uint32(0))
+        self._wreg(P, insn.dst, val)
+
+    def _exec_store(self, pc: int, insn: Insn, P) -> None:
+        size = mem_size(insn.op)
+        region, mname, base = self.vinfo.mem_info[pc]
+        val: Pair = pair_const(insn.imm & M64) \
+            if not insn.op.startswith("stx") else self.regs[insn.src]
+        ptr = pair_add(self.regs[insn.dst], pair_const(insn.off & M64))
+        if region == "ctx":
+            slot = (base + insn.off) // 8
+            old: Pair = (self.ctx[slot, 0], self.ctx[slot, 1])
+            sel = pair_select(P, val, old)
+            self.ctx = self.ctx.at[slot].set(jnp.stack([sel[0], sel[1]]))
+        elif region == "stack":
+            self._stack_store(P, ptr, size, val)
+        else:  # mapval
+            _, key, off = self._mapval_decode(ptr)
+            slot = (off >> 3).astype(jnp.int32)
+            old = (self.maps[mname][key, slot, 0],
+                   self.maps[mname][key, slot, 1])
+            sel = pair_select(P, val, old)
+            self.maps[mname] = self.maps[mname].at[key, slot].set(
+                jnp.stack([sel[0], sel[1]]))
+
+    # ---- helpers ---------------------------------------------------------
+    def _call(self, pc: int, insn: Insn, P) -> Pair:
+        hid = insn.imm
+        mname = self.vinfo.call_map.get(pc)
+        if mname is None:
+            raise JaxcError(f"helper at insn {pc} has no static map binding")
+        mi = self.map_index[mname]
+        d = self.decls[mi]
+        key = self._stack_load(self.regs[2], d.key_size)   # hi lane is 0
+        valid = key[0] < jnp.uint32(d.max_entries)
+        ki = jnp.minimum(key[0], jnp.uint32(d.max_entries - 1)).astype(
+            jnp.int32)
+        if hid == 1:  # map_lookup_elem(map, key*)
+            tag = pair_const(_map_tag(mi))
+            shifted = pair_lsh(key, pair_const(24))
+            enc: Pair = (tag[0] | shifted[0], tag[1] | shifted[1])
+            return pair_select(valid, enc, pair_const(0))
+        if hid == 2:  # map_update_elem(map, key*, value*, flags)
+            n_slots = d.value_size // 8
+            rows = [self._stack_load(
+                pair_add(self.regs[3], pair_const(8 * s)), 8)
+                for s in range(n_slots)]
+            newrow = jnp.stack([jnp.stack([lo, hi]) for lo, hi in rows])
+            old = self.maps[d.name][ki]
+            take = jnp.logical_and(P, valid)
+            self.maps[d.name] = self.maps[d.name].at[ki].set(
+                jnp.where(take, newrow, old))
+            return pair_select(valid, pair_const(0), pair_const(M64))
+        if hid == 64:  # ema_update(map, key*, sample, weight)
+            one = pair_const(1)
+            w = pair_select(pair_cmp("jgt", self.regs[4], one),
+                            self.regs[4], one)
+            old = (self.maps[d.name][ki, 0, 0], self.maps[d.name][ki, 0, 1])
+            acc = pair_add(pair_mul(old, pair_sub(w, one)), self.regs[3])
+            new = pair_divmod(acc, w)[0]
+            take = jnp.logical_and(P, valid)
+            sel = pair_select(take, new, old)
+            self.maps[d.name] = self.maps[d.name].at[ki, 0].set(
+                jnp.stack([sel[0], sel[1]]))
+            return new
+        raise JaxcError(f"helper {hid} not supported in-graph")
+
+
+def compile_jax32(prog: Program, vinfo=None):
+    """Return (fn, map_names) in the pair calling convention.
+
+    ``fn(ctx_vec32, map_arrays32) -> (ret32, ctx32_out, map_arrays32_out)``
+    where ``ctx_vec32`` is uint32[n_fields, 2], each map array is
+    uint32[max_entries, value_slots, 2] (trailing axis = [lo, hi]) and
+    ``ret32`` is uint32[2].  Pure and jit-safe; runs with jax's default
+    32-bit types — no x64 scope anywhere.
+
+    ``vinfo`` reuses a prior :func:`verify_with_info` result so the
+    runtime's load path verifies exactly once across every tier."""
+    check_supported(prog)
+    if vinfo is None:
+        vinfo = verify_with_info(prog)
+
+    def run(ctx_vec32, map_arrays32: Dict[str, jnp.ndarray]):
+        ret, ctx, maps = _Lowerer32(prog, vinfo, ctx_vec32,
+                                    map_arrays32).run()
+        return jnp.stack([ret[0], ret[1]]), ctx, maps
+
+    return run, [d.name for d in prog.maps]
+
+
+# ---------------------------------------------------------------------------
+# Host <-> device conversion (pure numpy reinterprets — no x64 scope)
+# ---------------------------------------------------------------------------
+
+def map_to_array32(m: BpfMap) -> jnp.ndarray:
+    """ArrayMap -> uint32[max_entries, slots, 2]; a ``<u4`` view of the
+    little-endian u64 cells, so [..., 0] is lo and [..., 1] is hi."""
+    from .maps import ArrayMap
+    if not isinstance(m, ArrayMap):
+        raise JaxcError(f"map {m.name} is not an array map")
+    slots = m.value_size // 8
+    out = np.zeros((m.max_entries, slots, 2), np.uint32)
+    for i in range(m.max_entries):
+        buf = m.lookup(i.to_bytes(4, "little"))
+        out[i] = np.frombuffer(bytes(buf), dtype="<u4").reshape(slots, 2)
+    return jnp.asarray(out)
+
+
+def array32_to_map(arr, m: BpfMap) -> None:
+    """Write pair-form device map state back into the host map."""
+    host = np.asarray(arr, dtype=np.uint32)
+    for i in range(m.max_entries):
+        m.update(i.to_bytes(4, "little"), host[i].astype("<u4").tobytes())
+
+
+def ctx_to_vec32(ctx_buf: bytearray) -> jnp.ndarray:
+    return jnp.asarray(
+        np.frombuffer(bytes(ctx_buf), dtype="<u4").reshape(-1, 2))
+
+
+def vec32_to_bytes(arr) -> bytes:
+    return np.asarray(arr).astype("<u4").tobytes()
+
+
+def ret32_to_int(ret) -> int:
+    r = np.asarray(ret)
+    return int(r[0]) | (int(r[1]) << 32)

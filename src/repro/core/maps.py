@@ -62,12 +62,36 @@ class BpfMap:
         # reentrant: typed accessors (update_u64) compose lookup+update
         # under one critical section
         self._lock = threading.RLock()
+        # monotone content-version counter: bumped by every mutation on
+        # the structured surface (update / update_u64 / delete), by the
+        # execution tiers' helper writebacks, AND by the runtime tiers'
+        # store instructions through map-value pointers (the VM tags the
+        # pointer with its owning map; the v2 JIT emits a touch at every
+        # verified map store).  Device-resident bridge caches
+        # (pallasc.DeviceBridge) key their uploads off it, so a clean
+        # map never round-trips.  NOT tracked: host code writing through
+        # raw lookup_ref views, and the legacy v1 codegen's pointer
+        # stores (benchmark-only — PolicyRuntime cannot select v1);
+        # such writers call touch() / bridge.invalidate() explicitly.
+        self._version = 0
 
     @property
     def lock(self) -> threading.RLock:
         """The per-map mutex every writeback path holds; host callers
         composing their own read-modify-write transactions take it too."""
         return self._lock
+
+    @property
+    def version(self) -> int:
+        """Content version — changes iff the map was mutated through the
+        tracked surface since last observed."""
+        return self._version
+
+    def touch(self) -> None:
+        """Mark the map contents changed (for mutations done through raw
+        ``lookup_ref`` pointers that the tracked surface cannot see)."""
+        with self._lock:
+            self._version += 1
 
     # -- raw interface -----------------------------------------------------
     def lookup(self, key: bytes) -> Optional[bytearray]:
@@ -127,6 +151,7 @@ class BpfMap:
                 self.update(kb, bytes(buf))
             else:
                 struct.pack_into("<Q", v, slot * 8, value & U64)
+                self._version += 1
 
     def snapshot(self) -> Dict[bytes, bytes]:
         with self._lock:
@@ -157,6 +182,7 @@ class ArrayMap(BpfMap):
             return -1
         with self._lock:
             self._slots[idx][:] = value
+            self._version += 1
         return 0
 
     def delete(self, key: bytes) -> int:
@@ -188,12 +214,16 @@ class HashMap(BpfMap):
                 return -1  # E2BIG
             slot = self._table.setdefault(kb, bytearray(self.value_size))
             slot[:] = value
+            self._version += 1
         return 0
 
     def delete(self, key: bytes) -> int:
         self._check_key(key)
         with self._lock:
-            return 0 if self._table.pop(bytes(key), None) is not None else -1
+            if self._table.pop(bytes(key), None) is None:
+                return -1
+            self._version += 1
+            return 0
 
     def keys(self) -> Iterator[bytes]:
         return iter(list(self._table.keys()))

@@ -1,6 +1,6 @@
 """pallasc — verified policy bytecode lowered to ONE Pallas kernel.
 
-The fourth execution tier.  The ladder so far: the interpreter (ground
+The in-kernel execution tier.  The ladder so far: the interpreter (ground
 truth), the host JIT (v1/v2 Python closures), and jaxc (pure-JAX
 if-conversion fused into the step program).  jaxc already removed host
 round-trips, but its lowering emits free-floating jnp ops that XLA may
@@ -12,20 +12,28 @@ VMEM-resident for the duration of the decision.  Host marginal cost per
 decision is zero: the host neither computes nor copies anything once the
 step is dispatched.
 
-Lowering path (shared with jaxc by construction):
+Two word widths share the entry point:
 
-  * the verifier's artifacts — shared CFG, proven ``loop_bounds``,
-    per-insn region info — drive the same predicated block-by-block
-    lowering (:class:`repro.core.jaxc._Lowerer`): forward regions
-    if-convert, each natural loop becomes one ``lax.fori_loop`` running
-    exactly ``bound + 1`` header visits,
-  * pallasc wraps that body in a Pallas kernel: ctx and every array map
-    are kernel operands with full-block BlockSpecs (decision state is
-    tiny — a policy ctx is ~11 u64 fields, maps are KiB-scale — so one
-    grid step owns everything, fully VMEM-resident),
-  * outputs (return value, ctx out, updated map state) are kernel
-    results, functionally threaded exactly like jaxc so closed-loop
-    adaptation keeps ZERO retraces across decisions.
+  * ``word_width=64`` — the uint64 lowering
+    (:class:`repro.core.jaxc._Lowerer`).  Compiles through Mosaic only
+    via x64 emulation/interpret mode; needs the scoped x64 context.
+  * ``word_width=32`` — the Mosaic-ready pair lowering
+    (:class:`repro.core.lower32._Lowerer32`): every u64 register, stack
+    slot, ctx field, and map slot is a ``(lo, hi)`` uint32 pair with
+    explicit carry/borrow, widening multiply, pair shifts, and pairwise
+    compare chains.  No 64-bit integer op ever reaches the kernel, and
+    no x64 scope is needed anywhere on the path.
+
+``word_width=None`` picks 64 when the build has a working x64 scope and
+falls back to 32 otherwise — builds where ``enable_x64`` is broken can
+still run the pallas tier through the pair representation.
+
+Lowering path (shared with jaxc by construction): the verifier's
+artifacts — shared CFG, proven ``loop_bounds``, per-insn region info —
+drive the same predicated block-by-block lowering; forward regions
+if-convert, each natural loop becomes one ``lax.fori_loop`` running
+exactly ``bound + 1`` header visits.  ``compile_*(prog, vinfo)`` reuses
+the runtime's single verify pass.
 
 Backends: on TPU the kernel compiles through Mosaic; on CPU (CI) the
 same ``pallas_call`` runs in interpret mode — identical lowering path,
@@ -33,23 +41,31 @@ executed by the Pallas interpreter.  ``mode="jit"`` bypasses the kernel
 harness entirely and jits the bare lowering body (the pure-JAX fallback
 for builds without a working Pallas).
 
-Constraints (inherited from the in-graph surface, enforced at compile):
-array maps with 8-aligned values only; helpers limited to
-map_lookup_elem / map_update_elem / ema_update; 64-bit state requires
-the scoped x64 context (``repro.compat.enable_x64``) around the call
-boundary.
+The host bridge (:class:`DeviceBridge`, returned by
+:func:`compile_host`) keeps map state DEVICE-RESIDENT across calls:
+uploads are version-gated (a clean host map is never re-uploaded),
+writebacks cover only the maps the program can statically write, and
+``flush()`` forces a full device->host sync — the runtime calls it at
+every T3 boundary (detach / ``link.replace()`` / bundle reload) so host
+maps remain the cross-plugin source of truth exactly when attachment
+changes hands.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..compat import enable_x64
+from ..compat import enable_x64, maybe_x64
 from .jaxc import (JaxcError, _Lowerer, array_to_map, check_supported,
-                   ctx_to_vec, map_to_array)
+                   compile_jax, ctx_to_vec, map_to_array, written_map_names)
+from .lower32 import (_Lowerer32, array32_to_map, compile_jax32,
+                      ctx_to_vec32, map_to_array32, ret32_to_int,
+                      vec32_to_bytes)
 from .maps import BpfMap
 from .program import Program
 from .verifier import verify_with_info
@@ -78,20 +94,38 @@ def _resolve_mode(mode: Optional[str]) -> str:
     return mode
 
 
-def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
-                   interpret: Optional[bool] = None):
-    """Return (fn, map_names) — the jaxc calling convention.
+def _resolve_word_width(word_width: Optional[int]) -> int:
+    if word_width is None:
+        from ..compat import have_x64
+        return 64 if have_x64() else 32
+    if word_width not in (32, 64):
+        raise PallascError(f"unknown word_width {word_width!r}; use 64 "
+                           "(uint64 state, needs x64) or 32 (Mosaic-ready "
+                           "(lo, hi) uint32 pairs)")
+    return word_width
 
-    ``fn(ctx_vec, map_arrays) -> (ret, ctx_vec_out, map_arrays_out)``,
-    pure and jit-safe; ``ctx_vec`` is uint64[n_fields], ``map_arrays``
-    maps name -> uint64[max_entries, value_slots].
+
+def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
+                   interpret: Optional[bool] = None,
+                   word_width: Optional[int] = None):
+    """Return (fn, map_names) — the in-graph calling convention.
+
+    With ``word_width=64``: ``fn(ctx_vec, map_arrays) ->
+    (ret, ctx_vec_out, map_arrays_out)``, ``ctx_vec`` uint64[n_fields],
+    maps uint64[max_entries, value_slots] — requires the x64 scope.
+
+    With ``word_width=32`` (the Mosaic-ready pair form): ``ctx_vec`` is
+    uint32[n_fields, 2], maps are uint32[max_entries, value_slots, 2]
+    (trailing axis = [lo, hi]), ``ret`` is uint32[2]; no x64 anywhere.
 
     ``vinfo`` reuses a prior :func:`verify_with_info` result (shared
     cfg / loop_bounds / max_steps / region info) — the runtime's load
     path verifies once and hands the artifacts down.  ``mode=None``
     auto-selects the Pallas kernel when available, the pure-JAX body
     otherwise; ``interpret=None`` compiles through Mosaic on TPU and the
-    Pallas interpreter elsewhere (same lowering path either way).
+    Pallas interpreter elsewhere (same lowering path either way);
+    ``word_width=None`` prefers 64 and falls back to 32 on builds whose
+    x64 scope does not work.
     """
     try:
         check_supported(prog)
@@ -102,10 +136,14 @@ def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
     if vinfo is None:
         vinfo = verify_with_info(prog)
     mode = _resolve_mode(mode)
+    word_width = _resolve_word_width(word_width)
     names = [d.name for d in prog.maps]
 
     if mode == "jit":
-        # pure-JAX fallback: the identical _Lowerer body, no kernel harness
+        # pure-JAX fallback: the identical lowering body, no kernel harness
+        if word_width == 32:
+            return compile_jax32(prog, vinfo)
+
         def fn(ctx_vec, map_arrays: Dict[str, jnp.ndarray]):
             with enable_x64(True):
                 return _Lowerer(prog, vinfo,
@@ -115,6 +153,8 @@ def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if word_width == 32:
+        return _build_pallas_fn32(prog, vinfo, interpret), names
     return _build_pallas_fn(prog, vinfo, interpret), names
 
 
@@ -169,41 +209,259 @@ def _build_pallas_fn(prog: Program, vinfo, interpret: bool) -> Callable:
     return fn
 
 
+def _build_pallas_fn32(prog: Program, vinfo, interpret: bool) -> Callable:
+    """The pair-form kernel: same harness shape as :func:`_build_pallas_fn`
+    but every operand is uint32 with a trailing [lo, hi] axis — the only
+    integer width inside the kernel is 32 bits, which is what hardware
+    Mosaic can lower natively."""
+    decls = list(prog.maps)
+    names = [d.name for d in decls]
+    n_maps = len(names)
+    n_fields = prog.ctx_type.size // 8
+
+    def kernel(*refs):
+        ctx_ref = refs[0]
+        map_refs = refs[1:1 + n_maps]
+        ret_ref = refs[1 + n_maps]
+        ctx_out_ref = refs[2 + n_maps]
+        out_map_refs = refs[3 + n_maps:]
+        ctx = ctx_ref[...]
+        maps = {n: r[...] for n, r in zip(names, map_refs)}
+        ret, ctx_out, maps_out = _Lowerer32(prog, vinfo, ctx, maps).run()
+        ret_ref[...] = jnp.stack([ret[0], ret[1]])
+        ctx_out_ref[...] = ctx_out
+        for n, r in zip(names, out_map_refs):
+            r[...] = maps_out[n]
+
+    vec_spec = pl.BlockSpec((n_fields, 2), lambda i: (0, 0))
+    map_specs = [pl.BlockSpec((d.max_entries, d.value_size // 8, 2),
+                              lambda i: (0, 0, 0)) for d in decls]
+    call = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[vec_spec] + map_specs,
+        out_specs=(pl.BlockSpec((2,), lambda i: (0,)), vec_spec,
+                   *map_specs),
+        out_shape=(jax.ShapeDtypeStruct((2,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_fields, 2), jnp.uint32),
+                   *[jax.ShapeDtypeStruct((d.max_entries,
+                                           d.value_size // 8, 2),
+                                          jnp.uint32)
+                     for d in decls]),
+        interpret=interpret,
+    )
+
+    def fn(ctx_vec32, map_arrays32: Dict[str, jnp.ndarray]):
+        args = [jnp.asarray(ctx_vec32, jnp.uint32)]
+        args += [jnp.asarray(map_arrays32[n], jnp.uint32) for n in names]
+        out = call(*args)
+        return out[0], out[1], dict(zip(names, out[2:]))
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Host bridge — the PolicyRuntime load/invoke contract for in-graph tiers
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class BridgeStats:
+    """Introspection counters for the device-resident bridge; the
+    regression tests and perf benchmarks key their assertions off these
+    (e.g. "N warm repeat calls perform zero map uploads")."""
+    calls: int = 0
+    map_uploads: int = 0
+    map_downloads: int = 0
+    flushes: int = 0
+
+
+class DeviceBridge:
+    """``fn(ctx_buf) -> int`` host closure with device-resident map state.
+
+    Replaces the old full-sync bridge that round-tripped EVERY map in
+    both directions on EVERY call.  Sync now happens only at the edges
+    that need it:
+
+      * **upload** — version-gated: a map is (re-)uploaded only when the
+        host mutated it since the bridge last saw it (``BpfMap.version``;
+        first call seeds everything).  Two bridges sharing a pinned map
+        stay coherent through the host copy: one bridge's writeback
+        bumps the version, the other re-uploads.
+      * **download** — statically scoped: only maps the verified program
+        can write (:func:`repro.core.jaxc.written_map_names`) ever sync
+        back; lookup-only telemetry inputs never round-trip.  When they
+        sync is the ``sync`` policy: ``"step"`` (default) writes them
+        back after every call, so host maps remain the observable source
+        of truth after every decision; ``"deferred"`` keeps them
+        device-resident across calls — zero per-call sync in BOTH
+        directions — and writes back only on :meth:`flush` (which the
+        runtime triggers at every T3 boundary).
+      * **flush()** — full device->host writeback.  The runtime invokes
+        it at T3 boundaries (detach, ``link.replace()``, bundle reload);
+        host code that mutates map values through raw ``lookup_ref``
+        pointers (outside the versioned ``update``/``update_u64``/helper
+        surface) should call :meth:`invalidate` to force a re-upload.
+
+    Deferred-mode conflict rule: between flushes the device owns the
+    kernel-written maps.  A host write to such a map while unflushed
+    kernel writes exist cannot be merged slot-wise; the bridge keeps the
+    device copy and the racing host write is DISCARDED at the next
+    flush (which overwrites the whole map with device state).  Host
+    code that must mutate a kernel-written map under ``"deferred"``
+    coordinates explicitly: call :meth:`flush` first, then write.  Host
+    writes to lookup-only maps are always picked up on the next call,
+    in either mode.
+
+    On accelerator backends the map operands are donated to the kernel
+    (``donate_argnums``) so repeat calls alias device buffers instead of
+    copying; CPU/interpret CI skips donation (unsupported there, and
+    jax would warn on every call).
+    """
+
+    def __init__(self, prog: Program, resolved_maps: Dict[str, BpfMap],
+                 vinfo=None, *, tier: str = "pallas",
+                 mode: Optional[str] = None, sync: str = "step"):
+        if sync not in ("step", "deferred"):
+            raise PallascError(f"unknown bridge sync policy {sync!r}; "
+                               "use 'step' or 'deferred'")
+        if vinfo is None:
+            vinfo = verify_with_info(prog)
+        if tier == "pallas32":
+            ww = 32
+            fn, names = compile_pallas(prog, vinfo, mode=mode,
+                                       word_width=32)
+        elif tier == "pallas":
+            ww = _resolve_word_width(None)
+            fn, names = compile_pallas(prog, vinfo, mode=mode,
+                                       word_width=ww)
+        elif tier == "jaxc":
+            ww = 64
+            fn, names = compile_jax(prog, vinfo)
+        else:
+            raise PallascError(f"unknown in-graph tier {tier!r}")
+        self.tier = tier
+        self.word_width = ww
+        self.sync = sync
+        self._names = names
+        self._maps = resolved_maps
+        self._written = written_map_names(prog, vinfo) & set(names)
+        donate = jax.default_backend() in ("tpu", "gpu")
+        self._jfn = jax.jit(fn, donate_argnums=(1,)) if donate \
+            else jax.jit(fn)
+        self._dev: Dict[str, jnp.ndarray] = {}
+        self._seen: Dict[str, int] = {}
+        # maps possibly mutated by the kernel since their last writeback
+        # (deferred mode only; step mode writes back every call)
+        self._device_dirty: set = set()
+        self._lock = threading.Lock()
+        self.stats = BridgeStats()
+
+    # -- host map -> device ------------------------------------------------
+    def _upload_dirty(self) -> None:
+        for n in self._names:
+            m = self._maps[n]
+            if n not in self._dev or self._seen.get(n) != m.version:
+                if n in self._device_dirty:
+                    # unflushed kernel writes: the device copy wins (see
+                    # the class docstring's deferred-mode conflict rule)
+                    continue
+                with m.lock:
+                    # snapshot + version read under ONE critical section:
+                    # recording a version observed after a lock-per-entry
+                    # snapshot would permanently mask a host write that
+                    # landed mid-copy
+                    self._dev[n] = (map_to_array32(m)
+                                    if self.word_width == 32
+                                    else map_to_array(m))
+                    self._seen[n] = m.version
+                self.stats.map_uploads += 1
+
+    # -- device -> host map ------------------------------------------------
+    def _writeback(self, names) -> None:
+        for n in names:
+            arr = self._dev.get(n)
+            if arr is None:
+                continue
+            m = self._maps[n]
+            with m.lock:
+                # our own writeback must not read as a host mutation, or
+                # the next call would re-upload state the device already
+                # has — record the post-writeback version under the map
+                # lock so a concurrent host write is never masked
+                if self.word_width == 32:
+                    array32_to_map(arr, m)
+                else:
+                    array_to_map(arr, m)
+                self._seen[n] = m.version
+            self._device_dirty.discard(n)
+            self.stats.map_downloads += 1
+
+    # -- the runtime host-closure contract ---------------------------------
+    def __call__(self, ctx_buf: bytearray) -> int:
+        with self._lock:
+            self.stats.calls += 1
+            self._upload_dirty()
+            with maybe_x64(self.word_width == 64):
+                if self.word_width == 32:
+                    ret, ctx_out, maps_out = self._jfn(
+                        ctx_to_vec32(ctx_buf), self._dev)
+                    self._dev = dict(maps_out)
+                    ctx_buf[:] = vec32_to_bytes(ctx_out)
+                    rv = ret32_to_int(ret)
+                else:
+                    import numpy as np
+                    ret, ctx_out, maps_out = self._jfn(
+                        ctx_to_vec(ctx_buf), self._dev)
+                    self._dev = dict(maps_out)
+                    ctx_buf[:] = np.asarray(ctx_out).astype("<u8").tobytes()
+                    rv = int(ret)
+            if self.sync == "step":
+                self._writeback(self._written)
+            else:
+                self._device_dirty |= self._written
+            return rv
+
+    def flush(self) -> int:
+        """Sync every device-resident KERNEL-WRITABLE map back to the
+        host maps; returns how many were written.  Called by the runtime
+        at every T3 boundary (detach / replace / bundle reload).
+        Lookup-only maps are never flushed — the kernel cannot have
+        changed them, and writing their device copy back would silently
+        revert host mutations made since the last upload."""
+        with self._lock:
+            names = [n for n in self._names
+                     if n in self._dev and n in self._written]
+            self._writeback(names)
+            self.stats.flushes += 1
+            return len(names)
+
+    def invalidate(self, name: Optional[str] = None) -> None:
+        """Drop the device copy of ``name`` (or all maps) so the next
+        call re-uploads from the host — the escape hatch for host writes
+        that bypass the versioned map mutation surface."""
+        with self._lock:
+            if name is None:
+                self._dev.clear()
+                self._seen.clear()
+                self._device_dirty.clear()
+            else:
+                self._dev.pop(name, None)
+                self._seen.pop(name, None)
+                self._device_dirty.discard(name)
+
+
 def compile_host(prog: Program, resolved_maps: Dict[str, BpfMap],
                  vinfo=None, *, tier: str = "pallas",
-                 mode: Optional[str] = None) -> Callable[[bytearray], int]:
-    """Wrap an in-graph tier (pallas or jaxc) behind the host closure
-    signature ``fn(ctx_buf) -> int`` the runtime invokes.
+                 mode: Optional[str] = None,
+                 sync: str = "step") -> DeviceBridge:
+    """Wrap an in-graph tier (pallas / pallas32 / jaxc) behind the host
+    closure signature ``fn(ctx_buf) -> int`` the runtime invokes.
 
-    Map state is donated into the kernel as operands and written back
-    into the host maps after each call, so the registry stays the
-    cross-plugin source of truth and the differential harnesses can
-    compare map state across all four tiers.  The function is jitted
-    once at load: repeat decisions replay the compiled kernel with zero
-    retraces (the per-call cost is the host<->device state bridge, which
-    disappears entirely when the caller keeps the state in-graph via
-    :class:`repro.collectives.ingraph.InGraphSelector`)."""
-    import numpy as np
-
-    if tier == "pallas":
-        fn, names = compile_pallas(prog, vinfo, mode=mode)
-    elif tier == "jaxc":
-        from .jaxc import compile_jax
-        fn, names = compile_jax(prog, vinfo)
-    else:
-        raise PallascError(f"unknown in-graph tier {tier!r}")
-    jfn = jax.jit(fn)
-
-    def run(ctx_buf: bytearray) -> int:
-        with enable_x64(True):
-            arrays = {n: map_to_array(resolved_maps[n]) for n in names}
-            ret, ctx_out, maps_out = jfn(ctx_to_vec(ctx_buf), arrays)
-            ctx_buf[:] = np.asarray(ctx_out).astype("<u8").tobytes()
-            for n in names:
-                array_to_map(maps_out[n], resolved_maps[n])
-            return int(ret)
-    return run
+    Returns a :class:`DeviceBridge`: map state stays device-resident
+    across calls with version-gated uploads and statically-scoped
+    writebacks, and the function is jitted once at load — repeat
+    decisions replay the compiled kernel with zero retraces and, when
+    host maps are clean, zero map uploads (``sync="deferred"`` also
+    skips the per-call writeback of kernel-written maps; the state then
+    reaches host maps at ``flush()``/T3 boundaries)."""
+    return DeviceBridge(prog, resolved_maps, vinfo, tier=tier, mode=mode,
+                        sync=sync)

@@ -206,23 +206,40 @@ class PolicyRuntime:
       * ``"pallas"`` — single-Pallas-kernel in-graph lowering behind the
         host bridge (zero host marginal cost once callers move the state
         in-graph; see :mod:`repro.core.pallasc`)
+      * ``"pallas32"`` — the same kernel in the Mosaic-ready 32-bit-pair
+        representation (every u64 as a (lo, hi) uint32 pair; no x64
+        scope anywhere on the path — see :mod:`repro.core.lower32`)
+
+    The in-graph tiers run behind a device-resident
+    :class:`~repro.core.pallasc.DeviceBridge`: map uploads are
+    version-gated, only statically-written maps sync back per call, and
+    the runtime flushes the bridge at every T3 boundary (detach /
+    ``link.replace()`` / bundle reload) so host maps stay the
+    cross-plugin source of truth exactly when attachment changes hands.
 
     All tiers reuse ONE verifier pass: the load path verifies once and
     hands the cfg / loop_bounds / max_steps artifacts to whichever
     compiler the tier selects.  ``use_interpreter=True`` is the legacy
     spelling of ``tier="interp"``."""
 
-    TIERS = ("jit", "interp", "jaxc", "pallas")
+    TIERS = ("jit", "interp", "jaxc", "pallas", "pallas32")
 
     def __init__(self, *, use_interpreter: bool = False,
                  tier: Optional[str] = None,
+                 bridge_sync: str = "step",
                  printk_log_max: int = 4096):
         if tier is None:
             tier = "interp" if use_interpreter else "jit"
         if tier not in self.TIERS:
             raise ValueError(f"unknown tier {tier!r}; valid tiers: "
                              f"{', '.join(self.TIERS)}")
+        if bridge_sync not in ("step", "deferred"):
+            raise ValueError(f"unknown bridge_sync {bridge_sync!r}; "
+                             "use 'step' or 'deferred'")
         self.tier = tier
+        # in-graph tiers: when kernel-written maps sync back to host maps
+        # ("step" = after every call; "deferred" = at flush/T3 boundaries)
+        self.bridge_sync = bridge_sync
         self.maps = MapRegistry()
         self._chains: Dict[str, _Chain] = {s: _EMPTY_CHAIN for s in CTX_TYPES}
         self._epoch = 0
@@ -328,6 +345,7 @@ class PolicyRuntime:
             for section, chain_links in new_chains.items():
                 for old in self._chains[section].links:
                     old._attached = False
+                    self._flush_bridge(old._loaded)
                 self._legacy[section] = None
             self._publish(new_chains)
             self.stats.swap_ns_last = time.perf_counter_ns() - t0
@@ -385,6 +403,7 @@ class PolicyRuntime:
         with self._load_lock:
             for link in self._chains[section].links:
                 link._attached = False
+                self._flush_bridge(link._loaded)
             self._legacy[section] = None
             self._publish({section: []})
 
@@ -397,6 +416,19 @@ class PolicyRuntime:
         return bool(self._chains[self._check_section(section)].links)
 
     # ---- mutation internals (call with _load_lock held) -------------------
+    @staticmethod
+    def _flush_bridge(lp: Optional[LoadedProgram]) -> None:
+        """Write a device-resident bridge's map state back to the host
+        maps before its program leaves a chain.  The T3 contract: at
+        every attachment boundary (detach / replace / bundle reload) the
+        host maps are the source of truth the successor program — on any
+        tier — starts from.  No-op for host-tier closures."""
+        if lp is None:
+            return
+        flush = getattr(lp.fn, "flush", None)
+        if callable(flush):
+            flush()
+
     def _new_link(self, lp: LoadedProgram, priority: int,
                   flags: int) -> PolicyLink:
         link = PolicyLink(self, self._next_link_id, lp.section, priority,
@@ -414,6 +446,7 @@ class PolicyRuntime:
         legacy = self._legacy[section]
         t0 = time.perf_counter_ns()
         if legacy is not None and legacy._attached:
+            self._flush_bridge(legacy._loaded)
             legacy._loaded = lp
             self._publish({section: self._chain_links(section)})
         else:
@@ -429,6 +462,7 @@ class PolicyRuntime:
             if not link._attached:
                 raise LinkError(f"{link!r} is already detached")
             link._attached = False
+            self._flush_bridge(link._loaded)
             if self._legacy[link.section] is link:
                 self._legacy[link.section] = None
             remaining = [l for l in self._chains[link.section].links
@@ -445,8 +479,10 @@ class PolicyRuntime:
             if not link._attached:
                 raise LinkError(f"{link!r} is detached; attach a new link")
             # verify-then-CAS: _prepare raises on rejection with the old
-            # program still attached and the epoch untouched
+            # program still attached and the epoch untouched (a rejected
+            # replacement also leaves the old bridge state device-resident)
             lp = self._prepare(program)
+            self._flush_bridge(link._loaded)
             t0 = time.perf_counter_ns()
             link._loaded = lp
             self._publish({link.section: self._chain_links(link.section)})
@@ -564,11 +600,13 @@ class PolicyRuntime:
             vm = VM(program.insns, resolved,
                     printk=self._printk_log.append, fuel=fuel)
             fn = vm.run
-        elif self.tier in ("jaxc", "pallas"):
-            # in-graph tiers behind the host bridge; the verifier's
-            # cfg/loop_bounds/region artifacts are reused, never recomputed
+        elif self.tier in ("jaxc", "pallas", "pallas32"):
+            # in-graph tiers behind the device-resident host bridge; the
+            # verifier's cfg/loop_bounds/region artifacts are reused,
+            # never recomputed
             from .pallasc import compile_host
-            fn = compile_host(program, resolved, vinfo, tier=self.tier)
+            fn = compile_host(program, resolved, vinfo, tier=self.tier,
+                              sync=self.bridge_sync)
         else:
             # the verifier's region analysis feeds the specializing (v2)
             # code generator — one static pass pays for both safety and speed

@@ -37,9 +37,12 @@ class Ptr:
     kind: str          # "ctx" | "stack" | "mapval" | "map"
     mem: object        # bytearray | BpfMap
     off: int = 0
+    # mapval pointers remember their owning map so stores through them
+    # bump the map's content version (device-bridge dirty tracking)
+    owner: object = None
 
     def __add__(self, k: int) -> "Ptr":
-        return Ptr(self.kind, self.mem, self.off + k)
+        return Ptr(self.kind, self.mem, self.off + k, self.owner)
 
 
 def _load(mem: bytearray, off: int, size: int, what: str) -> int:
@@ -214,6 +217,8 @@ class VM:
                     # spill: store the Ptr object in a side table keyed by slot
                     raise VMError("pointer spill unsupported in interpreter tier")
                 _store(p.mem, p.off + insn.off, mem_size(op), int(val), p.kind)
+                if p.kind == "mapval" and p.owner is not None:
+                    p.owner.touch()   # version-tracked for bridge caches
                 pc += 1
                 continue
             raise VMError(f"unhandled opcode {op}")
@@ -257,7 +262,7 @@ class VM:
             # live view: the program dereferences the returned pointer
             # (kernel semantics); host-side readers get copies instead
             v = m.lookup_ref(key)
-            regs[0] = 0 if v is None else Ptr("mapval", v, 0)
+            regs[0] = 0 if v is None else Ptr("mapval", v, 0, m)
         elif h.name == "map_update_elem":
             mp, kp, vp = regs[1], regs[2], regs[3]
             if not (isinstance(mp, Ptr) and mp.kind == "map"):
@@ -301,6 +306,7 @@ class VM:
                     m.update(key, bytes(buf))
                 else:
                     v[0:8] = u64(new).to_bytes(8, "little")
+                    m.touch()   # version-tracked for device-bridge caches
             regs[0] = u64(new)
         else:
             raise VMError(f"helper {h.name} not implemented")

@@ -675,17 +675,28 @@ _BODY_OPS = [
     ("mul64i", "imm"), ("add64", "reg"), ("xor64", "reg"), ("sub64", "reg"),
 ]
 
+# constant pool biased toward the 32-bit boundary — the register churn
+# then exercises carry/borrow/cross-lane behavior in the pallas32 pair
+# lowering on every loop iteration (negatives = high-half-set encodings)
+_BOUNDARY = [0, 1, 2**31 - 1, 2**31, 2**32 - 1, 2**32, 2**32 + 1,
+             2**63, 2**64 - 1, -1, -(2**31)]
+
+
+def _bconst(rng: random.Random, lo: int = 1, hi: int = 1 << 20) -> int:
+    return rng.choice(_BOUNDARY) if rng.random() < 0.5 \
+        else rng.randint(lo, hi)
+
 
 def _random_loop_program(rng: random.Random):
     """A random but always-verifiable bounded loop: r6 counts to a random
-    limit; r7/r8 churn through random ALU ops with a random conditional
-    region inside the body."""
+    limit; r7/r8 churn through random ALU ops (over boundary-biased
+    constants) with a random conditional region inside the body."""
     limit = rng.randint(65, 300)
     step = rng.choice([1, 1, 1, 2, 3])
     lines = [
         "    mov64  r6, 0",
-        f"    mov64  r7, {rng.randint(0, 1 << 30)}",
-        f"    mov64  r8, {rng.randint(1, 1 << 30)}",
+        f"    lddw   r7, {_bconst(rng, 0, 1 << 30)}",
+        f"    lddw   r8, {_bconst(rng, 1, 1 << 30)}",
         "loop:",
         f"    jge    r6, {limit}, done",
     ]
@@ -694,14 +705,15 @@ def _random_loop_program(rng: random.Random):
         op, kind = rng.choice(_BODY_OPS)
         dst = rng.choice(["r7", "r8"])
         if kind == "imm":
-            lines.append(f"    {op} {dst}, {rng.randint(1, 1 << 20)}")
+            lines.append(f"    {op} {dst}, {_bconst(rng)}")
         elif kind == "shift":
-            lines.append(f"    {op} {dst}, {rng.randint(1, 13)}")
+            lines.append(f"    {op} {dst}, "
+                         f"{rng.choice([1, 5, 13, 31, 32, 33, 63])}")
         else:
             src = "r8" if dst == "r7" else "r7"
             lines.append(f"    {op} {dst}, {src}")
     if rng.random() < 0.7:  # conditional region in the body
-        lines.append(f"    jgt    r7, {rng.randint(0, 1 << 32)}, skip")
+        lines.append(f"    jgt    r7, {_bconst(rng, 0, 1 << 32)}, skip")
         lines.append(f"    add64i r8, {rng.randint(1, 999)}")
         lines.append("skip:")
     lines += [
@@ -754,7 +766,7 @@ def _random_map_loop_program(rng: random.Random):
     step = rng.choice([1, 1, 2, 3])
     key = rng.randint(0, 7)
     lines = [
-        f"    mov64  r7, {rng.randint(1, 1 << 20)}",
+        f"    lddw   r7, {_bconst(rng)}",
         "    mov64  r6, 0",
         f"    stw    [r10-4], {key}",
         "    ldmap  r1, rand_loop_map",
@@ -769,9 +781,10 @@ def _random_map_loop_program(rng: random.Random):
     for _ in range(rng.randint(1, 3)):
         op, kind = rng.choice(_BODY_OPS)
         if kind == "imm":
-            lines.append(f"    {op} r7, {rng.randint(1, 1 << 16)}")
+            lines.append(f"    {op} r7, {_bconst(rng, 1, 1 << 16)}")
         elif kind == "shift":
-            lines.append(f"    {op} r7, {rng.randint(1, 13)}")
+            lines.append(f"    {op} r7, "
+                         f"{rng.choice([1, 7, 13, 31, 32, 33, 63])}")
         else:
             lines.append(f"    {op} r7, r6")
     lines += [
@@ -805,17 +818,51 @@ def test_random_bounded_loops_match_pallas(seed):
     reg = MapRegistry()
     m = reg.create("rand_loop_map", "array", value_size=8, max_entries=8)
     for k in range(8):
-        m.update_u64(k, rng.randint(0, 1 << 30))
+        m.update_u64(k, _bconst(rng, 0, 1 << 30) % 2**64)
     arrays = {"rand_loop_map": map_to_array(m)}
     want = VM(prog.insns, {"rand_loop_map": m}).run(bytearray(buf))
     want_state = [m.lookup_u64(k) for k in range(8)]
 
-    fn, _names = compile_pallas(prog, vinfo)
+    fn, _names = compile_pallas(prog, vinfo, word_width=64)
     with enable_x64(True):
         ret, _, arrs = jax.jit(fn)(ctx_to_vec(bytearray(buf)), arrays)
     assert int(ret) == want
     got = [int(x) for x in np.asarray(arrs["rand_loop_map"])[:, 0]]
     assert got == want_state
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_bounded_loops_match_pallas32(seed):
+    """interp == pallas32 on >= 20 seeded random loop programs (same
+    seeds as the uint64 pallas leg, so the two kernel representations
+    are checked against the SAME programs), map state compared after
+    each run.  Needs no x64 — the pair lowering is the point."""
+    import jax
+    from repro.core.lower32 import (compile_jax32, ctx_to_vec32,
+                                    map_to_array32, ret32_to_int)
+    from repro.core.maps import MapRegistry
+
+    rng = random.Random(0xD00D + seed)
+    prog = _random_map_loop_program(rng)
+    vinfo = verify_with_info(prog)  # must verify
+    assert vinfo.loop_bounds
+    buf = make_ctx("tuner", msg_size=1 << 20).buf
+
+    reg = MapRegistry()
+    m = reg.create("rand_loop_map", "array", value_size=8, max_entries=8)
+    for k in range(8):
+        m.update_u64(k, _bconst(rng, 0, 1 << 30) % 2**64)
+    arrays = {"rand_loop_map": map_to_array32(m)}
+    want = VM(prog.insns, {"rand_loop_map": m}).run(bytearray(buf))
+    want_state = [m.lookup_u64(k) for k in range(8)]
+
+    fn, _names = compile_jax32(prog, vinfo)
+    ret, _, arrs = jax.jit(fn)(ctx_to_vec32(bytearray(buf)), arrays)
+    assert ret32_to_int(ret) == want
+    got = np.asarray(arrs["rand_loop_map"])
+    got_state = [int(got[k, 0, 0]) | (int(got[k, 0, 1]) << 32)
+                 for k in range(8)]
+    assert got_state == want_state
 
 
 # ---------------------------------------------------------------------------

@@ -1,22 +1,26 @@
-"""Property tests: the three execution tiers agree on verified programs.
+"""Property/fuzz tests: ALL execution tiers agree on verified programs.
 
-Strategy: generate random *verifiable* straight-line programs over the
-tuner ctx (ALU soup + ctx loads + output stores + branches), verify them,
-then assert interpreter == host JIT (both the v1 dispatcher-loop codegen
-and the v2 specializing codegen) on random ctx inputs.  The verifier
-itself is property-tested by construction: anything it accepts must run
-without a VM fault.
+Two harnesses:
+
+* a hypothesis harness generating random *verifiable* straight-line
+  programs over the tuner ctx (ALU soup + ctx loads + output stores +
+  branches), asserting interpreter == host JIT (v1 dispatcher-loop and
+  v2 specializing codegen) on random ctx inputs.  The verifier itself is
+  property-tested by construction: anything it accepts must run without
+  a VM fault.
+* a seeded harness (no hypothesis dependency — always collected) running
+  every generated program through the FULL tier ladder:
+  interp == v1 == v2 == jaxc == pallas == pallas32 (return value AND ctx
+  writeback), with the constant pool deliberately biased toward
+  32-bit-boundary values (0, 2**31-1, 2**32-1, 2**32, 2**64-1,
+  negative-signed encodings) — exactly where the pallas32 pair lowering's
+  carries, borrows, and cross-lane shifts can go wrong.
 """
 
+import random
+
+import numpy as np
 import pytest
-
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis; deterministic differential "
-           "coverage of the same tiers lives in test_jit_v2.py")
-
-import hypothesis.strategies as st
-from hypothesis import given, settings
 
 from repro.core import PolicyRuntime, VerifierError, make_ctx
 from repro.core.context import POLICY_CONTEXT
@@ -32,113 +36,255 @@ OUT_FIELDS = [f for f in POLICY_CONTEXT.fields.values() if f.writable]
 # registers we use for scratch (avoid r0/r1/r10)
 REGS = [2, 3, 4, 5, 6, 7]
 
-_alu = st.sampled_from(["add64", "sub64", "mul64", "and64", "or64", "xor64",
-                        "rsh64", "lsh64"])
-_alui = st.sampled_from(["add64i", "sub64i", "mul64i", "and64i", "or64i",
-                         "xor64i", "mov64i"])
+# 32-bit-boundary-heavy pool (negatives = high-half-set u64 encodings)
+BOUNDARY = [0, 1, 2**31 - 1, 2**31, 2**32 - 1, 2**32, 2**32 + 1,
+            2**63 - 1, 2**63, 2**64 - 1, -1, -(2**31), -(2**32)]
 
 
-@st.composite
-def straightline_program(draw):
+# ---------------------------------------------------------------------------
+# Seeded six-tier differential harness (no hypothesis dependency)
+# ---------------------------------------------------------------------------
+
+_S_ALU = ["add64", "sub64", "mul64", "and64", "or64", "xor64",
+          "add32", "sub32", "mul32", "xor32", "or32", "and32"]
+_S_ALUI = ["add64i", "sub64i", "mul64i", "and64i", "or64i", "xor64i",
+           "add32i", "xor32i"]
+_S_SHIFTI = ["lsh64i", "rsh64i", "arsh64i", "lsh32i", "rsh32i", "arsh32i"]
+_S_JUMPS = ["jeqi", "jnei", "jgti", "jgei", "jlti", "jlei", "jsgti",
+            "jslti", "jsgei", "jslei", "jseti"]
+
+
+def _seeded_program(rng: random.Random) -> Program:
+    """Always-verifiable straight-line soup: boundary-constant inits
+    (lddw), 64/32-bit ALU churn (shift amounts immediate, so the
+    verifier never rejects), forward branches over small gaps, stores to
+    ctx output fields."""
     insns = []
-    # initialize all scratch regs from ctx inputs or constants
     for r in REGS:
-        if draw(st.booleans()):
-            f = draw(st.sampled_from(IN_FIELDS))
+        if rng.random() < 0.4:
+            f = rng.choice(IN_FIELDS)
             insns.append(Insn("ldxdw", dst=r, src=1, off=f.offset))
         else:
-            insns.append(Insn("mov64i", dst=r, imm=draw(
-                st.integers(0, 2**31 - 1))))
-    n_ops = draw(st.integers(3, 25))
-    for _ in range(n_ops):
-        kind = draw(st.integers(0, 3))
-        if kind == 0:
-            op = draw(_alu)
-            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
-                              src=draw(st.sampled_from(REGS))))
-        elif kind == 1:
-            op = draw(_alui)
-            imm = draw(st.integers(0, 2**31 - 1))
-            if op in ("rsh64i", "lsh64i"):
-                imm %= 64
-            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)), imm=imm))
-        elif kind == 2:
-            f = draw(st.sampled_from(OUT_FIELDS))
-            insns.append(Insn("stxdw", dst=1, src=draw(st.sampled_from(REGS)),
+            insns.append(Insn("lddw", dst=r, imm=rng.choice(BOUNDARY)))
+    for _ in range(rng.randint(6, 24)):
+        k = rng.random()
+        if k < 0.35:
+            insns.append(Insn(rng.choice(_S_ALU), dst=rng.choice(REGS),
+                              src=rng.choice(REGS)))
+        elif k < 0.6:
+            insns.append(Insn(rng.choice(_S_ALUI), dst=rng.choice(REGS),
+                              imm=rng.choice(BOUNDARY)
+                              if rng.random() < 0.6
+                              else rng.randint(0, 2**31 - 1)))
+        elif k < 0.75:
+            insns.append(Insn(rng.choice(_S_SHIFTI), dst=rng.choice(REGS),
+                              imm=rng.choice([0, 1, 31, 32, 33, 63])))
+        elif k < 0.9:
+            # forward conditional jump over a 1-insn gap
+            insns.append(Insn(rng.choice(_S_JUMPS), dst=rng.choice(REGS),
+                              imm=rng.choice(BOUNDARY[:8])
+                              if rng.random() < 0.5
+                              else rng.randint(0, 1000), off=1))
+            insns.append(Insn("mov64i", dst=rng.choice(REGS),
+                              imm=rng.randint(0, 1000)))
+        else:
+            f = rng.choice(OUT_FIELDS)
+            insns.append(Insn("stxdw", dst=1, src=rng.choice(REGS),
                               off=f.offset))
-        else:
-            # forward conditional jump over a small gap (filled with ALU)
-            op = draw(st.sampled_from(["jeqi", "jgti", "jlti", "jnei"]))
-            insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
-                              imm=draw(st.integers(0, 1000)), off=1))
-            insns.append(Insn("mov64i", dst=draw(st.sampled_from(REGS)),
-                              imm=draw(st.integers(0, 1000))))
-    insns.append(Insn("mov64", dst=0, src=draw(st.sampled_from(REGS))))
+    insns.append(Insn("mov64", dst=0, src=rng.choice(REGS)))
     insns.append(Insn("exit"))
-
-    # sprinkle longer forward jumps (nested/overlapping diamonds) —
-    # inserted back-to-front so earlier offsets stay valid; targets land
-    # on whatever instruction follows the gap, exercising state joins
-    n_jumps = draw(st.integers(0, 3))
-    for _ in range(n_jumps):
-        pos = draw(st.integers(0, max(len(insns) - 3, 0)))
-        max_off = len(insns) - pos - 2   # keep target before final exit
-        if max_off < 1:
-            continue
-        off = draw(st.integers(1, min(6, max_off)))
-        op = draw(st.sampled_from(["jeqi", "jgei", "jlei", "jset" + "i",
-                                   "ja"]))
-        if op == "ja":
-            insns.insert(pos, Insn("ja", off=off))
-        else:
-            insns.insert(pos, Insn(op, dst=draw(st.sampled_from(REGS)),
-                                   imm=draw(st.integers(0, 2**20)),
-                                   off=off))
-    return Program("prop", "tuner", insns)
+    return Program("fuzz6", "tuner", insns)
 
 
-@st.composite
-def ctx_values(draw):
-    kwargs = {}
-    for f in IN_FIELDS:
-        kwargs[f.name] = draw(st.integers(0, 2**48))
-    return kwargs
+def _seeded_ctx_kwargs(rng: random.Random) -> dict:
+    return {f.name: (rng.choice([v for v in BOUNDARY if v >= 0])
+                     if rng.random() < 0.4 else rng.randint(0, 2**48))
+            for f in IN_FIELDS}
 
 
-@settings(max_examples=200, deadline=None)
-@given(prog=straightline_program(), ctx_kwargs=ctx_values())
-def test_vm_jit_agree_on_verified_programs(prog, ctx_kwargs):
-    try:
-        verify(prog)
-    except VerifierError:
-        # e.g. mul overflow widening then used as shift amount — fine;
-        # property only concerns *accepted* programs
-        return
-    vm = VM(prog.insns, {})
-    fn_v2 = compile_program(prog, {})
-    fn_v1 = compile_program(prog, {}, codegen="v1")
+@pytest.mark.parametrize("seed", range(24))
+def test_seeded_six_tier_differential(seed):
+    """interp == v1 == v2 == jaxc == pallas == pallas32 on >= 20 seeded
+    boundary-biased programs (ret AND ctx writeback).  The pallas32 leg
+    runs unconditionally — it needs no x64; the uint64 in-graph legs are
+    included whenever the build's x64 scope works."""
+    from repro.core.lower32 import (compile_jax32, ctx_to_vec32,
+                                    ret32_to_int, vec32_to_bytes)
 
-    c1 = make_ctx("tuner", **ctx_kwargs)
-    c2 = make_ctx("tuner", **ctx_kwargs)
-    c3 = make_ctx("tuner", **ctx_kwargs)
-    r_vm = vm.run(c1.buf)
-    r_v2 = fn_v2(c2.buf)
-    r_v1 = fn_v1(c3.buf)
-    assert r_vm == r_v2 == r_v1
-    assert c1.buf == c2.buf == c3.buf
+    rng = random.Random(0x515ED + seed)
+    prog = _seeded_program(rng)
+    verify(prog)                       # generator contract: always accepted
+    ctx_kwargs = _seeded_ctx_kwargs(rng)
+
+    buf0 = bytes(make_ctx("tuner", **ctx_kwargs).buf)
+    results = {}
+    b = bytearray(buf0)
+    results["interp"] = (VM(prog.insns, {}).run(b), bytes(b))
+    b = bytearray(buf0)
+    results["v1"] = (compile_program(prog, {}, codegen="v1")(b), bytes(b))
+    b = bytearray(buf0)
+    results["v2"] = (compile_program(prog, {})(b), bytes(b))
+
+    # pallas32: the pair lowering, eager (tiny programs; no jit warmup)
+    fn32, _ = compile_jax32(prog)
+    ret32, vec32, _ = fn32(ctx_to_vec32(bytearray(buf0)), {})
+    results["pallas32"] = (ret32_to_int(ret32), vec32_to_bytes(vec32))
+
+    from repro.compat import enable_x64, have_x64
+    if have_x64():
+        from repro.core.jaxc import compile_jax, ctx_to_vec
+        from repro.core.pallasc import compile_pallas
+        for tier, fn in (("jaxc", compile_jax(prog)[0]),
+                         ("pallas", compile_pallas(prog, mode="jit",
+                                                   word_width=64)[0])):
+            with enable_x64(True):
+                ret, vec, _ = fn(ctx_to_vec(bytearray(buf0)), {})
+                results[tier] = (int(ret),
+                                 np.asarray(vec).astype("<u8").tobytes())
+
+    want = results["interp"]
+    for tier, got in results.items():
+        assert got == want, (
+            f"tier {tier} diverged (seed {seed}):\n"
+            f"  ret  {got[0]:#x} != {want[0]:#x}\n"
+            f"  prog:\n{prog.disasm()}")
 
 
-@settings(max_examples=200, deadline=None)
-@given(prog=straightline_program(), ctx_kwargs=ctx_values())
-def test_verified_programs_never_fault(prog, ctx_kwargs):
-    """Soundness witness: if the verifier accepts, the VM must not fault."""
-    try:
-        verify(prog)
-    except VerifierError:
-        return
-    vm = VM(prog.insns, {})
-    try:
-        vm.run(make_ctx("tuner", **ctx_kwargs).buf)
-    except VMError as e:  # pragma: no cover
-        raise AssertionError(
-            f"verifier accepted but VM faulted: {e}\n{prog.disasm()}")
+# ---------------------------------------------------------------------------
+# Hypothesis harness (host tiers; boundary-biased constant pool)
+# ---------------------------------------------------------------------------
+
+# NOTE: guarded import, NOT importorskip — importorskip would skip the
+# whole module at collection, taking the (dependency-free) seeded
+# six-tier harness above down with it.  Without hypothesis only the
+# hypothesis-driven tests disappear.
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover — depends on the env
+    HAVE_HYPOTHESIS = False
+
+if not HAVE_HYPOTHESIS:
+    def _skip(*a, **k):      # placeholder keeping the skip visible
+        pytest.skip("property tests need hypothesis; the seeded "
+                    "six-tier harness above and test_jit_v2.py keep "
+                    "deterministic differential coverage of these tiers")
+    test_vm_jit_agree_on_verified_programs = _skip
+    test_verified_programs_never_fault = _skip
+
+
+if HAVE_HYPOTHESIS:
+    _alu = st.sampled_from(["add64", "sub64", "mul64", "and64", "or64", "xor64",
+                            "rsh64", "lsh64"])
+    _alui = st.sampled_from(["add64i", "sub64i", "mul64i", "and64i", "or64i",
+                             "xor64i", "mov64i"])
+    # bias the immediate pool toward the 32-bit boundary (where pair-lowered
+    # carry/borrow and shift semantics live), keep a uniform tail for breadth
+    _imm = st.one_of(st.sampled_from(BOUNDARY), st.integers(0, 2**31 - 1))
+
+
+    @st.composite
+    def straightline_program(draw):
+        insns = []
+        # initialize all scratch regs from ctx inputs or (boundary-biased)
+        # constants — lddw carries the full-width encodings
+        for r in REGS:
+            if draw(st.booleans()):
+                f = draw(st.sampled_from(IN_FIELDS))
+                insns.append(Insn("ldxdw", dst=r, src=1, off=f.offset))
+            else:
+                insns.append(Insn("lddw", dst=r, imm=draw(_imm)))
+        n_ops = draw(st.integers(3, 25))
+        for _ in range(n_ops):
+            kind = draw(st.integers(0, 3))
+            if kind == 0:
+                op = draw(_alu)
+                insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
+                                  src=draw(st.sampled_from(REGS))))
+            elif kind == 1:
+                op = draw(_alui)
+                imm = draw(_imm)
+                if op in ("rsh64i", "lsh64i"):
+                    imm %= 64
+                insns.append(Insn(op, dst=draw(st.sampled_from(REGS)), imm=imm))
+            elif kind == 2:
+                f = draw(st.sampled_from(OUT_FIELDS))
+                insns.append(Insn("stxdw", dst=1, src=draw(st.sampled_from(REGS)),
+                                  off=f.offset))
+            else:
+                # forward conditional jump over a small gap (filled with ALU)
+                op = draw(st.sampled_from(["jeqi", "jgti", "jlti", "jnei"]))
+                insns.append(Insn(op, dst=draw(st.sampled_from(REGS)),
+                                  imm=draw(st.integers(0, 1000)), off=1))
+                insns.append(Insn("mov64i", dst=draw(st.sampled_from(REGS)),
+                                  imm=draw(st.integers(0, 1000))))
+        insns.append(Insn("mov64", dst=0, src=draw(st.sampled_from(REGS))))
+        insns.append(Insn("exit"))
+
+        # sprinkle longer forward jumps (nested/overlapping diamonds) —
+        # inserted back-to-front so earlier offsets stay valid; targets land
+        # on whatever instruction follows the gap, exercising state joins
+        n_jumps = draw(st.integers(0, 3))
+        for _ in range(n_jumps):
+            pos = draw(st.integers(0, max(len(insns) - 3, 0)))
+            max_off = len(insns) - pos - 2   # keep target before final exit
+            if max_off < 1:
+                continue
+            off = draw(st.integers(1, min(6, max_off)))
+            op = draw(st.sampled_from(["jeqi", "jgei", "jlei", "jset" + "i",
+                                       "ja"]))
+            if op == "ja":
+                insns.insert(pos, Insn("ja", off=off))
+            else:
+                insns.insert(pos, Insn(op, dst=draw(st.sampled_from(REGS)),
+                                       imm=draw(st.integers(0, 2**20)),
+                                       off=off))
+        return Program("prop", "tuner", insns)
+
+
+    @st.composite
+    def ctx_values(draw):
+        kwargs = {}
+        for f in IN_FIELDS:
+            kwargs[f.name] = draw(st.integers(0, 2**48))
+        return kwargs
+
+
+    @settings(max_examples=200, deadline=None)
+    @given(prog=straightline_program(), ctx_kwargs=ctx_values())
+    def test_vm_jit_agree_on_verified_programs(prog, ctx_kwargs):
+        try:
+            verify(prog)
+        except VerifierError:
+            # e.g. mul overflow widening then used as shift amount — fine;
+            # property only concerns *accepted* programs
+            return
+        vm = VM(prog.insns, {})
+        fn_v2 = compile_program(prog, {})
+        fn_v1 = compile_program(prog, {}, codegen="v1")
+
+        c1 = make_ctx("tuner", **ctx_kwargs)
+        c2 = make_ctx("tuner", **ctx_kwargs)
+        c3 = make_ctx("tuner", **ctx_kwargs)
+        r_vm = vm.run(c1.buf)
+        r_v2 = fn_v2(c2.buf)
+        r_v1 = fn_v1(c3.buf)
+        assert r_vm == r_v2 == r_v1
+        assert c1.buf == c2.buf == c3.buf
+
+
+    @settings(max_examples=200, deadline=None)
+    @given(prog=straightline_program(), ctx_kwargs=ctx_values())
+    def test_verified_programs_never_fault(prog, ctx_kwargs):
+        """Soundness witness: if the verifier accepts, the VM must not fault."""
+        try:
+            verify(prog)
+        except VerifierError:
+            return
+        vm = VM(prog.insns, {})
+        try:
+            vm.run(make_ctx("tuner", **ctx_kwargs).buf)
+        except VMError as e:  # pragma: no cover
+            raise AssertionError(
+                f"verifier accepted but VM faulted: {e}\n{prog.disasm()}")
