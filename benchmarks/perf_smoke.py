@@ -12,7 +12,10 @@ Asserts the fast-path performance invariants cheaply:
 * the pallas tiers (uint64 and the Mosaic-ready 32-bit-pair lowering)
   agree with the interpreter AND their device-resident bridge performs
   ZERO map uploads across a warm repeated-call loop (the bridge-sync
-  win, asserted via dirty counters rather than wall-clock).
+  win, asserted via dirty counters rather than wall-clock), and
+* the guarded decide path (input sanitize + fault containment, the
+  default) stays within a small factor of the unguarded path — runtime
+  guards must be cheap enough to leave on in production.
 
 Prints a one-line JSON perf record (and reports rows when driven by
 ``benchmarks.run``).  Run standalone:
@@ -143,6 +146,29 @@ def smoke() -> dict:
         "cache_speedup": round(uncached / cached, 2),
         "ok": cached <= uncached}
     rec["ok"] = rec["ok"] and rec["dispatch"]["ok"]
+
+    # runtime-guard overhead: guards run on every uncached dispatch
+    # (sanitize + try/except + fault clock); GUARD_MARGIN bounds the
+    # factor so containment stays cheap enough to leave on by default
+    def _guard_ns(guards: bool) -> float:
+        disp = CollectiveDispatcher(
+            runtime=rt, config=DispatchConfig(
+                enable_decision_cache=False, enable_runtime_guards=guards))
+        disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        t0 = time.perf_counter_ns()
+        for _ in range(N_CALLS):
+            disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+        return (time.perf_counter_ns() - t0) / N_CALLS
+
+    unguarded, guarded = _guard_ns(False), _guard_ns(True)
+    GUARD_MARGIN = 2.0
+    gok = guarded <= unguarded * GUARD_MARGIN
+    rec["guarded_decide"] = {
+        "unguarded_ns": round(unguarded, 1),
+        "guarded_ns": round(guarded, 1),
+        "overhead_x": round(guarded / unguarded, 2),
+        "margin": GUARD_MARGIN, "ok": gok}
+    rec["ok"] = rec["ok"] and gok
     return rec
 
 
@@ -151,6 +177,7 @@ def run(report) -> None:
     for name, row in rec["policies"].items():
         report("perf_smoke", name, **row)
     report("perf_smoke", "dispatch_cache", **rec["dispatch"])
+    report("perf_smoke", "guarded_decide", **rec["guarded_decide"])
     print(json.dumps(rec, separators=(",", ":")))
     assert rec["ok"], f"perf smoke regression: {rec}"
 

@@ -7,12 +7,15 @@ Usage:
 
 ``--ci`` is the single entry the builder runs as the merge gate: the
 perf-smoke suite (JIT >= interpreter, cache >= uncached, pallas-tier
-differential rows incl. the zero-warm-upload bridge assertion), the
-``table1_pallas`` five-tier differential (interp == v1 == v2 == jaxc ==
-pallas, zero retraces), the ``table1_pallas32`` SIX-tier differential
-(+ the Mosaic-ready 32-bit-pair lowering, whose leg runs without
-``enable_x64``), then the tier-1 pytest suite; exit status is nonzero
-if any leg fails.
+differential rows incl. the zero-warm-upload bridge assertion, and the
+guarded-decide overhead bound), the ``table1_pallas`` five-tier
+differential (interp == v1 == v2 == jaxc == pallas, zero retraces), the
+``table1_pallas32`` SIX-tier differential (+ the Mosaic-ready
+32-bit-pair lowering, whose leg runs without ``enable_x64``), the
+runtime fault-containment matrix (injected faults at every trust
+boundary x every tier must degrade to the cost-model default, never
+escape), then the tier-1 pytest suite; exit status is nonzero if any
+leg fails.
 
 Prints ``section,name,key=value,...`` CSV-ish lines and writes
 results/bench.json.
@@ -87,6 +90,19 @@ def run_ci() -> int:
         if r.returncode != 0:
             print(f"CI: {suite} FAILED", flush=True)
             failures += 1
+
+    print("=== ci: runtime fault containment ===", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.safety_suite import runtime_fault_section;"
+         "rec = runtime_fault_section();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: runtime fault containment FAILED", flush=True)
+        failures += 1
 
     print("=== ci: tier-1 pytest ===", flush=True)
     known_path = os.path.join(repo, "benchmarks", "ci_known_failures.txt")

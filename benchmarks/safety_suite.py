@@ -1,5 +1,16 @@
 """§5.2 safety reproduction: 7 safe accepted / 7 unsafe rejected at load
-time, with verification latency (paper: 1-5 ms one-time)."""
+time, with verification latency (paper: 1-5 ms one-time).
+
+Extended with the RUNTIME fault-containment matrix
+(:func:`runtime_fault_section`, wired into ``benchmarks.run --ci``):
+load-time verification rejects unsafe *programs*; the runtime guards
+contain unsafe *executions* — injected faults at every trust boundary
+(helper calls, map read-modify-writes, bridge upload/flush, decide
+itself) on every execution tier must never escape ``decide()``, and the
+decision under fault must be either the healthy policy decision or the
+cost-model default, never garbage.  Hot-reload atomicity rides along:
+an injected compile failure during ``link.replace()`` must leave the
+old chain attached and deciding."""
 
 from __future__ import annotations
 
@@ -9,6 +20,115 @@ from repro.core import PolicyRuntime, VerifierError, verify
 from repro.core.vm import VM, VMError
 from repro.core.context import make_ctx
 from repro.policies import SAFE_POLICIES, UNSAFE_PROGRAMS
+
+
+MiB = 1 << 20
+# injection points exercised per tier (bridge points only exist on the
+# in-graph tiers; host tiers hit helper/map_rmw inside the chain)
+_MATRIX_POINTS = ("helper", "map_rmw", "decide", "bridge_upload",
+                  "bridge_download", "bridge_flush")
+
+
+def _fault_tiers():
+    from repro.compat import have_x64
+    tiers = ["interp", "jit", "jaxc", "pallas32"]
+    if have_x64():
+        tiers.insert(3, "pallas")
+    return tiers
+
+
+def _mk_dispatcher(tier):
+    """Runtime + dispatcher tuned for per-call observation: breakers and
+    safe mode disabled so every injected fault exercises the per-call
+    fallback path rather than latching."""
+    from repro.collectives.dispatch import (CollectiveDispatcher,
+                                            DispatchConfig)
+    from repro.core import BreakerConfig
+    from repro.policies.loops import latency_argmin_tuner
+    rt = PolicyRuntime(tier=tier, breaker=BreakerConfig(enabled=False))
+    rt.load(latency_argmin_tuner.program)
+    m = rt.maps.get("config_lat_map")
+    for k in range(0, m.max_entries, 5):
+        m.update_u64(k, 900 + 13 * k, slot=0)
+    disp = CollectiveDispatcher(runtime=rt, config=DispatchConfig(
+        enable_decision_cache=False, safe_mode_threshold=1 << 30))
+    return disp
+
+
+def _decide(disp):
+    from repro.core.context import CollType
+    return disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+
+
+def runtime_fault_section() -> dict:
+    """Tier x injection-point containment matrix (importable; CI leg).
+
+    For every tier and every trust-boundary point, run decide() with a
+    deterministic always-fire injector and assert the guard contract:
+    no exception escapes, the decision stays in-domain, and it equals
+    either the healthy policy decision or the policy-detached default.
+    Then assert hot-reload atomicity under an injected compile fault."""
+    from repro.core import FaultInjector
+    from repro.core.context import Algo, Proto
+    rec = {"suite": "runtime_faults", "rows": [], "ok": True}
+
+    # policy-detached default: what a faulted decide must degrade to
+    from repro.collectives.dispatch import (CollectiveDispatcher,
+                                            DispatchConfig)
+    base = CollectiveDispatcher(runtime=PolicyRuntime(),
+                                config=DispatchConfig())
+    default_key = _decide(base).key()
+
+    for tier in _fault_tiers():
+        healthy_key = _decide(_mk_dispatcher(tier)).key()
+        for point in _MATRIX_POINTS:
+            disp = _mk_dispatcher(tier)
+            escaped = 0
+            bad_domain = 0
+            off_baseline = 0
+            with FaultInjector(seed=7).plan(point, prob=1.0) as inj:
+                for _ in range(8):
+                    try:
+                        d = _decide(disp)
+                    except Exception:
+                        escaped += 1
+                        continue
+                    if (d.algo >= Algo.COUNT or d.proto >= Proto.COUNT
+                            or not 1 <= d.channels <= 32):
+                        bad_domain += 1
+                    if d.key() not in (healthy_key, default_key):
+                        off_baseline += 1
+                fired = inj.stats()[point]["fires"]
+            ok = escaped == bad_domain == off_baseline == 0
+            rec["rows"].append({
+                "name": f"{tier}/{point}", "fired": fired,
+                "escaped": escaped, "bad_domain": bad_domain,
+                "off_baseline": off_baseline,
+                "fallbacks": disp.fault_stats.total, "ok": ok})
+            rec["ok"] = rec["ok"] and ok
+
+        # hot-reload atomicity: a compile fault during replace() must
+        # leave the old chain attached, deciding, and epoch-coherent
+        disp = _mk_dispatcher(tier)
+        rt = disp.runtime
+        link = rt.chain("tuner")[0]
+        before = _decide(disp).key()
+        epoch_before = rt.epoch
+        raised = False
+        try:
+            with FaultInjector(seed=7).plan("compile", prob=1.0):
+                from repro.policies.loops import latency_argmin_tuner
+                link.replace(latency_argmin_tuner.program)
+        except Exception:
+            raised = True
+        ok = (raised and rt.is_attached("tuner")
+              and rt.epoch == epoch_before
+              and _decide(disp).key() == before)
+        rec["rows"].append({
+            "name": f"{tier}/replace_atomic", "raised": raised,
+            "epoch_stable": rt.epoch == epoch_before, "ok": ok})
+        rec["ok"] = rec["ok"] and ok
+    return rec
 
 
 def run(report):
@@ -50,3 +170,10 @@ def run(report):
            verified_path="rejected at load time (see null_deref row)")
     report("safety", "summary", accepted=accepted, rejected=rejected,
            expected="7 accepted / 7 rejected")
+
+    # runtime fault containment (the execution-time counterpart)
+    rec = runtime_fault_section()
+    for row in rec["rows"]:
+        report("safety_runtime", row["name"],
+               **{k: v for k, v in row.items() if k != "name"})
+    assert rec["ok"], f"runtime fault containment regression: {rec}"

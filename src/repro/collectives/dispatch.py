@@ -58,6 +58,24 @@ attached, each dispatch invokes it with (op, bytes, peer) — the data-plane
 accounting path.  Net/profiler hooks and the decision log run on cache
 hits as well: memoization elides the policy invocation and cost-table
 translation, never the observable side channels.
+
+Fault containment (runtime guards)
+----------------------------------
+With ``DispatchConfig.enable_runtime_guards`` (the default) every
+``decide()`` is sandboxed: inputs are sanitized (NaN/inf/negative
+telemetry is clamped, never fed to policies), any exception escaping the
+policy chain is caught and converted into the cost-model default
+decision, and out-of-domain decisions (algorithm/protocol outside the
+enum, channels overflowing u32) are counted as faults and charged to the
+deciding link's circuit breaker (see ``core.runtime``).  Faulted
+decisions are never inserted into the decision cache.  When the
+dispatcher-level sliding fault window fills
+(``safe_mode_threshold`` faults within ``safe_mode_window`` decisions)
+the dispatcher enters **safe mode**: tuner policies are skipped entirely
+and dispatch runs pure cost-model defaults for ``safe_mode_cooldown``
+decisions, then re-probes (half-open).  No fault ever reaches the
+collective: the numeric result during a fault is identical to running
+with policies detached.
 """
 
 from __future__ import annotations
@@ -66,6 +84,7 @@ import collections
 import dataclasses
 import functools
 import hashlib
+import math
 import threading
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -73,6 +92,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..compat import axis_size
+from ..core import faults as _faults
 from ..core.context import Algo, AxisKind, CollType, Proto, make_ctx
 from ..core.runtime import PolicyRuntime, global_runtime
 from . import algorithms as alg
@@ -114,6 +134,32 @@ class DispatchConfig:
     # order), never the whole cache — a burst of distinct keys must not
     # trigger a periodic full-recompute storm on the hot entries
     decision_cache_max: int = 4096
+    # --- fault containment (runtime guards) ---------------------------
+    # sanitize inputs, catch policy exceptions, reject out-of-domain
+    # decisions; a fault always degrades to the cost-model default
+    enable_runtime_guards: bool = True
+    # safe mode: >= threshold faults within the last `window` decisions
+    # detaches ALL tuner policies for `cooldown` decisions, then re-probes
+    safe_mode_threshold: int = 8
+    safe_mode_window: int = 64
+    safe_mode_cooldown: int = 512
+
+
+@dataclasses.dataclass
+class FaultStats:
+    """Dispatcher-level fault accounting (``dispatcher().fault_stats``)."""
+    policy_exceptions: int = 0   # exceptions escaping a policy chain
+    invalid_decisions: int = 0   # out-of-domain (algo/proto/channels)
+    invalid_inputs: int = 0      # NaN/inf/negative telemetry sanitized
+    safe_mode_entries: int = 0
+    safe_mode_decisions: int = 0  # decisions served while in safe mode
+
+    @property
+    def total(self) -> int:
+        """Faults that feed the safe-mode window (input sanitization is
+        counted but does not trip safe mode — garbage in is a caller
+        bug, not a policy fault)."""
+        return self.policy_exceptions + self.invalid_decisions
 
 
 @functools.lru_cache(maxsize=4096)
@@ -182,6 +228,13 @@ class CollectiveDispatcher:
             (-1, 0, False, {})
         self.cache_hits = 0
         self.cache_misses = 0
+        # fault containment state: monotone decision counter (the fault
+        # clock), sliding window of recent fault marks, safe-mode latch
+        self.fault_stats = FaultStats()
+        self._decision_seq = 0
+        self._fault_marks: Deque[int] = collections.deque()
+        self._safe_mode = False
+        self._safe_until = 0
         self._apply_env_plugin()
 
     def apply_env(self, *, n_devices: int = 0, tp: int = 0,
@@ -258,10 +311,48 @@ class CollectiveDispatcher:
                 self._cache_gen = gen
                 return gen
 
+    def _san(self, v, lo: int) -> int:
+        """Sanitize one dispatcher input.  Non-finite (NaN/inf),
+        unconvertible, or below-range values are counted and clamped to
+        ``lo`` — garbage telemetry must never reach a policy (it would
+        poison map state and cost-model rows).  Plain in-range ints (the
+        universal case) take the two-comparison fast path."""
+        if type(v) is int:
+            if v >= lo:
+                return v
+            self.fault_stats.invalid_inputs += 1
+            return lo
+        try:
+            f = float(v)
+        except (TypeError, ValueError):
+            self.fault_stats.invalid_inputs += 1
+            return lo
+        if math.isnan(f) or math.isinf(f):
+            self.fault_stats.invalid_inputs += 1
+            return lo
+        i = int(f)
+        if i < lo:
+            self.fault_stats.invalid_inputs += 1
+            return lo
+        return i
+
     def decide(self, coll: int, size_bytes: int, n: int, *,
                axis_kind: int = AxisKind.DATA, dtype_bytes: int = 4,
                axis_name: str = "?") -> Decision:
         cfg = self.config
+        guards = cfg.enable_runtime_guards
+        if guards:
+            coll = self._san(coll, 0)
+            size_bytes = self._san(size_bytes, 0)
+            n = self._san(n, 1)
+            axis_kind = self._san(axis_kind, 0)
+            dtype_bytes = self._san(dtype_bytes, 1)
+            self._decision_seq += 1
+            if self._safe_mode and self._decision_seq >= self._safe_until:
+                # cooldown elapsed: half-open re-probe — resume invoking
+                # policies; renewed faults refill the window and re-enter
+                self._safe_mode = False
+        safe = guards and self._safe_mode
         gen = self._cache_gen               # one atomic snapshot read
         if self.runtime.epoch != gen[0]:
             # hot-reload/attach/detach happened: flush and re-probe purity
@@ -269,7 +360,7 @@ class CollectiveDispatcher:
         gen_epoch, gen_fp, cacheable, cache = gen
         cid = _comm_id(axis_name, n)
         key = None
-        if cacheable:
+        if cacheable and not safe:
             # the chain fingerprint joins the epoch in every cache key:
             # epoch says "something changed", the fingerprint pins *which*
             # chain composition produced the cached decision
@@ -287,18 +378,46 @@ class CollectiveDispatcher:
                 self._net_hook(d)
                 return d
             self.cache_misses += 1
-        ctx = make_ctx(
-            "tuner",
-            coll_type=coll, msg_size=size_bytes, n_ranks=n, comm_id=cid,
-            axis_kind=axis_kind, dtype_bytes=dtype_bytes,
-            max_channels=cfg.max_channels, topo_links=cfg.hw.n_links,
-            algorithm=0, protocol=0, n_channels=0,
-        )
-        ret = self.runtime.invoke("tuner", ctx)
-        from_policy = ret is not None
-        algo = ctx["algorithm"]
-        proto = ctx["protocol"]
-        channels = ctx["n_channels"]
+        faulted = False
+        if safe:
+            # safe mode: tuner policies are detached from the decision
+            # path entirely — pure cost-model default, no policy code runs
+            self.fault_stats.safe_mode_decisions += 1
+            from_policy = False
+            algo = proto = channels = 0
+        else:
+            ctx = make_ctx(
+                "tuner",
+                coll_type=coll, msg_size=size_bytes, n_ranks=n, comm_id=cid,
+                axis_kind=axis_kind, dtype_bytes=dtype_bytes,
+                max_channels=cfg.max_channels, topo_links=cfg.hw.n_links,
+                algorithm=0, protocol=0, n_channels=0,
+            )
+            lf_before = self.runtime.stats.link_faults if guards else 0
+            try:
+                _faults.fire("decide")
+                ret = self.runtime.invoke("tuner", ctx)
+            except Exception as exc:
+                if not guards:
+                    raise
+                # the guard contract: no policy exception escapes decide()
+                faulted = True
+                ret = None
+                self._record_policy_fault(exc)
+            from_policy = ret is not None
+            if faulted:
+                # discard any partial ctx writes the failing chain made
+                algo = proto = channels = 0
+                from_policy = False
+            else:
+                algo = ctx["algorithm"]
+                proto = ctx["protocol"]
+                channels = ctx["n_channels"]
+                if guards and self.runtime.stats.link_faults > lf_before:
+                    # a multi-link chain contained a per-link fault and
+                    # produced a healthy decision from the surviving
+                    # links; it still feeds the safe-mode window
+                    self._note_fault()
 
         if not from_policy or (algo == 0 and proto == 0 and channels == 0):
             # no policy attached, or policy deferred: framework default
@@ -309,10 +428,20 @@ class CollectiveDispatcher:
         # --- tuner-v5 cost-table translation + graceful fallback ----------
         table = self.cost_model.cost_table_cached(coll, size_bytes, n,
                                                   channels=max(channels, 1))
-        if algo >= Algo.COUNT or proto >= Proto.COUNT:
-            # unavailable combination: sentinel cost -> framework default
+        if algo >= Algo.COUNT or proto >= Proto.COUNT \
+                or channels > 0xFFFFFFFF:
+            # out-of-domain decision: sentinel cost -> framework default.
+            # Under guards this is a policy fault — charged to the
+            # deciding link's breaker and to the safe-mode window.
+            if guards and from_policy:
+                self.fault_stats.invalid_decisions += 1
+                self.runtime.record_fault(
+                    self.runtime.last_decider("tuner"), None,
+                    section="tuner")
+                self._note_fault()
             algo, proto = cfg.default_algo, cfg.default_proto
             channels = cfg.default_channels
+            from_policy = False
         # argmin with the policy's (algo, proto) cost zeroed — equivalent
         # to mutating a fresh table, but against the memoized rows; strict
         # `<` preserves the original first-minimum tie-break order
@@ -333,7 +462,10 @@ class CollectiveDispatcher:
         d = Decision(coll=coll, algo=algo, proto=proto, channels=channels,
                      size_bytes=size_bytes, n_ranks=n, axis_kind=axis_kind,
                      comm_id=cid, from_policy=from_policy)
-        if key is not None:
+        if key is not None and not faulted:
+            # a faulted decision is a degraded default, not the chain's
+            # answer — caching it would keep serving the fallback after
+            # the fault clears
             if len(cache) >= cfg.decision_cache_max:
                 self._evict_oldest_half(cache)
             # insert guard: publish into the generation only while its
@@ -363,6 +495,60 @@ class CollectiveDispatcher:
             # lock-free inserts from the hit path
             for k in list(cache)[:max(n // 2, 1)]:
                 cache.pop(k, None)
+
+    # ------------------------------------------------------------------
+    # fault containment
+    # ------------------------------------------------------------------
+    def _record_policy_fault(self, exc: BaseException, *,
+                             section: str = "tuner") -> None:
+        """An exception escaped a policy chain: count it, charge the
+        section's highest-precedence active link (depth-1 chains raise
+        straight through; multi-link chains contain per-link), and feed
+        the safe-mode window."""
+        self.fault_stats.policy_exceptions += 1
+        self.runtime.record_fault(None, exc, section=section)
+        self._note_fault()
+
+    def _note_fault(self) -> None:
+        """Slide one fault mark into the dispatcher window; trip safe
+        mode when `safe_mode_threshold` marks land within the last
+        `safe_mode_window` decisions."""
+        if self._safe_mode:
+            return
+        cfg = self.config
+        now = self._decision_seq
+        marks = self._fault_marks
+        marks.append(now)
+        while marks and now - marks[0] > cfg.safe_mode_window:
+            marks.popleft()
+        if len(marks) >= cfg.safe_mode_threshold:
+            marks.clear()
+            self._safe_mode = True
+            self._safe_until = now + cfg.safe_mode_cooldown
+            self.fault_stats.safe_mode_entries += 1
+
+    @property
+    def safe_mode(self) -> bool:
+        """True while tuner policies are detached from the decision path
+        (entered automatically when the fault window fills)."""
+        return self._safe_mode
+
+    def clear_safe_mode(self) -> None:
+        """Operator override: exit safe mode and forget the window."""
+        self._safe_mode = False
+        self._fault_marks.clear()
+
+    def health(self) -> Dict[str, object]:
+        """Runtime health (per-link breaker state, see
+        :meth:`PolicyRuntime.health`) merged with the dispatcher-level
+        view: safe-mode latch and fault accounting."""
+        h = self.runtime.health()
+        h["dispatcher"] = {
+            "safe_mode": self._safe_mode,
+            "fault_stats": dataclasses.asdict(self.fault_stats),
+            "fault_total": self.fault_stats.total,
+        }
+        return h
 
     # ------------------------------------------------------------------
     def make_ingraph(self, *, tier: str = "pallas"):
@@ -399,7 +585,17 @@ class CollectiveDispatcher:
         nctx = make_ctx("net", op=0, bytes=d.size_bytes,
                         peer=(d.comm_id + 1) % max(d.n_ranks, 1),
                         comm_id=d.comm_id, conn_id=d.coll)
-        self.runtime.invoke("net", nctx)
+        try:
+            self.runtime.invoke("net", nctx)
+        except Exception as exc:
+            if not self.config.enable_runtime_guards:
+                raise
+            # accounting path fault: charged to the net link's breaker;
+            # never disturbs the dispatch (and the event is not counted —
+            # the accounting program did not process it)
+            self.fault_stats.policy_exceptions += 1
+            self.runtime.record_fault(None, exc, section="net")
+            return
         self.net_calls += 1
         self.net_bytes += d.size_bytes
 
@@ -450,7 +646,13 @@ class CollectiveDispatcher:
                         msg_size=msg_size, comm_id=comm_id,
                         latency_ns=latency_ns, n_channels=channels,
                         algorithm=algo, timestamp_ns=ts_ns)
-        self.runtime.invoke("profiler", pctx)
+        try:
+            self.runtime.invoke("profiler", pctx)
+        except Exception as exc:
+            if not self.config.enable_runtime_guards:
+                raise
+            self.fault_stats.policy_exceptions += 1
+            self.runtime.record_fault(None, exc, section="profiler")
 
     @property
     def epoch(self) -> int:

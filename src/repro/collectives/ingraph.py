@@ -55,6 +55,12 @@ _BRANCHES = [
 
 TIERS = ("jaxc", "pallas", "pallas32")
 
+# extra state leaf carrying the in-graph fault flag: compiled policies
+# cannot throw, so out-of-domain decisions are clamped IN the graph and
+# counted here (a uint32[1] accumulator threaded with the map state);
+# hosts drain it at flush boundaries via :meth:`InGraphSelector.drain_faults`
+FAULT_KEY = "__fault_flags__"
+
 
 class InGraphSelector:
     def __init__(self, program: Program, *, tier: str = "jaxc"):
@@ -95,6 +101,7 @@ class InGraphSelector:
                            value_size=d.value_size,
                            max_entries=d.max_entries)
             out[d.name] = to_array(m)
+        out[FAULT_KEY] = jnp.zeros((1,), jnp.uint32)
         return out
 
     def _ctx_vec(self, fields: Dict[str, object]) -> jnp.ndarray:
@@ -147,15 +154,38 @@ class InGraphSelector:
                 # profiler program or pass through dtype_bytes-free field
                 fields["dtype_bytes"] = latency_ns
             vec = self._ctx_vec(fields)
-            _, vec_out, state = self._fn(vec, state)
+            flags = state.get(FAULT_KEY)
+            prog_state = {k: v for k, v in state.items() if k != FAULT_KEY}
+            _, vec_out, prog_state = self._fn(vec, prog_state)
             if self.word_width == 32:
-                algo = vec_out[_IDX["algorithm"], 0].astype(jnp.int32)
-                ch = vec_out[_IDX["n_channels"], 0].astype(jnp.int32)
+                raw_algo = vec_out[_IDX["algorithm"], 0].astype(jnp.int32)
+                raw_ch = vec_out[_IDX["n_channels"], 0].astype(jnp.int32)
             else:
-                algo = vec_out[_IDX["algorithm"]].astype(jnp.int32)
-                ch = vec_out[_IDX["n_channels"]].astype(jnp.int32)
-        algo = jnp.clip(algo, 0, len(_BRANCHES) - 1)
+                raw_algo = vec_out[_IDX["algorithm"]].astype(jnp.int32)
+                raw_ch = vec_out[_IDX["n_channels"]].astype(jnp.int32)
+        # the kernel cannot throw, so the domain guard is a clamp lowered
+        # INTO the graph; any clamp that changed the value bumps the
+        # fault-flag leaf (drained host-side at flush boundaries)
+        algo = jnp.clip(raw_algo, 0, len(_BRANCHES) - 1)
+        ch = jnp.clip(raw_ch, 0, 32)
+        state = dict(prog_state)
+        if flags is not None:
+            bad = ((raw_algo != algo) | (raw_ch != ch)).astype(jnp.uint32)
+            state[FAULT_KEY] = flags + bad
         return algo, ch, state
+
+    def drain_faults(self, state: Dict) -> Tuple[int, Dict]:
+        """Read-and-zero the in-graph fault counter (host sync point —
+        call at the same cadence as ``DeviceBridge.flush``).  Returns
+        ``(n_faults, state_with_cleared_flag)``; states built before the
+        flag leaf existed drain as 0."""
+        flags = state.get(FAULT_KEY)
+        if flags is None:
+            return 0, state
+        n = int(jax.device_get(flags)[0])
+        state = dict(state)
+        state[FAULT_KEY] = jnp.zeros((1,), jnp.uint32)
+        return n, state
 
     def all_reduce(self, x, axis_name: str, state: Dict, *,
                    comm_id: int = 0, latency_ns=None):

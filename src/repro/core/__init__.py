@@ -7,28 +7,32 @@ Layers:
   jaxc / pallasc         — in-graph tiers: pure-JAX if-conversion, and the
                            single-Pallas-kernel lowering (zero host cost)
   maps                   — typed cross-plugin state (composability substrate)
-  runtime                — load/attach/hot-reload lifecycle, tier selection
+  runtime                — load/attach/hot-reload lifecycle, tier selection,
+                           per-link circuit breakers
+  faults                 — deterministic fault injection at trust boundaries
 """
 
 from .asm import AsmError, assemble
 from .context import (Algo, AxisKind, CollType, PolicyContextValues,
                       ProfEvent, Proto, make_ctx)
+from .faults import FaultInjector, InjectedFault
 from .frontend import CompileError, compile_policy, map_decl, policy
 from .isa import Insn
 from .maps import ArrayMap, BpfMap, HashMap, MapRegistry, PerCpuArrayMap
 from .program import MapDecl, Program
-from .runtime import (LinkError, LoadedProgram, PolicyLink, PolicyRuntime,
-                      global_runtime, reset_global_runtime)
+from .runtime import (BreakerConfig, LinkError, LoadedProgram, PolicyLink,
+                      PolicyRuntime, global_runtime, reset_global_runtime)
 from .verifier import VerifierError, verify
 from .vm import VM, VMError
 
 __all__ = [
     "AsmError", "assemble", "Algo", "AxisKind", "CollType",
     "PolicyContextValues", "ProfEvent", "Proto", "make_ctx",
+    "FaultInjector", "InjectedFault",
     "CompileError", "compile_policy", "map_decl", "policy", "Insn",
     "ArrayMap", "BpfMap", "HashMap", "MapRegistry", "PerCpuArrayMap",
-    "MapDecl", "Program", "LinkError", "LoadedProgram", "PolicyLink",
-    "PolicyRuntime",
+    "MapDecl", "Program", "BreakerConfig", "LinkError", "LoadedProgram",
+    "PolicyLink", "PolicyRuntime",
     "global_runtime", "reset_global_runtime", "VerifierError", "verify",
     "VM", "VMError",
 ]

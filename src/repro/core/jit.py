@@ -40,9 +40,11 @@ Two code generators live here:
     specialization) have their pure assignments deleted.
 
 * **v1** — the original ``while True`` + linear ``if bb == N`` dispatcher
-  over a ``mems`` region table.  Kept verbatim as the baseline for the
-  old-vs-new comparison in ``benchmarks/table1_overhead.py`` and as the
-  fallback when no verifier analysis is available.
+  over a ``mems`` region table.  Kept as the baseline for the old-vs-new
+  comparison in ``benchmarks/table1_overhead.py`` and as the fallback
+  when no verifier analysis is available.  Its pointer stores bump map
+  content versions through the region table's owner column, so the
+  device bridge's dirty tracking holds on this tier too.
 
 Code generation model (shared)
 ------------------------------
@@ -60,6 +62,7 @@ import re
 import struct
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from . import faults as _faults
 from . import helpers as H
 from .cfg import CFG, leaders as _leaders
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
@@ -87,6 +90,15 @@ _STACK_ESCAPE_HIDS = frozenset(
 
 def _sval(expr: str) -> str:
     return f"_s64({expr})"
+
+
+class _RegionTable(list):
+    """v1 region table: a list plus a parallel ``owners`` list mapping
+    each region index to the :class:`BpfMap` it belongs to (``None`` for
+    stack/ctx), so pointer stores can bump the owning map's content
+    version — the same dirty tracking the VM and v2 get from ``Ptr.owner``
+    / the verifier's region facts."""
+    __slots__ = ("owners",)
 
 
 class _Gen:
@@ -148,8 +160,12 @@ class _Gen:
             val = f"r{insn.src}" if op.startswith("stx") else str(insn.imm & M64)
             mask = (1 << (8 * n)) - 1
             w(f"_p = r{insn.dst} + {insn.off}")
-            w(f"_m = mems[_p >> 32]; _o = _p & {M32}")
+            w(f"_ri = _p >> 32; _m = mems[_ri]; _o = _p & {M32}")
             w(f"_m[_o:_o+{n}] = (({val}) & {mask}).to_bytes({n}, 'little')")
+            # map-value regions bump the owning map's content version
+            # (device-bridge dirty tracking); stack/ctx owners are None
+            w("_t = _owners[_ri]")
+            w("if _t is not None: _t.touch()")
             return False
         raise AssertionError(f"unhandled op {op}")
 
@@ -209,10 +225,12 @@ class _StructAbort(Exception):
 
 def _mk_lookup(m: BpfMap):
     ks = m.key_size
+    fire = _faults.fire
     if m.kind == "hash":
         get = m._table.get  # dict identity is stable for a map's lifetime
 
         def f(mems, kp):
+            fire("helper", "map_lookup_elem")
             o = kp & M32
             v = get(bytes(mems[kp >> 32][o:o + ks]))
             if v is None:
@@ -223,6 +241,7 @@ def _mk_lookup(m: BpfMap):
     lookup = m.lookup_ref   # live view: the program writes through it
 
     def f(mems, kp):
+        fire("helper", "map_lookup_elem")
         o = kp & M32
         v = lookup(bytes(mems[kp >> 32][o:o + ks]))
         if v is None:
@@ -235,8 +254,10 @@ def _mk_lookup(m: BpfMap):
 def _mk_update(m: BpfMap):
     ks, vs = m.key_size, m.value_size
     update = m.update
+    fire = _faults.fire
 
     def f(mems, kp, vp):
+        fire("helper", "map_update_elem")
         ko = kp & M32
         vo = vp & M32
         return update(bytes(mems[kp >> 32][ko:ko + ks]),
@@ -247,8 +268,10 @@ def _mk_update(m: BpfMap):
 def _mk_delete(m: BpfMap):
     ks = m.key_size
     delete = m.delete
+    fire = _faults.fire
 
     def f(mems, kp):
+        fire("helper", "map_delete_elem")
         o = kp & M32
         return delete(bytes(mems[kp >> 32][o:o + ks])) & M64
     return f
@@ -260,8 +283,12 @@ def _mk_ema(m: BpfMap):
     update = m.update
     touch = m.touch
     lock = m.lock
+    fire = _faults.fire
+    mname = m.name
 
     def f(mems, kp, sample, weight):
+        fire("helper", "ema_update")
+        fire("map_rmw", mname)
         w = weight if weight > 1 else 1
         o = kp & M32
         key = bytes(mems[kp >> 32][o:o + ks])
@@ -555,6 +582,7 @@ class _GenV2(_Gen):
             u4 = self._use_u(4)
             if h.name == "map_lookup_elem":
                 slots = self._inline_slot(mname)
+                w('_fire("helper", "map_lookup_elem")')
                 w(f"_k = {u4}(stack, r2 & {M32})[0]")
                 w(f"if _k < {m.max_entries}:")
                 w(f"    mems.append({slots}[_k])")
@@ -573,6 +601,8 @@ class _GenV2(_Gen):
                 lk = self._inline_lock(mname)
                 tc = self._inline_touch(mname)
                 u8, p8 = self._use_u(8), self._use_p(8)
+                w('_fire("helper", "ema_update")')
+                w(f'_fire("map_rmw", "{mname}")')
                 w(f"_k = {u4}(stack, r2 & {M32})[0]")
                 w("_w = r4 if r4 > 1 else 1")
                 w(f"if _k < {m.max_entries}:")
@@ -875,36 +905,50 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
         o = p & M32
         return bytes(m[o:o + size])
 
+    fire = _faults.fire
+
     def _h_map_lookup_elem(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "map_lookup_elem")
         m = map_by_handle[r1]
         v = m.lookup_ref(_buf(mems, r2, m.key_size))
         if v is None:
             return 0
         mems.append(v)
+        # v1's region table tracks owners so pointer stores can touch()
+        owners = getattr(mems, "owners", None)
+        if owners is not None:
+            owners.append(m)
         return (len(mems) - 1) << 32
 
     def _h_map_update_elem(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "map_update_elem")
         m = map_by_handle[r1]
         key = _buf(mems, r2, m.key_size)
         val = _buf(mems, r3, m.value_size)
         return m.update(key, val) & M64
 
     def _h_map_delete_elem(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "map_delete_elem")
         m = map_by_handle[r1]
         return m.delete(_buf(mems, r2, m.key_size)) & M64
 
     def _h_ktime_get_ns(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "ktime_get_ns")
         return H.ktime_get_ns() & M64
 
     def _h_get_prandom_u32(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "get_prandom_u32")
         return H.get_prandom_u32()
 
     def _h_trace_printk(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "trace_printk")
         printk(r1)
         return 0
 
     def _h_ema_update(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "ema_update")
         m = map_by_handle[r1]
+        fire("map_rmw", m.name)
         key = _buf(mems, r2, m.key_size)
         w = max(1, r4)
         with m.lock:        # lock-held RMW (maps.py mutation contract)
@@ -924,10 +968,18 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
         raise AssertionError(
             "verifier-proven unreachable code executed")  # pragma: no cover
 
+    def _ktime() -> int:
+        fire("helper", "ktime_get_ns")
+        return H.ktime_get_ns()
+
+    def _prandom() -> int:
+        fire("helper", "get_prandom_u32")
+        return H.get_prandom_u32()
+
     return {
         "_s64": _s64, "_s32": _s32, "_dead": _dead,
-        "_ktime": H.ktime_get_ns, "_prandom": H.get_prandom_u32,
-        "_printk": printk,
+        "_ktime": _ktime, "_prandom": _prandom,
+        "_printk": printk, "_fire": fire,
         "_h_map_lookup_elem": _h_map_lookup_elem,
         "_h_map_update_elem": _h_map_update_elem,
         "_h_map_delete_elem": _h_map_delete_elem,
@@ -951,7 +1003,8 @@ def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
     g.indent = 1
     g.w("r0 = r2 = r3 = r4 = r5 = r6 = r7 = r8 = r9 = 0")
     g.w(f"stack = bytearray({STACK_SIZE})")
-    g.w("mems = [None, stack, ctx]")
+    g.w("mems = _RegionTable([None, stack, ctx])")
+    g.w("_owners = mems.owners = [None, None, None]")
     g.w(f"r1 = {2 << 32}")                      # ctx pointer: region 2
     g.w(f"r10 = {(1 << 32) | STACK_SIZE}")      # fp: region 1, offset 512
 
@@ -978,6 +1031,7 @@ def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
 
     src = "\n".join(g.lines)
     env = _helper_env(prog, resolved_maps, printk)
+    env["_RegionTable"] = _RegionTable
     code = compile(src, f"<bpf-jit:{prog.name}>", "exec")
     exec(code, env)  # noqa: S102 — generated from verified bytecode
     fn = env["_run"]

@@ -67,12 +67,12 @@ class BpfMap:
         # execution tiers' helper writebacks, AND by the runtime tiers'
         # store instructions through map-value pointers (the VM tags the
         # pointer with its owning map; the v2 JIT emits a touch at every
-        # verified map store).  Device-resident bridge caches
+        # verified map store; the legacy v1 JIT touches through its
+        # region table's owner column).  Device-resident bridge caches
         # (pallasc.DeviceBridge) key their uploads off it, so a clean
         # map never round-trips.  NOT tracked: host code writing through
-        # raw lookup_ref views, and the legacy v1 codegen's pointer
-        # stores (benchmark-only — PolicyRuntime cannot select v1);
-        # such writers call touch() / bridge.invalidate() explicitly.
+        # raw lookup_ref views; such writers call touch() /
+        # bridge.invalidate() explicitly.
         self._version = 0
 
     @property

@@ -55,12 +55,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..compat import enable_x64, maybe_x64
+from . import faults as _faults
+from .context import Algo, Proto
 from .jaxc import (JaxcError, _Lowerer, array_to_map, check_supported,
                    compile_jax, ctx_to_vec, map_to_array, written_map_names)
 from .lower32 import (_Lowerer32, array32_to_map, compile_jax32,
@@ -272,6 +275,14 @@ class BridgeStats:
     map_uploads: int = 0
     map_downloads: int = 0
     flushes: int = 0
+    # fault containment: upload retries taken, calls served by the host
+    # VM after retries ran dry, writebacks deferred after a download
+    # failure, and out-of-domain tuner decisions observed device-side
+    # (accumulated per call, drained into this counter at flush())
+    upload_retries: int = 0
+    host_fallbacks: int = 0
+    download_failures: int = 0
+    domain_faults: int = 0
 
 
 class DeviceBridge:
@@ -343,7 +354,25 @@ class DeviceBridge:
         self.sync = sync
         self._names = names
         self._maps = resolved_maps
+        self._prog = prog
         self._written = written_map_names(prog, vinfo) & set(names)
+        # fault containment: a failed upload retries with bounded
+        # backoff, then the call runs on the host VM instead of raising
+        self.upload_retries = 2
+        self.retry_backoff_s = 0.001
+        self._host_fn: Optional[Callable[[bytearray], int]] = None
+        # the kernel cannot throw, so out-of-domain tuner decisions are
+        # detected host-side per call and drained into stats at flush()
+        self._pending_domain_faults = 0
+        self._domain_offs = None
+        if prog.section == "tuner":
+            ct = prog.ctx_type
+            try:
+                self._domain_offs = (ct.offset_of("algorithm"),
+                                     ct.offset_of("protocol"),
+                                     ct.offset_of("n_channels"))
+            except KeyError:  # pragma: no cover — tuner ctx has them
+                pass
         donate = jax.default_backend() in ("tpu", "gpu")
         self._jfn = jax.jit(fn, donate_argnums=(1,)) if donate \
             else jax.jit(fn)
@@ -357,6 +386,7 @@ class DeviceBridge:
 
     # -- host map -> device ------------------------------------------------
     def _upload_dirty(self) -> None:
+        _faults.fire("bridge_upload", self.tier)
         for n in self._names:
             m = self._maps[n]
             if n not in self._dev or self._seen.get(n) != m.version:
@@ -377,6 +407,7 @@ class DeviceBridge:
 
     # -- device -> host map ------------------------------------------------
     def _writeback(self, names) -> None:
+        _faults.fire("bridge_download", self.tier)
         for n in names:
             arr = self._dev.get(n)
             if arr is None:
@@ -395,11 +426,46 @@ class DeviceBridge:
             self._device_dirty.discard(n)
             self.stats.map_downloads += 1
 
+    # -- fault containment -------------------------------------------------
+    def _retry_upload(self) -> bool:
+        """Bounded-backoff retry of the dirty-map upload."""
+        for attempt in range(self.upload_retries):
+            time.sleep(self.retry_backoff_s * (attempt + 1))
+            self.stats.upload_retries += 1
+            try:
+                self._upload_dirty()
+                return True
+            except Exception:
+                continue
+        return False
+
+    def _host_tier_fn(self) -> Callable[[bytearray], int]:
+        """Lazily-built host-VM fallback for calls whose upload failed.
+
+        Runs against the HOST maps — the source of truth for everything
+        the kernel hasn't written since the last flush.  Under
+        ``sync="deferred"`` unflushed kernel writes are invisible to the
+        fallback call (they reach host maps at the next healthy flush);
+        that staleness is the documented deferred-mode window, not a new
+        one."""
+        if self._host_fn is None:
+            from .vm import VM
+            self._host_fn = VM(self._prog.insns, self._maps).run
+        return self._host_fn
+
     # -- the runtime host-closure contract ---------------------------------
     def __call__(self, ctx_buf: bytearray) -> int:
         with self._lock:
             self.stats.calls += 1
-            self._upload_dirty()
+            try:
+                self._upload_dirty()
+            except Exception:
+                if not self._retry_upload():
+                    # retries exhausted: contain the fault by running
+                    # this one decision on the host tier instead of
+                    # raising into the collective path
+                    self.stats.host_fallbacks += 1
+                    return self._host_tier_fn()(ctx_buf)
             with maybe_x64(self.word_width == 64):
                 if self.word_width == 32:
                     ret, ctx_out, maps_out = self._jfn(
@@ -414,8 +480,22 @@ class DeviceBridge:
                     self._dev = dict(maps_out)
                     ctx_buf[:] = np.asarray(ctx_out).astype("<u8").tobytes()
                     rv = int(ret)
+            if self._domain_offs is not None:
+                ao, po, co = self._domain_offs
+                a = int.from_bytes(ctx_buf[ao:ao + 8], "little")
+                p = int.from_bytes(ctx_buf[po:po + 8], "little")
+                c = int.from_bytes(ctx_buf[co:co + 8], "little")
+                if (a or p or c) and (a >= Algo.COUNT or p >= Proto.COUNT
+                                      or c > 0xFFFFFFFF):
+                    self._pending_domain_faults += 1
             if self.sync == "step":
-                self._writeback(self._written)
+                try:
+                    self._writeback(self._written)
+                except Exception:
+                    # contained: host sync is deferred — keep the maps
+                    # marked device-dirty so flush() retries later
+                    self.stats.download_failures += 1
+                    self._device_dirty |= self._written
             else:
                 self._device_dirty |= self._written
             return rv
@@ -428,10 +508,15 @@ class DeviceBridge:
         changed them, and writing their device copy back would silently
         revert host mutations made since the last upload."""
         with self._lock:
+            _faults.fire("bridge_flush", self.tier)
             names = [n for n in self._names
                      if n in self._dev and n in self._written]
             self._writeback(names)
             self.stats.flushes += 1
+            # drain the per-call out-of-domain observations so the host
+            # side sees kernel-tier fault events at T3 boundaries
+            self.stats.domain_faults += self._pending_domain_faults
+            self._pending_domain_faults = 0
             return len(names)
 
     def invalidate(self, name: Optional[str] = None) -> None:

@@ -51,6 +51,7 @@ import threading
 import time
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from . import faults as _faults
 from .context import CTX_TYPES, PolicyContextValues
 from .jit import compile_program
 from .maps import BpfMap, MapError, MapRegistry
@@ -109,6 +110,29 @@ class RuntimeStats:
     rejected: int = 0
     invocations: int = 0
     swap_ns_last: int = 0
+    # fault containment: contained runtime faults attributed to links,
+    # links tripped to quarantined, load-time tier compile/lowering
+    # failures (a subset of `rejected`), and contained T3 flush failures
+    link_faults: int = 0
+    quarantines: int = 0
+    compile_failures: int = 0
+    flush_failures: int = 0
+
+
+@dataclasses.dataclass
+class BreakerConfig:
+    """Per-link circuit breaker knobs.
+
+    A link records contained runtime faults (policy exceptions swallowed
+    by its chain, invalid decisions attributed by the dispatcher); when
+    ``threshold`` faults land within the last ``window`` runtime
+    invocations, the link trips to **quarantined**: it stays in its
+    chain's link tuple (introspection keeps working) but is skipped by
+    the fused closure, with an epoch/fingerprint bump so decision caches
+    stay coherent.  ``link.reset()`` rearms it."""
+    window: int = 64
+    threshold: int = 4
+    enabled: bool = True
 
 
 class LinkError(Exception):
@@ -125,7 +149,8 @@ class PolicyLink:
     """
 
     __slots__ = ("_runtime", "link_id", "section", "priority", "flags",
-                 "_loaded", "_attached")
+                 "_loaded", "_attached", "_quarantined", "faults",
+                 "_fault_marks", "last_fault")
 
     def __init__(self, runtime: "PolicyRuntime", link_id: int, section: str,
                  priority: int, flags: int, loaded: LoadedProgram):
@@ -136,11 +161,27 @@ class PolicyLink:
         self.flags = flags
         self._loaded = loaded
         self._attached = True
+        # circuit-breaker state: lifetime fault count, the invocation
+        # marks inside the sliding window, and the last fault's repr
+        self._quarantined = False
+        self.faults = 0
+        self._fault_marks: Deque[int] = collections.deque()
+        self.last_fault: Optional[str] = None
 
     # ---- introspection ---------------------------------------------------
     @property
     def is_attached(self) -> bool:
         return self._attached
+
+    @property
+    def is_quarantined(self) -> bool:
+        return self._quarantined
+
+    @property
+    def state(self) -> str:
+        if not self._attached:
+            return "detached"
+        return "quarantined" if self._quarantined else "attached"
 
     @property
     def loaded(self) -> LoadedProgram:
@@ -159,9 +200,13 @@ class PolicyLink:
         return self._loaded.fn
 
     def __repr__(self) -> str:
-        state = "attached" if self._attached else "detached"
         return (f"PolicyLink(#{self.link_id} {self.section}:{self.name} "
-                f"prio={self.priority} {state})")
+                f"prio={self.priority} {self.state})")
+
+    def reset(self) -> None:
+        """Clear the fault counters and — if quarantined — rejoin the
+        chain (epoch bump, so decision caches resync)."""
+        self._runtime._reset_link(self)
 
     # ---- lifecycle -------------------------------------------------------
     def detach(self) -> None:
@@ -172,8 +217,10 @@ class PolicyLink:
         """Verify-then-CAS ``program`` into this link's chain slot.
 
         The old program keeps running until the new one has verified and
-        JIT'd; a VerifierError propagates with the chain untouched (and no
-        epoch bump).  Priority and chain position are preserved."""
+        JIT'd; ANY load-time failure — VerifierError or a tier
+        compile/lowering error — propagates with the chain untouched
+        (and no epoch bump).  Priority and chain position are
+        preserved."""
         return self._runtime._replace_link(self, program)
 
 
@@ -227,7 +274,8 @@ class PolicyRuntime:
     def __init__(self, *, use_interpreter: bool = False,
                  tier: Optional[str] = None,
                  bridge_sync: str = "step",
-                 printk_log_max: int = 4096):
+                 printk_log_max: int = 4096,
+                 breaker: Optional[BreakerConfig] = None):
         if tier is None:
             tier = "interp" if use_interpreter else "jit"
         if tier not in self.TIERS:
@@ -246,6 +294,12 @@ class PolicyRuntime:
         self._next_link_id = 1
         self._load_lock = threading.Lock()
         self.stats = RuntimeStats()
+        self.breaker = breaker if breaker is not None else BreakerConfig()
+        # per-section one-slot cell recording which link decided last in
+        # a multi-link first-wins chain (fault attribution); depth-1
+        # chains don't write it — the single active link is the decider
+        self._deciders: Dict[str, List[Optional[PolicyLink]]] = {
+            s: [None] for s in CTX_TYPES}
         self.use_interpreter = tier == "interp"
         # bounded ring buffer — chatty policies on long-running jobs must
         # not leak memory through trace_printk (same leak class the
@@ -293,10 +347,11 @@ class PolicyRuntime:
 
         All programs are verified — and their map declarations shape-checked
         against the registry AND against each other — before anything is
-        mutated; any rejection (VerifierError or MapError) propagates with
-        every previous chain fully attached, the epoch untouched, and no
-        maps created.  On success all affected chains swap under ONE epoch
-        bump — multi-policy updates are atomic end-to-end.
+        mutated; any rejection (VerifierError, MapError, or a tier
+        compile/lowering failure in phase 2) propagates with every
+        previous chain fully attached, the epoch untouched, and no
+        chains swapped.  On success all affected chains swap under ONE
+        epoch bump — multi-policy updates are atomic end-to-end.
 
         ``priorities`` parallels ``programs`` (default: bundle order, i.e.
         earlier programs take precedence within their section)."""
@@ -330,8 +385,13 @@ class PolicyRuntime:
                         raise MapError(
                             f"map {d.name}: bundle programs declare it "
                             f"with different shapes")
-            # phase 2 — resolve + JIT, reusing the phase-1 verifier info
-            # (cannot reject: everything is already checked)
+            # phase 2 — resolve + JIT, reusing the phase-1 verifier info.
+            # Verification cannot reject here, but tier compile/lowering
+            # still can — and it happens before phase 3 touches any
+            # chain, so a mid-bundle compile failure leaves every
+            # previous chain attached and the epoch unbumped (maps
+            # created for earlier bundle members persist: map creation
+            # is idempotent and shape-checked in phase 1)
             links: List[PolicyLink] = []
             new_chains: Dict[str, List[PolicyLink]] = {}
             for p, prio, vinfo in zip(programs, priorities, vinfos):
@@ -386,12 +446,16 @@ class PolicyRuntime:
             self.stats.reloads += 1
             return lp
 
-    def try_reload(self, program: Program) -> Optional[VerifierError]:
-        """Reload; on rejection return the error instead of raising."""
+    def try_reload(self, program: Program) -> Optional[Exception]:
+        """Reload; on rejection return the error instead of raising.
+
+        Covers every load-time rejection class — verification AND tier
+        compile/lowering failures — so supervisory reload loops degrade
+        to "old policy keeps running" on any of them."""
         try:
             self.reload(program)
             return None
-        except VerifierError as e:
+        except Exception as e:
             return e
 
     def detach(self, section: str) -> None:
@@ -408,26 +472,123 @@ class PolicyRuntime:
             self._publish({section: []})
 
     def attached(self, section: str) -> Optional[LoadedProgram]:
-        """Highest-precedence program on ``section`` (None if chain empty)."""
-        links = self._chains[self._check_section(section)].links
-        return links[0]._loaded if links else None
+        """Highest-precedence ACTIVE program on ``section`` (None if the
+        chain is empty or fully quarantined)."""
+        for link in self._chains[self._check_section(section)].links:
+            if not link._quarantined:
+                return link._loaded
+        return None
 
     def is_attached(self, section: str) -> bool:
-        return bool(self._chains[self._check_section(section)].links)
+        """True iff the section has at least one ACTIVE (non-quarantined)
+        link — i.e. ``invoke()`` would run something."""
+        return self._chains[self._check_section(section)].fn is not None
+
+    # ---- fault containment -----------------------------------------------
+    def last_decider(self, section: str) -> Optional[PolicyLink]:
+        """The link whose decision a multi-link first-wins chain last
+        returned (None for depth-1 chains / all-deferred runs)."""
+        return self._deciders[self._check_section(section)][0]
+
+    def record_fault(self, link: Optional[PolicyLink], exc=None, *,
+                     section: Optional[str] = None) -> Optional[PolicyLink]:
+        """Count one contained runtime fault against ``link`` and trip its
+        breaker if the sliding window fills.
+
+        With ``link=None`` the fault is attributed to ``section``'s
+        highest-precedence active link (the dispatcher's depth-1 case —
+        the only link that could have produced the fault).  Returns the
+        link charged, or None when nothing is attached."""
+        if link is None and section is not None:
+            for cand in self._chains[self._check_section(section)].links:
+                if not cand._quarantined:
+                    link = cand
+                    break
+        if link is None:
+            return None
+        self.stats.link_faults += 1
+        link.faults += 1
+        if exc is not None:
+            link.last_fault = repr(exc)
+        br = self.breaker
+        if not br.enabled or link._quarantined or not link._attached:
+            return link
+        # fault clock = runtime invocations, so the window means "faults
+        # per recent chain executions", not wall time
+        now = self.stats.invocations
+        marks = link._fault_marks
+        marks.append(now)
+        while marks and now - marks[0] > br.window:
+            marks.popleft()
+        if len(marks) >= br.threshold:
+            self._quarantine(link)
+        return link
+
+    def _quarantine(self, link: PolicyLink) -> None:
+        with self._load_lock:
+            if link._quarantined or not link._attached:
+                return
+            link._quarantined = True
+            # T3 boundary: the link's bridge state reaches host maps
+            # before its program stops running in the chain
+            self._flush_bridge(link._loaded)
+            self.stats.quarantines += 1
+            self._publish({link.section: self._chain_links(link.section)})
+
+    def _reset_link(self, link: PolicyLink) -> None:
+        with self._load_lock:
+            link.faults = 0
+            link._fault_marks.clear()
+            link.last_fault = None
+            if not link._quarantined:
+                return
+            link._quarantined = False
+            if link._attached:
+                self._publish({link.section: self._chain_links(link.section)})
+
+    def health(self) -> Dict[str, object]:
+        """Operator introspection: per-link breaker state for every
+        section with links, plus runtime-wide fault totals."""
+        sections: Dict[str, list] = {}
+        total = 0
+        quarantined = 0
+        for s, ch in self._chains.items():
+            rows = []
+            for l in ch.links:
+                total += l.faults
+                quarantined += 1 if l._quarantined else 0
+                rows.append({"link_id": l.link_id, "name": l.name,
+                             "priority": l.priority, "state": l.state,
+                             "faults": l.faults,
+                             "last_fault": l.last_fault})
+            if rows:
+                sections[s] = rows
+        return {"epoch": self._epoch, "tier": self.tier,
+                "sections": sections, "faults": total,
+                "quarantined": quarantined,
+                "breaker": dataclasses.asdict(self.breaker),
+                "stats": dataclasses.asdict(self.stats)}
 
     # ---- mutation internals (call with _load_lock held) -------------------
-    @staticmethod
-    def _flush_bridge(lp: Optional[LoadedProgram]) -> None:
+    def _flush_bridge(self, lp: Optional[LoadedProgram]) -> None:
         """Write a device-resident bridge's map state back to the host
         maps before its program leaves a chain.  The T3 contract: at
         every attachment boundary (detach / replace / bundle reload) the
         host maps are the source of truth the successor program — on any
-        tier — starts from.  No-op for host-tier closures."""
+        tier — starts from.  No-op for host-tier closures.
+
+        A failing flush is contained (counted, not raised): an attachment
+        change must never abort on a sync fault — the bridge keeps its
+        device-dirty marks, so a later flush or healthy call retries the
+        writeback."""
         if lp is None:
             return
         flush = getattr(lp.fn, "flush", None)
         if callable(flush):
-            flush()
+            try:
+                flush()
+            except Exception:
+                self.stats.flush_failures += 1
 
     def _new_link(self, lp: LoadedProgram, priority: int,
                   flags: int) -> PolicyLink:
@@ -510,7 +671,11 @@ class PolicyRuntime:
     def _fingerprint(links: List[PolicyLink]) -> int:
         if not links:
             return 0
-        return hash(tuple((l.link_id, l.priority, l.name, id(l._loaded))
+        # the quarantine flag joins the identity: tripping/resetting a
+        # breaker changes what the fused chain executes, so decision
+        # caches keyed on (epoch, fingerprint) must never alias across it
+        return hash(tuple((l.link_id, l.priority, l.name, id(l._loaded),
+                           l._quarantined)
                           for l in links)) & 0x7FFFFFFFFFFFFFFF
 
     # ---- chain fusion ----------------------------------------------------
@@ -518,20 +683,29 @@ class PolicyRuntime:
               links: List[PolicyLink]) -> Optional[Callable]:
         """Pre-fuse the chain into one bare closure ``fn(buf) -> ret``.
 
+        Quarantined links stay in the link tuple but are excluded here.
         Depth-1 collapses to the program's JIT'd closure itself — zero
         wrapper frames, so the PR-1 fast path survives chain-aware
-        dispatch exactly.  Invocation counting lives in ``invoke()`` and
-        in the ``counted_fn`` wrapper handed out by ``invoke_fn()``."""
-        if not links:
+        dispatch exactly (its exceptions are contained one level up, by
+        the dispatcher's guarded decide).  Multi-link chains guard each
+        link: a link that throws is treated as having deferred — its
+        partial outputs are discarded, the fault is recorded against
+        exactly that link (breaker attribution), and the next link runs.
+        Invocation counting lives in ``invoke()`` and in the
+        ``counted_fn`` wrapper handed out by ``invoke_fn()``."""
+        active = [l for l in links if not l._quarantined]
+        if not active:
             return None
-        fns = [l._loaded.fn for l in links]
-        if len(fns) == 1:
-            return fns[0]
+        if len(active) == 1:
+            return active[0]._loaded.fn
+        pairs = [(l, l._loaded.fn) for l in active]
+        record = self.record_fault
         if section in _FIRST_WINS_SECTIONS:
             # "link deferred" means "link left every output zero", so the
             # outputs are zeroed at chain entry — a reused ctx with stale
             # outputs from a previous decision must not masquerade as the
             # first link's decision
+            decider = self._deciders[section]
             span = _output_span(section)
             if span is not None:
                 lo, hi = span
@@ -539,10 +713,19 @@ class PolicyRuntime:
 
                 def chain_first_wins(buf: bytearray) -> int:
                     buf[lo:hi] = zeros
+                    decider[0] = None
                     ret = 0
-                    for fn in fns:
-                        ret = fn(buf)
+                    for link, fn in pairs:
+                        try:
+                            ret = fn(buf)
+                        except Exception as e:
+                            # contained: a throwing link defers — discard
+                            # its partial outputs, run the next link
+                            record(link, e)
+                            buf[lo:hi] = zeros
+                            continue
                         if buf[lo:hi] != zeros:
+                            decider[0] = link
                             return ret      # first non-deferring decision
                     return ret              # every program deferred
                 return chain_first_wins
@@ -551,21 +734,34 @@ class PolicyRuntime:
             def chain_first_wins_sparse(buf: bytearray) -> int:
                 for off in offs:
                     buf[off:off + 8] = _ZERO8
+                decider[0] = None
                 ret = 0
-                for fn in fns:
-                    ret = fn(buf)
+                for link, fn in pairs:
+                    try:
+                        ret = fn(buf)
+                    except Exception as e:
+                        record(link, e)
+                        for off in offs:
+                            buf[off:off + 8] = _ZERO8
+                        continue
                     for off in offs:
                         if buf[off:off + 8] != _ZERO8:
+                            decider[0] = link
                             return ret
                 return ret
             return chain_first_wins_sparse
-        run_order = list(reversed(fns)) if section in _LAST_WRITER_SECTIONS \
-            else fns
+        run_order = list(reversed(pairs)) \
+            if section in _LAST_WRITER_SECTIONS else pairs
 
         def chain_all(buf: bytearray) -> int:
             ret = 0
-            for fn in run_order:
-                ret = fn(buf)
+            for link, fn in run_order:
+                try:
+                    ret = fn(buf)
+                except Exception as e:
+                    # invoke-all hooks: one faulty observer must not
+                    # starve the others (or the caller)
+                    record(link, e)
             return ret
         return chain_all
 
@@ -591,27 +787,41 @@ class PolicyRuntime:
                 raise
         t1 = time.perf_counter()
         resolved = self._resolve_maps(program)
-        if self.tier == "interp":
-            # fuel: the verifier's proven dynamic-step bound (plus slack
-            # for helper-internal work) as runtime defense-in-depth; the
-            # proven bound always wins — clamping below it would fault
-            # verified programs on the interpreter tier only
-            fuel = max(4 * vinfo.max_steps, 4096)
-            vm = VM(program.insns, resolved,
-                    printk=self._printk_log.append, fuel=fuel)
-            fn = vm.run
-        elif self.tier in ("jaxc", "pallas", "pallas32"):
-            # in-graph tiers behind the device-resident host bridge; the
-            # verifier's cfg/loop_bounds/region artifacts are reused,
-            # never recomputed
-            from .pallasc import compile_host
-            fn = compile_host(program, resolved, vinfo, tier=self.tier,
-                              sync=self.bridge_sync)
-        else:
-            # the verifier's region analysis feeds the specializing (v2)
-            # code generator — one static pass pays for both safety and speed
-            fn = compile_program(program, resolved,
-                                 printk=self._printk_log.append, info=vinfo)
+        try:
+            _faults.fire("compile", self.tier)
+            if self.tier == "interp":
+                # fuel: the verifier's proven dynamic-step bound (plus
+                # slack for helper-internal work) as runtime
+                # defense-in-depth; the proven bound always wins —
+                # clamping below it would fault verified programs on the
+                # interpreter tier only
+                fuel = max(4 * vinfo.max_steps, 4096)
+                vm = VM(program.insns, resolved,
+                        printk=self._printk_log.append, fuel=fuel)
+                fn = vm.run
+            elif self.tier in ("jaxc", "pallas", "pallas32"):
+                # in-graph tiers behind the device-resident host bridge;
+                # the verifier's cfg/loop_bounds/region artifacts are
+                # reused, never recomputed
+                from .pallasc import compile_host
+                fn = compile_host(program, resolved, vinfo, tier=self.tier,
+                                  sync=self.bridge_sync)
+            else:
+                # the verifier's region analysis feeds the specializing
+                # (v2) code generator — one static pass pays for both
+                # safety and speed
+                fn = compile_program(program, resolved,
+                                     printk=self._printk_log.append,
+                                     info=vinfo)
+        except Exception:
+            # ANY tier compile/lowering failure is a load-time rejection:
+            # every caller (attach / replace / load_bundle / reload)
+            # mutates chains only after _prepare returns, so the old
+            # chain keeps running and the epoch stays untouched — the
+            # same atomicity contract as a VerifierError
+            self.stats.rejected += 1
+            self.stats.compile_failures += 1
+            raise
         t2 = time.perf_counter()
         return LoadedProgram(program=program, fn=fn, epoch=self._epoch + 1,
                              verify_ms=(t1 - t0) * 1e3, jit_ms=(t2 - t1) * 1e3,

@@ -18,6 +18,7 @@ import dataclasses
 import struct
 from typing import Callable, Dict, List, Optional
 
+from . import faults as _faults
 from . import helpers as H
 from .context import PolicyContextValues
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
@@ -245,6 +246,7 @@ class VM:
         h = H.HELPERS.get(hid)
         if h is None:
             raise VMError(f"unknown helper id {hid}")
+        _faults.fire("helper", h.name)
 
         def stack_bytes(p: object, size: int) -> bytes:
             if not isinstance(p, Ptr) or p.kind != "stack":
@@ -293,6 +295,7 @@ class VM:
                 raise VMError("ema_update: r1 must be a map pointer")
             m = mp.mem
             key = stack_bytes(kp, m.key_size)
+            _faults.fire("map_rmw", m.name)
             w = max(1, int(weight) if not isinstance(weight, Ptr) else 1)
             # the read-modify-write must hold the map lock or a racing
             # update_u64/update loses its write between our read and store

@@ -1,5 +1,5 @@
 """Serving substrate: batched continuous-decode engine with KV caches."""
 
-from .engine import Request, ServeConfig, ServeEngine
+from .engine import EngineStallError, Request, ServeConfig, ServeEngine
 
-__all__ = ["Request", "ServeConfig", "ServeEngine"]
+__all__ = ["EngineStallError", "Request", "ServeConfig", "ServeEngine"]

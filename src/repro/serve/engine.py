@@ -51,6 +51,21 @@ class ServeConfig:
     eos_id: int = -1          # -1: only stop on max_new
 
 
+class EngineStallError(RuntimeError):
+    """``run_until_drained`` hit its step budget with work still in
+    flight.  Carries enough to debug the stall: the step count plus the
+    request ids still occupying slots and still queued."""
+
+    def __init__(self, steps: int, active_rids: List[int],
+                 queued_rids: List[int]):
+        self.steps = steps
+        self.active_rids = active_rids
+        self.queued_rids = queued_rids
+        super().__init__(
+            f"engine stalled after {steps} steps: "
+            f"active requests {active_rids}, queued {queued_rids}")
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ax: MeshAxes,
                  scfg: ServeConfig):
@@ -144,10 +159,21 @@ class ServeEngine:
                     self.slot_req[b] = None
                     self.slot_phase[b] = "free"
 
-    def run_until_drained(self, *, max_steps: int = 10_000) -> int:
+    def run_until_drained(self, *, max_steps: int = 10_000,
+                          on_stall: str = "raise") -> int:
+        """Tick until every request completes.  Hitting ``max_steps``
+        with requests still in flight is a stall, not a drain — it
+        raises :class:`EngineStallError` naming the stuck request ids
+        (pass ``on_stall="return"`` for the legacy silent behavior)."""
         while (self.queue or any(p != "free" for p in self.slot_phase)) \
                 and self.steps < max_steps:
             self.step()
+        if self.queue or any(p != "free" for p in self.slot_phase):
+            if on_stall == "raise":
+                raise EngineStallError(
+                    self.steps,
+                    [r.rid for r in self.slot_req if r is not None],
+                    [r.rid for r in self.queue])
         return self.steps
 
     @property

@@ -106,6 +106,27 @@ def main():
     d = disp.decisions[-1]
     assert d.channels == 1 and d.algo == Algo.RING, d
 
+    # ---- fault containment: an injected decide()-path fault must be
+    # invisible to the collective — BIT-identical to running with the
+    # policy detached (both degrade to the framework-default algorithm)
+    from repro.core import FaultInjector
+    from repro.collectives.dispatch import CollectiveDispatcher
+    base = CollectiveDispatcher(runtime=PolicyRuntime())   # detached
+    rt2 = PolicyRuntime()
+    rt2.load(ring_mid_v2.program)
+    disp2 = CollectiveDispatcher(runtime=rt2)
+    x = rng.randn(8, 2 << 20).astype(np.float32)
+    want = run_spmd(lambda v: base.all_reduce(v, "x"), x)
+    with FaultInjector(seed=3).plan("decide", prob=1.0):
+        got = run_spmd(lambda v: disp2.all_reduce(v, "x"), x)
+    ok = np.array_equal(np.asarray(got), np.asarray(want))
+    print(("OK " if ok else "FAIL ") + "fault_contained_bit_identical",
+          flush=True)
+    failures += not ok
+    d = disp2.decisions[-1]
+    assert not d.from_policy and d.algo == Algo.DEFAULT, d
+    assert disp2.fault_stats.policy_exceptions > 0
+
     print(f"DONE failures={failures}", flush=True)
     sys.exit(1 if failures else 0)
 

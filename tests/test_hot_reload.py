@@ -65,18 +65,29 @@ def test_zero_lost_calls_under_concurrent_reload():
         lost.append(local_lost)
         decisions.append(seen)
 
+    stop = threading.Event()
+
     def reloader():
-        for i in range(200):
+        # Alternate for the invokers' whole lifetime rather than a fixed
+        # count — a fixed count can finish before the invokers ramp up,
+        # so no invoker overlaps a live swap and the "both policies
+        # observed" check below races.  Always complete at least one
+        # full alternation so the swap is exercised even if the invokers
+        # finish first.
+        i = 0
+        while not stop.is_set() or i < 2:
             rt.reload(bad_channels.program if i % 2 == 0
                       else static_override.program)
+            i += 1
 
     threads = [threading.Thread(target=invoker) for _ in range(N_THREADS)]
     rthread = threading.Thread(target=reloader)
-    for t in threads:
-        t.start()
     rthread.start()
     for t in threads:
+        t.start()
+    for t in threads:
         t.join()
+    stop.set()
     rthread.join()
 
     assert sum(lost) == 0, f"lost {sum(lost)} calls"

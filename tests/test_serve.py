@@ -7,7 +7,8 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import init_params
 from repro.models.layers import MeshAxes
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import (EngineStallError, Request, ServeConfig,
+                         ServeEngine)
 
 AX = MeshAxes(tp=1, dp=1, fsdp=False)
 
@@ -59,6 +60,27 @@ def test_slot_isolation(engine_setup):
     eng2.submit([2, 3, 2, 3, 2], max_new=8)
     eng2.run_until_drained()
     assert alone.out == together.out
+
+
+def test_stall_raises_with_active_request_ids(engine_setup):
+    """Hitting max_steps with work in flight is a stall, not a drain —
+    it must surface the stuck request ids instead of silently returning."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, AX,
+                      ServeConfig(batch_slots=1, max_ctx=64))
+    r1 = eng.submit([1, 2, 3], max_new=8)
+    r2 = eng.submit([4, 5], max_new=8)
+    with pytest.raises(EngineStallError) as ei:
+        eng.run_until_drained(max_steps=3)
+    assert ei.value.steps == 3
+    assert r1.rid in ei.value.active_rids
+    assert r2.rid in ei.value.queued_rids
+    assert str(r1.rid) in str(ei.value)
+    # legacy silent behavior stays available, and the engine is usable
+    # after a stall: draining to completion still works
+    assert eng.run_until_drained(max_steps=4, on_stall="return") == 4
+    eng.run_until_drained()
+    assert r1.done and r2.done
 
 
 def test_decode_matches_full_forward(engine_setup):
