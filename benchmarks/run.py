@@ -7,8 +7,11 @@ Usage:
 
 ``--ci`` is the single entry the builder runs as the merge gate: the
 perf-smoke suite (JIT >= interpreter, cache >= uncached, pallas-tier
-differential rows incl. the zero-warm-upload bridge assertion, and the
-guarded-decide overhead bound), the ``table1_pallas`` five-tier
+differential rows incl. the zero-warm-upload bridge assertion, the
+guarded-decide overhead bound, and the always-on-profiler dispatch-step
+overhead bound), the observability exporter schema check (non-empty
+histogram + straggler records in a valid JSON-lines batch), the
+``table1_pallas`` five-tier
 differential (interp == v1 == v2 == jaxc == pallas, zero retraces), the
 ``table1_pallas32`` SIX-tier differential (+ the Mosaic-ready
 32-bit-pair lowering, whose leg runs without ``enable_x64``), the
@@ -90,6 +93,19 @@ def run_ci() -> int:
         if r.returncode != 0:
             print(f"CI: {suite} FAILED", flush=True)
             failures += 1
+
+    print("=== ci: observability export schema ===", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.perf_smoke import export_schema_section;"
+         "rec = export_schema_section();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: observability export schema FAILED", flush=True)
+        failures += 1
 
     print("=== ci: runtime fault containment ===", flush=True)
     r = subprocess.run(

@@ -85,6 +85,7 @@ import dataclasses
 import functools
 import hashlib
 import math
+import struct
 import threading
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -93,7 +94,9 @@ from jax import lax
 
 from ..compat import axis_size
 from ..core import faults as _faults
-from ..core.context import Algo, AxisKind, CollType, Proto, make_ctx
+from ..core.context import (Algo, AxisKind, CollType, PROFILER_CONTEXT,
+                            Proto, make_ctx)
+from ..core.maps import RingView
 from ..core.runtime import PolicyRuntime, global_runtime
 from . import algorithms as alg
 from .cost_model import CostModel, HwProfile, TPU_V5E
@@ -116,6 +119,25 @@ class Decision:
 
     def key(self) -> Tuple:
         return (self.coll, self.algo, self.proto, self.channels)
+
+
+# decision-log record codec: 9 u64 slots, one Decision per ringbuf record
+_DECISION_STRUCT = struct.Struct("<9Q")
+
+
+def _encode_decision(d: "Decision") -> bytes:
+    return _DECISION_STRUCT.pack(
+        d.coll, d.algo, d.proto, d.channels, d.size_bytes, d.n_ranks,
+        d.axis_kind, d.comm_id, 1 if d.from_policy else 0)
+
+
+def _decode_decision(raw: bytes) -> "Decision":
+    (coll, algo, proto, channels, size_bytes, n_ranks, axis_kind,
+     comm_id, from_policy) = _DECISION_STRUCT.unpack(raw)
+    return Decision(coll=coll, algo=algo, proto=proto, channels=channels,
+                    size_bytes=size_bytes, n_ranks=n_ranks,
+                    axis_kind=axis_kind, comm_id=comm_id,
+                    from_policy=bool(from_policy))
 
 
 @dataclasses.dataclass
@@ -206,12 +228,16 @@ class CollectiveDispatcher:
         self.runtime = runtime or global_runtime()
         self.config = config or DispatchConfig()
         self.cost_model = CostModel(self.config.hw)
-        # bounded ring buffer; append/clear/indexing are GIL-atomic, so
-        # no lock is needed around the log.  maxlen=0 discards
-        # everything, None keeps an unbounded log
+        # bounded decision log on the observability plane's ringbuf
+        # (overwrite mode: a full ring evicts the OLDEST decision, and
+        # the eviction is counted in ``decisions.drops``).  RingView
+        # keeps the deque surface the call sites grew up with —
+        # append / len / [-1] / clear / maxlen — over 72-byte encoded
+        # records, so the log's memory bound is exact, not amortized
         log_max = self.config.decision_log_max
-        self.decisions: Deque[Decision] = collections.deque(
-            maxlen=None if log_max is None else max(log_max, 0))
+        self.decisions = RingView(log_max, _DECISION_STRUCT.size,
+                                  _encode_decision, _decode_decision,
+                                  name="decision_log")
         self.net_calls = 0
         self.net_bytes = 0
         # Epoch-keyed decision memo, published as one immutable
@@ -539,14 +565,23 @@ class CollectiveDispatcher:
         self._fault_marks.clear()
 
     def health(self) -> Dict[str, object]:
-        """Runtime health (per-link breaker state, see
+        """One structured health dict for the whole decision plane: the
+        runtime view (per-link breaker state, aggregated device-bridge
+        counters, observability-plane loss accounting — see
         :meth:`PolicyRuntime.health`) merged with the dispatcher-level
-        view: safe-mode latch and fault accounting."""
+        view: safe-mode latch, fault accounting, and the decision log's
+        ring counters."""
         h = self.runtime.health()
         h["dispatcher"] = {
             "safe_mode": self._safe_mode,
             "fault_stats": dataclasses.asdict(self.fault_stats),
             "fault_total": self.fault_stats.total,
+            "decision_log": {"stored": len(self.decisions),
+                             "capacity": self.decisions.maxlen,
+                             "drops": self.decisions.drops},
+            "cache": {"hits": self.cache_hits,
+                      "misses": self.cache_misses,
+                      "entries": self.decision_cache_len},
         }
         return h
 
@@ -636,18 +671,27 @@ class CollectiveDispatcher:
                               **kw)
 
     # ------------------------------------------------------------------
+    # profiler ctx fast path: every profiler field is a read-only u64 in
+    # declaration order, so the always-on feed packs them straight into
+    # a fresh buffer — no PolicyContextValues construction per event
+    # (that wrapper costs more than running both profiler policies)
+    _PROF_PACK = struct.Struct("<8Q")
+    _M64 = 0xFFFFFFFFFFFFFFFF
+
     def profiler_feed(self, comm_id: int, latency_ns: int, *, coll: int = 0,
                       msg_size: int = 0, channels: int = 0, algo: int = 0,
                       ts_ns: int = 0) -> None:
         """Deliver a latency observation to the attached profiler chain."""
-        if not self.runtime.is_attached("profiler"):
+        fn = self.runtime.invoke_fn("profiler")
+        if fn is None:
             return
-        pctx = make_ctx("profiler", event_type=1, coll_type=coll,
-                        msg_size=msg_size, comm_id=comm_id,
-                        latency_ns=latency_ns, n_channels=channels,
-                        algorithm=algo, timestamp_ns=ts_ns)
+        M = self._M64
+        buf = bytearray(PROFILER_CONTEXT.size)
+        self._PROF_PACK.pack_into(
+            buf, 0, 1, coll & M, msg_size & M, comm_id & M,
+            latency_ns & M, channels & M, algo & M, ts_ns & M)
         try:
-            self.runtime.invoke("profiler", pctx)
+            fn(buf)
         except Exception as exc:
             if not self.config.enable_runtime_guards:
                 raise

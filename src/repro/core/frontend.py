@@ -20,6 +20,8 @@ Supported subset (anything else -> CompileError):
   ``st = m.lookup(key)``; ``if st is None: ...``; ``st[i] = expr``;
   ``m.update(key, (v0, v1, ...))``; ``m.delete(key)``;
   ``ema_update(m, key, sample, weight)``
+* ringbuf ops: ``e = rb.reserve()`` (NULL-checked like lookup);
+  ``rb.submit()``; ``rb.discard()``
 * helpers: ``ktime_get_ns()``, ``prandom_u32()``
 
 Semantics note: all arithmetic/comparison is **unsigned 64-bit** (eBPF
@@ -52,7 +54,7 @@ def map_decl(name: str, *, kind: str = "array", key_size: int = 4,
     """Declare a map.  ``shared=True`` pins it into the registry's
     cross-plugin namespace at load time, so other programs (and host-side
     tooling) can reach the same state by name."""
-    if kind != "hash":
+    if kind not in ("hash", "lru_hash"):
         key_size = 4
     return MapDecl(name, kind, key_size, value_size, max_entries, shared)
 
@@ -541,6 +543,23 @@ class _Compiler(ast.NodeVisitor):
         self.scalars.pop(iname, None)
 
     def _compile_assign(self, tgt: ast.AST, value: ast.AST) -> None:
+        # pointer-producing RHS: rb.reserve()
+        if isinstance(value, ast.Call) and isinstance(value.func, ast.Attribute) \
+                and value.func.attr == "reserve":
+            decl = self._map_of(value.func.value)
+            if not isinstance(tgt, ast.Name):
+                raise CompileError("reserve result must bind a simple name")
+            if value.args:
+                raise CompileError("reserve() takes no arguments")
+            self.emit("ldmap", dst=1, map_name=decl.name)
+            self.emit("call", imm=HELPER_IDS["ringbuf_reserve"])
+            name = tgt.id
+            if name not in self.ptrs:
+                if not self.ptr_regs:
+                    raise CompileError("too many live map-value pointers (max 3)")
+                self.ptrs[name] = self.ptr_regs.pop()
+            self.emit("mov64", dst=self.ptrs[name], src=0)
+            return
         # pointer-producing RHS: m.lookup(key)
         if isinstance(value, ast.Call) and isinstance(value.func, ast.Attribute) \
                 and value.func.attr == "lookup":
@@ -624,8 +643,16 @@ class _Compiler(ast.NodeVisitor):
                 self.emit("add64i", dst=2, imm=key_off - STACK_SIZE)
                 self.emit("call", imm=HELPER_IDS["map_delete_elem"])
                 return
+            if meth in ("submit", "discard"):
+                if node.args:
+                    raise CompileError(f"{meth}() takes no arguments")
+                self.emit("ldmap", dst=1, map_name=decl.name)
+                self.emit("call", imm=HELPER_IDS[f"ringbuf_{meth}"])
+                return
             if meth == "lookup":
                 raise CompileError("bind lookup results: `st = m.lookup(k)`")
+            if meth == "reserve":
+                raise CompileError("bind reserve results: `e = rb.reserve()`")
             raise CompileError(f"unknown map method {meth!r}")
         if isinstance(node.func, ast.Name) and node.func.id == "ema_update":
             m_node, key_node, sample_node, w_node = node.args

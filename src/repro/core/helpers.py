@@ -44,6 +44,16 @@ HELPERS = {
     # new = (old*(w-1) + sample)/w, atomic on an 8-byte map slot.  Exists so
     # adaptive policies don't burn their insn budget on fixed-point math.
     64: Helper(64, "ema_update", (ARG_MAP_PTR, ARG_STACK_KEY, ARG_SCALAR, ARG_SCALAR), RET_SCALAR),
+    # observability plane: the ringbuf reserve/submit surface.  Reserve
+    # returns a pointer to one record slot (NULL when the ring is full —
+    # the drop is counted map-side); submit publishes the pending
+    # record, discard abandons it.  All three take only the map pointer,
+    # so the existing call checker's map binding + null-tracked return
+    # machinery covers them; the map KIND contract (ringbuf-only) is
+    # enforced by the verifier's kind table below.
+    65: Helper(65, "ringbuf_reserve", (ARG_MAP_PTR,), RET_MAP_VALUE_OR_NULL),
+    66: Helper(66, "ringbuf_submit", (ARG_MAP_PTR,), RET_SCALAR),
+    67: Helper(67, "ringbuf_discard", (ARG_MAP_PTR,), RET_SCALAR),
 }
 
 HELPER_IDS = {h.name: h.hid for h in HELPERS.values()}
@@ -51,10 +61,25 @@ HELPER_IDS = {h.name: h.hid for h in HELPERS.values()}
 # Per-section whitelists (the "illegal helper" bug class rejects e.g. a
 # profiler-only helper used from a tuner program).
 WHITELISTS = {
-    "tuner": {1, 2, 3, 5, 7, 64},
-    "profiler": {1, 2, 3, 5, 6, 7, 64},
+    "tuner": {1, 2, 3, 5, 7, 64, 65, 66, 67},
+    "profiler": {1, 2, 3, 5, 6, 7, 64, 65, 66, 67},
     "net": {1, 2, 5, 7},
     "env": {1, 2, 5},
+}
+
+# Helper x map-kind contract: which kinds each map-taking helper may be
+# called with.  The keyed surface (lookup/update/delete/ema) never runs
+# on a ringbuf; the reserve/submit surface runs ONLY on one.
+_KEYED_KINDS = frozenset(
+    {"array", "hash", "percpu_array", "perdev_array", "lru_hash"})
+HELPER_MAP_KINDS = {
+    1: _KEYED_KINDS,
+    2: _KEYED_KINDS,
+    3: _KEYED_KINDS,
+    64: _KEYED_KINDS,
+    65: frozenset({"ringbuf"}),
+    66: frozenset({"ringbuf"}),
+    67: frozenset({"ringbuf"}),
 }
 
 

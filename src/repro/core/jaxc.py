@@ -23,9 +23,14 @@ Why verification makes this possible:
 
 Supported surface (JaxcError otherwise): ALU64/32, jumps, bounded loops,
 ctx loads/stores (8-byte fields), stack loads/stores (static or dynamic
-offset), ARRAY maps (u64-slot granularity), helpers map_lookup_elem /
-map_update_elem / ema_update.  Hash maps and wall-clock helpers are
-host-tier-only.
+offset), ARRAY-family maps (u64-slot granularity; ``perdev_array``
+exposes its current shard), RINGBUF maps (reserve/submit/discard on the
+control words appended to the device array — see
+:func:`repro.core.maps.device_shape`), LRU_HASH maps (masked-scan
+lookup/update over ``[value, key, recency]`` rows plus a clock cell),
+helpers map_lookup_elem / map_update_elem / ema_update (array only) /
+ringbuf_reserve / ringbuf_submit / ringbuf_discard.  Plain hash maps and
+wall-clock helpers are host-tier-only.
 
 We pass ctx and maps as uint64 arrays under the scoped 64-bit context
 (``repro.compat.enable_x64``); the surrounding model code stays 32-bit.
@@ -47,7 +52,7 @@ from .cfg import CFG, Loop
 from .isa import (FP_REG, Insn, STACK_SIZE, alu_base, alu_width, is_alu,
                   is_imm_form, is_jump_cond, is_load, is_store, jump_base,
                   mem_size)
-from .maps import ArrayMap, BpfMap
+from .maps import BpfMap
 from .program import Program
 from .verifier import verify_with_info
 
@@ -70,16 +75,21 @@ def _map_tag(mi: int):
     return (16 + mi) << 56
 
 
+_INGRAPH_KINDS = ("array", "perdev_array", "ringbuf", "lru_hash")
+_INGRAPH_HIDS = (1, 2, 64, 65, 66, 67)
+
+
 def check_supported(prog: Program) -> None:
     for d in prog.maps:
-        if d.kind != "array":
+        if d.kind not in _INGRAPH_KINDS:
             raise JaxcError(
-                f"map '{d.name}' is {d.kind}; in-graph tier supports array "
-                "maps only (hash maps live on the host tier)")
+                f"map '{d.name}' is {d.kind}; in-graph tier supports "
+                f"{'/'.join(_INGRAPH_KINDS)} maps only (hash maps live on "
+                "the host tier)")
         if d.value_size % 8:
             raise JaxcError(f"map '{d.name}': value_size must be 8-aligned")
     for pc, insn in enumerate(prog.insns):
-        if insn.op == "call" and insn.imm not in (1, 2, 64):
+        if insn.op == "call" and insn.imm not in _INGRAPH_HIDS:
             raise JaxcError(
                 f"helper {H.HELPERS[insn.imm].name} (insn {pc}) is not "
                 "available in-graph")
@@ -89,18 +99,25 @@ def written_map_names(prog: Program, vinfo) -> frozenset:
     """Maps the program can mutate, from the verifier's region facts.
 
     A map is written iff some store's proven region is a value cell of it,
-    or a mutating helper (``map_update_elem`` / ``ema_update``) statically
-    binds to it.  The host bridge uses this to sync back ONLY these maps
+    or a mutating helper (``map_update_elem`` / ``ema_update`` / any
+    ringbuf helper — the control words advance) statically binds to it,
+    or a ``map_lookup_elem`` binds to an LRU map (a hit refreshes
+    recency).  The host bridge uses this to sync back ONLY these maps
     after a device call — lookup-only telemetry inputs never round-trip."""
+    kinds = {d.name: d.kind for d in prog.maps}
     out = set()
     for pc, insn in enumerate(prog.insns):
         if is_store(insn.op):
             info = vinfo.mem_info.get(pc)
             if info is not None and info[0] not in ("ctx", "stack"):
                 out.add(info[1])
-        elif insn.op == "call" and insn.imm in (2, 64):
+        elif insn.op == "call" and insn.imm in (2, 64, 65, 66, 67):
             mname = vinfo.call_map.get(pc)
             if mname is not None:
+                out.add(mname)
+        elif insn.op == "call" and insn.imm == 1:
+            mname = vinfo.call_map.get(pc)
+            if mname is not None and kinds.get(mname) == "lru_hash":
                 out.add(mname)
     return frozenset(out)
 
@@ -357,6 +374,10 @@ class _Lowerer:
             raise JaxcError(f"helper at insn {pc} has no static map binding")
         mi = self.map_index[mname]
         d = self.decls[mi]
+        if d.kind == "ringbuf":
+            return self._call_ringbuf(hid, mi, d, P)
+        if d.kind == "lru_hash":
+            return self._call_lru(hid, mi, d, P)
         key = self._stack_load(self.regs[2], d.key_size).astype(jnp.uint64)
         valid = key < jnp.uint64(d.max_entries)
         ki = jnp.minimum(key, jnp.uint64(d.max_entries - 1)).astype(jnp.int32)
@@ -383,6 +404,99 @@ class _Lowerer:
                 jnp.where(take, new, old))
             return new
         raise JaxcError(f"helper {hid} not supported in-graph")
+
+    def _call_ringbuf(self, hid: int, mi: int, d, P):
+        """reserve/submit/discard on the control words the device layout
+        appends to the record rows (``maps.device_shape``): head / tail /
+        drops / pending, mirroring :class:`repro.core.maps.RingBufMap`
+        cursor-for-cursor so vm differentials stay bit-identical."""
+        arr = self.maps[d.name]
+        slots = d.value_size // 8
+        ctl = lambda w: (d.max_entries + w // slots, w % slots)  # noqa: E731
+        (hr, hc), (pr, pc2) = ctl(0), ctl(3)
+        head, pend = arr[hr, hc], arr[pr, pc2]
+        if hid == 66:  # ringbuf_submit: publish the pending record
+            head2 = head + pend
+            arr = arr.at[hr, hc].set(jnp.where(P, head2, head))
+            arr = arr.at[pr, pc2].set(jnp.where(P, jnp.uint64(0), pend))
+            self.maps[d.name] = arr
+            return jnp.uint64(0)
+        if hid == 67:  # ringbuf_discard: abandon the pending record
+            arr = arr.at[pr, pc2].set(jnp.where(P, jnp.uint64(0), pend))
+            self.maps[d.name] = arr
+            return jnp.uint64(0)
+        if hid != 65:
+            raise JaxcError(f"helper {hid} on ringbuf map '{d.name}'")
+        # ringbuf_reserve: implicitly commit a still-pending reservation,
+        # then NULL (+1 drop) on full, else mark the next row pending
+        (tr, tc), (dr, dc) = ctl(1), ctl(2)
+        tail, drops = arr[tr, tc], arr[dr, dc]
+        head1 = head + pend
+        full = (head1 - tail) >= jnp.uint64(d.max_entries)
+        arr = arr.at[hr, hc].set(jnp.where(P, head1, head))
+        arr = arr.at[pr, pc2].set(jnp.where(
+            P, jnp.where(full, jnp.uint64(0), jnp.uint64(1)), pend))
+        arr = arr.at[dr, dc].set(jnp.where(
+            jnp.logical_and(P, full), drops + jnp.uint64(1), drops))
+        self.maps[d.name] = arr
+        row = (head1 % jnp.uint64(d.max_entries)) & jnp.uint64(0xFFFFFFFF)
+        enc = jnp.uint64(_map_tag(mi)) | (row << jnp.uint64(24))
+        return jnp.where(full, jnp.uint64(0), enc)
+
+    def _call_lru(self, hid: int, mi: int, d, P):
+        """lookup/update on the LRU device layout: ``max_entries`` rows of
+        ``[value slots..., key, recency]`` plus the clock cell at
+        ``[max_entries, 0]`` (``maps.device_shape``).  Victim selection is
+        ``argmin(recency)`` — first minimum, so free rows (recency 0) win
+        and ties break to the lowest index, matching the host map."""
+        arr = self.maps[d.name]
+        slots = d.value_size // 8
+        kcol, rcol = slots, slots + 1
+        key = self._stack_load(self.regs[2], d.key_size).astype(jnp.uint64)
+        keys = arr[:d.max_entries, kcol]
+        recs = arr[:d.max_entries, rcol]
+        match = jnp.logical_and(recs > jnp.uint64(0), keys == key)
+        found = jnp.any(match)
+        idx = jnp.argmax(match).astype(jnp.int32)
+        clock = arr[d.max_entries, 0]
+        clock1 = clock + jnp.uint64(1)
+        if hid == 1:  # map_lookup_elem: a hit refreshes recency
+            take = jnp.logical_and(P, found)
+            arr = arr.at[d.max_entries, 0].set(
+                jnp.where(take, clock1, clock))
+            arr = arr.at[idx, rcol].set(
+                jnp.where(take, clock1, arr[idx, rcol]))
+            self.maps[d.name] = arr
+            enc = (jnp.uint64(_map_tag(mi))
+                   | (idx.astype(jnp.uint64) << jnp.uint64(24)))
+            return jnp.where(found, enc, jnp.uint64(0))
+        # the remaining helpers claim a row: the hit, else the LRU victim
+        victim = jnp.argmin(recs).astype(jnp.int32)
+        tgt = jnp.where(found, idx, victim)
+        oldrow = lax.dynamic_slice(
+            arr, (tgt, jnp.int32(0)), (1, arr.shape[1]))[0]
+        if hid == 2:  # map_update_elem: overwrite hit else evict victim
+            newrow = jnp.stack(
+                [self._stack_load(self.regs[3] + jnp.uint64(8 * s), 8)
+                 for s in range(slots)])
+            ret = jnp.uint64(0)
+        elif hid == 64:  # ema_update: RMW slot 0 (miss seeds from old=0)
+            w = jnp.maximum(self.regs[4], jnp.uint64(1))
+            old = jnp.where(found, oldrow[0], jnp.uint64(0))
+            new = (old * (w - jnp.uint64(1)) + self.regs[3]) // w
+            keep = jnp.where(found, oldrow[:slots],
+                             jnp.zeros(slots, jnp.uint64))
+            newrow = keep.at[0].set(new)
+            ret = new
+        else:
+            raise JaxcError(f"helper {hid} on lru_hash map '{d.name}'")
+        full_new = jnp.concatenate([newrow, jnp.stack([key, clock1])])
+        sel = jnp.where(P, full_new, oldrow)
+        arr = lax.dynamic_update_slice(
+            arr, sel[None, :], (tgt, jnp.int32(0)))
+        arr = arr.at[d.max_entries, 0].set(jnp.where(P, clock1, clock))
+        self.maps[d.name] = arr
+        return ret
 
     # ---- loops -------------------------------------------------------------
     def _snapshot(self, active, exit_preds):
@@ -529,15 +643,17 @@ def _cmp_jax(base: str, a, b):
 # ---------------------------------------------------------------------------
 
 def map_to_array(m: BpfMap) -> jnp.ndarray:
-    """ArrayMap -> uint64[max_entries, slots] (for donating into the step)."""
-    if not isinstance(m, ArrayMap):
-        raise JaxcError(f"map {m.name} is not an array map")
-    import numpy as np
-    slots = m.value_size // 8
-    out = np.zeros((m.max_entries, slots), dtype=np.uint64)
-    for i in range(m.max_entries):
-        buf = m.lookup(i.to_bytes(4, "little"))
-        out[i] = np.frombuffer(bytes(buf), dtype="<u8")
+    """Host map -> uint64[rows, cols] device image.
+
+    Delegates to the map's own ``to_device`` protocol (``maps.py``):
+    array-family maps export their slots, ringbufs append control words,
+    LRU maps append key/recency columns and the clock row.  Raises for
+    kinds with no device representation (plain hash)."""
+    from .maps import MapError
+    try:
+        out = m.to_device()
+    except MapError as e:
+        raise JaxcError(str(e)) from None
     with enable_x64(True):
         return jnp.asarray(out)
 
@@ -545,9 +661,7 @@ def map_to_array(m: BpfMap) -> jnp.ndarray:
 def array_to_map(arr, m: BpfMap) -> None:
     """Write device map state back into the host map (after a step)."""
     import numpy as np
-    host = np.asarray(arr, dtype=np.uint64)
-    for i in range(m.max_entries):
-        m.update(i.to_bytes(4, "little"), host[i].tobytes())
+    m.from_device(np.asarray(arr, dtype=np.uint64))
 
 
 def ctx_to_vec(ctx_buf: bytearray) -> jnp.ndarray:

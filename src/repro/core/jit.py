@@ -87,6 +87,13 @@ _STACK_ESCAPE_HIDS = frozenset(
     hid for hid, h in H.HELPERS.items()
     if any(a in (H.ARG_STACK_KEY, H.ARG_STACK_VALUE) for a in h.args))
 
+# helper ids that append a map-value region to ``mems`` without taking a
+# stack buffer (ringbuf_reserve): they force the buffered (mems) path in
+# v2 even though no stack pointer escapes
+_MEMS_ESCAPE_HIDS = frozenset(
+    hid for hid, h in H.HELPERS.items()
+    if h.ret == H.RET_MAP_VALUE_OR_NULL and hid not in _STACK_ESCAPE_HIDS)
+
 
 def _sval(expr: str) -> str:
     return f"_s64({expr})"
@@ -307,11 +314,48 @@ def _mk_ema(m: BpfMap):
     return f
 
 
+def _mk_ringbuf_reserve(m: BpfMap):
+    reserve = m.reserve_ref
+    fire = _faults.fire
+
+    def f(mems):
+        fire("helper", "ringbuf_reserve")
+        v = reserve()
+        if v is None:
+            return 0
+        mems.append(v)
+        return (len(mems) - 1) << 32
+    return f
+
+
+def _mk_ringbuf_submit(m: BpfMap):
+    submit = m.submit
+    fire = _faults.fire
+
+    def f():
+        fire("helper", "ringbuf_submit")
+        return submit() & M64
+    return f
+
+
+def _mk_ringbuf_discard(m: BpfMap):
+    discard = m.discard
+    fire = _faults.fire
+
+    def f():
+        fire("helper", "ringbuf_discard")
+        return discard() & M64
+    return f
+
+
 _SPECIALIZERS = {
     "map_lookup_elem": (_mk_lookup, "(mems, r2)"),
     "map_update_elem": (_mk_update, "(mems, r2, r3)"),
     "map_delete_elem": (_mk_delete, "(mems, r2)"),
     "ema_update": (_mk_ema, "(mems, r2, r3, r4)"),
+    "ringbuf_reserve": (_mk_ringbuf_reserve, "(mems)"),
+    "ringbuf_submit": (_mk_ringbuf_submit, "()"),
+    "ringbuf_discard": (_mk_ringbuf_discard, "()"),
 }
 
 
@@ -347,8 +391,12 @@ class _GenV2(_Gen):
         stack_promotable = True
         for pc, insn in enumerate(insns):
             if insn.op == "call":
-                if insn.imm in _STACK_ESCAPE_HIDS \
+                if insn.imm in (_STACK_ESCAPE_HIDS | _MEMS_ESCAPE_HIDS) \
                         and pc in self.vinfo.call_map:
+                    # mems-escaping helpers (ringbuf_reserve) have no stack
+                    # args but append regions to mems; routing them through
+                    # stack_escape keeps the "needs_mems implies
+                    # needs_stack" pooling invariant below
                     self.stack_escape = True
                 continue
             if not (is_load(insn.op) or is_store(insn.op)):
@@ -964,6 +1012,26 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
                 m.touch()   # version-tracked for device-bridge caches
         return new
 
+    def _h_ringbuf_reserve(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "ringbuf_reserve")
+        m = map_by_handle[r1]
+        v = m.reserve_ref()
+        if v is None:
+            return 0
+        mems.append(v)
+        owners = getattr(mems, "owners", None)
+        if owners is not None:
+            owners.append(m)
+        return (len(mems) - 1) << 32
+
+    def _h_ringbuf_submit(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "ringbuf_submit")
+        return map_by_handle[r1].submit() & M64
+
+    def _h_ringbuf_discard(mems, r1, r2, r3, r4, r5) -> int:
+        fire("helper", "ringbuf_discard")
+        return map_by_handle[r1].discard() & M64
+
     def _dead():
         raise AssertionError(
             "verifier-proven unreachable code executed")  # pragma: no cover
@@ -987,6 +1055,9 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
         "_h_get_prandom_u32": _h_get_prandom_u32,
         "_h_trace_printk": _h_trace_printk,
         "_h_ema_update": _h_ema_update,
+        "_h_ringbuf_reserve": _h_ringbuf_reserve,
+        "_h_ringbuf_submit": _h_ringbuf_submit,
+        "_h_ringbuf_discard": _h_ringbuf_discard,
     }
 
 

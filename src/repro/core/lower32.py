@@ -385,6 +385,8 @@ class _Lowerer32(_Lowerer):
             raise JaxcError(f"helper at insn {pc} has no static map binding")
         mi = self.map_index[mname]
         d = self.decls[mi]
+        if d.kind == "ringbuf":
+            return self._call_ringbuf32(hid, mi, d, P)
         key = self._stack_load(self.regs[2], d.key_size)   # hi lane is 0
         valid = key[0] < jnp.uint32(d.max_entries)
         ki = jnp.minimum(key[0], jnp.uint32(d.max_entries - 1)).astype(
@@ -419,6 +421,49 @@ class _Lowerer32(_Lowerer):
             return new
         raise JaxcError(f"helper {hid} not supported in-graph")
 
+    def _call_ringbuf32(self, hid: int, mi: int, d, P) -> Pair:
+        """reserve/submit/discard over the device layout's control words,
+        with the free-running u64 cursors held as (lo, hi) pairs — the
+        carry chains keep cursor arithmetic exact past 2**32 events."""
+        arr = self.maps[d.name]
+        slots = d.value_size // 8
+        ctl = lambda w: (d.max_entries + w // slots, w % slots)  # noqa: E731
+        (hr, hc), (pr, pc2) = ctl(0), ctl(3)
+        head: Pair = (arr[hr, hc, 0], arr[hr, hc, 1])
+        pend: Pair = (arr[pr, pc2, 0], arr[pr, pc2, 1])
+
+        def put(r, c, pair: Pair) -> None:
+            self.maps[d.name] = self.maps[d.name].at[r, c].set(
+                jnp.stack([pair[0], pair[1]]))
+
+        if hid == 66:  # ringbuf_submit
+            head2 = pair_add(head, pend)
+            put(hr, hc, pair_select(P, head2, head))
+            put(pr, pc2, pair_select(P, pair_const(0), pend))
+            return pair_const(0)
+        if hid == 67:  # ringbuf_discard
+            put(pr, pc2, pair_select(P, pair_const(0), pend))
+            return pair_const(0)
+        if hid != 65:
+            raise JaxcError(f"helper {hid} on ringbuf map '{d.name}'")
+        # ringbuf_reserve: implicit commit, then NULL (+1 drop) on full
+        (tr, tc), (dr, dc) = ctl(1), ctl(2)
+        tail: Pair = (arr[tr, tc, 0], arr[tr, tc, 1])
+        drops: Pair = (arr[dr, dc, 0], arr[dr, dc, 1])
+        head1 = pair_add(head, pend)
+        full = pair_cmp("jge", pair_sub(head1, tail),
+                        pair_const(d.max_entries))
+        put(hr, hc, pair_select(P, head1, head))
+        put(pr, pc2, pair_select(
+            P, pair_select(full, pair_const(0), pair_const(1)), pend))
+        put(dr, dc, pair_select(jnp.logical_and(P, full),
+                                pair_add(drops, pair_const(1)), drops))
+        row = pair_divmod(head1, pair_const(d.max_entries))[1]
+        tag = pair_const(_map_tag(mi))
+        sh = pair_lsh(row, pair_const(24))
+        enc: Pair = (tag[0] | sh[0], tag[1] | sh[1])
+        return pair_select(full, pair_const(0), enc)
+
 
 def compile_jax32(prog: Program, vinfo=None):
     """Return (fn, map_names) in the pair calling convention.
@@ -432,6 +477,12 @@ def compile_jax32(prog: Program, vinfo=None):
     ``vinfo`` reuses a prior :func:`verify_with_info` result so the
     runtime's load path verifies exactly once across every tier."""
     check_supported(prog)
+    for d in prog.maps:
+        if d.kind == "lru_hash":
+            raise JaxcError(
+                f"map '{d.name}' is lru_hash; the 32-bit-pair tier does "
+                "not lower LRU maps (pair-compare scans over recency "
+                "dominate the kernel) — use the pallas/jaxc or host tiers")
     if vinfo is None:
         vinfo = verify_with_info(prog)
 
@@ -448,24 +499,23 @@ def compile_jax32(prog: Program, vinfo=None):
 # ---------------------------------------------------------------------------
 
 def map_to_array32(m: BpfMap) -> jnp.ndarray:
-    """ArrayMap -> uint32[max_entries, slots, 2]; a ``<u4`` view of the
-    little-endian u64 cells, so [..., 0] is lo and [..., 1] is hi."""
-    from .maps import ArrayMap
-    if not isinstance(m, ArrayMap):
-        raise JaxcError(f"map {m.name} is not an array map")
-    slots = m.value_size // 8
-    out = np.zeros((m.max_entries, slots, 2), np.uint32)
-    for i in range(m.max_entries):
-        buf = m.lookup(i.to_bytes(4, "little"))
-        out[i] = np.frombuffer(bytes(buf), dtype="<u4").reshape(slots, 2)
-    return jnp.asarray(out)
+    """Host map -> uint32[rows, cols, 2]; a ``<u4`` view of the map's
+    little-endian u64 device image (``to_device``), so [..., 0] is lo and
+    [..., 1] is hi.  Control/metadata rows ride along untranslated."""
+    from .maps import MapError
+    try:
+        a64 = m.to_device()
+    except MapError as e:
+        raise JaxcError(str(e)) from None
+    rows, cols = a64.shape
+    return jnp.asarray(
+        np.ascontiguousarray(a64).view("<u4").reshape(rows, cols, 2))
 
 
 def array32_to_map(arr, m: BpfMap) -> None:
     """Write pair-form device map state back into the host map."""
-    host = np.asarray(arr, dtype=np.uint32)
-    for i in range(m.max_entries):
-        m.update(i.to_bytes(4, "little"), host[i].astype("<u4").tobytes())
+    host = np.ascontiguousarray(np.asarray(arr, dtype=np.uint32))
+    m.from_device(host.view("<u8").reshape(host.shape[0], host.shape[1]))
 
 
 def ctx_to_vec32(ctx_buf: bytearray) -> jnp.ndarray:

@@ -9,6 +9,18 @@ Map kinds (mirroring the kernel):
   * HASH    — bounded-capacity hash map, fixed-size keys.
   * PERCPU_ARRAY — one array per "cpu" (here: per host thread slot), for
     contention-free counters aggregated on read.
+  * RINGBUF — bounded MPSC event stream (the observability plane's
+    spine): programs ``reserve``/``submit`` fixed-size records, host
+    consumers ``drain()`` them FIFO; a full ring drops the NEW record
+    and counts it (``drops``).  Cursors are free-running u64s, so the
+    same state machine lowers to the in-graph tiers with the control
+    words appended to the value array (see :func:`device_shape`).
+  * PERDEV_ARRAY — one array shard per device index with a host-side
+    merge view; the in-graph tiers see the *current* shard, so the
+    lowering is exactly the array lowering.
+  * LRU_HASH — fixed-capacity hash with clock/LRU eviction: ``update``
+    on a full map evicts the least-recently-used entry instead of
+    failing, and every lookup/update refreshes the entry's recency.
 
 Keys and values are fixed-size byte strings; the verifier checks that policy
 programs pass correctly-sized stack buffers.  Host-side code uses the typed
@@ -38,9 +50,36 @@ from __future__ import annotations
 
 import struct
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
 
 U64 = (1 << 64) - 1
+
+
+def device_shape(kind: str, value_size: int, max_entries: int) -> tuple:
+    """uint64 device-array shape ``(rows, cols)`` for one map.
+
+    The in-graph tiers (jaxc / pallas / pallas32) carry every map as one
+    dense uint64 array; kinds with cursor/recency state append it to the
+    same array so the kernel harness and the bridge stay kind-agnostic:
+
+      * array-family — ``(max_entries, value_size // 8)``
+      * ringbuf — record rows plus control rows holding the four control
+        words ``head, tail, drops, pending`` (packed ``value_size // 8``
+        words per row)
+      * lru_hash — each row is ``[values..., key, recency]`` and one
+        trailing control row holds the clock
+
+    The verifier bounds map-value pointers to ``value_size``, so policy
+    code can never reach the appended control state."""
+    slots = max(1, value_size // 8)
+    if kind == "ringbuf":
+        ctl_rows = -(-4 // slots)           # ceil(4 / slots)
+        return (max_entries + ctl_rows, slots)
+    if kind == "lru_hash":
+        return (max_entries + 1, slots + 2)
+    return (max_entries, slots)
 
 
 class MapError(Exception):
@@ -158,6 +197,21 @@ class BpfMap:
             return {bytes(k): bytes(self.lookup_ref(k))
                     for k in list(self.keys())}
 
+    # -- in-graph device protocol ------------------------------------------
+    # The jaxc/pallas tiers move map state as dense uint64 arrays shaped
+    # by device_shape(); each kind packs/unpacks its own layout so the
+    # bridge and the kernel harness never branch on map kind.
+    def device_shape(self) -> tuple:
+        return device_shape(self.kind, self.value_size, self.max_entries)
+
+    def to_device(self) -> "np.ndarray":
+        raise MapError(f"map {self.name} (kind {self.kind}) has no "
+                       "in-graph device representation")
+
+    def from_device(self, arr) -> None:
+        raise MapError(f"map {self.name} (kind {self.kind}) has no "
+                       "in-graph device representation")
+
 
 class ArrayMap(BpfMap):
     kind = "array"
@@ -165,6 +219,25 @@ class ArrayMap(BpfMap):
     def __init__(self, name: str, value_size: int, max_entries: int):
         super().__init__(name, 4, value_size, max_entries)
         self._slots = [bytearray(value_size) for _ in range(max_entries)]
+
+    def _live_slots(self) -> List[bytearray]:
+        """The slot list the execution tiers (and the device protocol)
+        see — subclasses with sharded storage override this."""
+        return self._slots
+
+    def to_device(self) -> np.ndarray:
+        with self._lock:
+            flat = b"".join(bytes(s) for s in self._live_slots())
+        return np.frombuffer(flat, dtype="<u8").reshape(
+            self.max_entries, self.value_size // 8).copy()
+
+    def from_device(self, arr) -> None:
+        data = np.ascontiguousarray(np.asarray(arr, dtype="<u8")).tobytes()
+        vs = self.value_size
+        with self._lock:
+            for i, s in enumerate(self._live_slots()):
+                s[:] = data[i * vs:(i + 1) * vs]
+            self._version += 1
 
     def _index(self, key: bytes) -> Optional[int]:
         self._check_key(key)
@@ -264,10 +337,460 @@ class PerCpuArrayMap(ArrayMap):
         return total & U64
 
 
+class PerDeviceArrayMap(ArrayMap):
+    """One ArrayMap shard per device index, host merge view.
+
+    The host selects which shard the execution tiers (and the in-graph
+    device protocol) address via :meth:`set_device`; ``aggregate_u64``
+    merges by sum (the counter/histogram idiom), ``device_u64`` reads
+    one shard.  Because the device protocol exposes exactly the current
+    shard, the in-graph lowering is the plain array lowering."""
+
+    kind = "perdev_array"
+    N_DEVICES = 8
+
+    def __init__(self, name: str, value_size: int, max_entries: int):
+        super().__init__(name, value_size, max_entries)
+        self._dev_slots = [self._slots] + [
+            [bytearray(value_size) for _ in range(max_entries)]
+            for _ in range(self.N_DEVICES - 1)
+        ]
+        self._current = 0
+
+    @property
+    def current_device(self) -> int:
+        return self._current
+
+    def set_device(self, dev: int) -> None:
+        """Select the shard subsequent lookups/stores (and device
+        uploads) address.  Counts as a content mutation: the in-graph
+        bridge must re-upload after a shard switch."""
+        with self._lock:
+            self._current = dev % self.N_DEVICES
+            self._version += 1
+
+    def _live_slots(self) -> List[bytearray]:
+        return self._dev_slots[self._current]
+
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
+        idx = self._index(key)
+        return None if idx is None else self._live_slots()[idx]
+
+    def update(self, key: bytes, value: bytes) -> int:
+        self._check_value(value)
+        idx = self._index(key)
+        if idx is None:
+            return -1
+        with self._lock:
+            self._live_slots()[idx][:] = value
+            self._version += 1
+        return 0
+
+    def device_u64(self, dev: int, key: int, slot: int = 0) -> int:
+        if key >= self.max_entries:
+            raise MapError(f"{self.name}: key {key} out of range")
+        return struct.unpack_from(
+            "<Q", self._dev_slots[dev % self.N_DEVICES][key], slot * 8)[0]
+
+    def aggregate_u64(self, key: int, slot: int = 0) -> int:
+        """Host merge view: sum of one u64 slot across every shard."""
+        if key >= self.max_entries:
+            raise MapError(f"{self.name}: key {key} out of range")
+        total = 0
+        for shard in self._dev_slots:
+            total += struct.unpack_from("<Q", shard[key], slot * 8)[0]
+        return total & U64
+
+
+class RingBufMap(BpfMap):
+    """Bounded MPSC event stream — the BPF_MAP_TYPE_RINGBUF analogue.
+
+    Producers (policy programs via the ``ringbuf_reserve`` /
+    ``ringbuf_submit`` / ``ringbuf_discard`` helpers, or host code via
+    :meth:`output`) append fixed-size records; consumers :meth:`drain`
+    them FIFO.  State machine (identical on every tier — vm.py is the
+    differential ground truth, the in-graph tiers run the same logic on
+    the control words appended to the device array):
+
+      * cursors ``head``/``tail`` are free-running u64s; live records
+        occupy rows ``tail..head-1`` modulo ``max_entries``;
+      * ``reserve`` first implicitly commits any still-pending
+        reservation (a policy that forgot to submit cannot poison the
+        ring), then fails with NULL — counting one drop — when the ring
+        is full, else marks the row at ``head % max_entries`` pending
+        and returns it WITHOUT zeroing;
+      * ``submit`` publishes the pending record (``head += 1``);
+        ``discard`` abandons it (the row is reused by the next reserve);
+      * drop-on-full is the program-facing rule on every tier; the
+        host-only :meth:`output` producer can instead run in
+        ``overwrite`` mode, dropping the OLDEST record (decision-log /
+        printk semantics), which still counts into ``drops``.
+    """
+
+    kind = "ringbuf"
+
+    def __init__(self, name: str, value_size: int, max_entries: int,
+                 *, overwrite: bool = False):
+        if value_size % 8 != 0:
+            raise MapError(f"ringbuf {name}: record size {value_size} "
+                           "must be a multiple of 8")
+        super().__init__(name, 4, value_size, max_entries)
+        self._rows = [bytearray(value_size) for _ in range(max_entries)]
+        self._head = 0
+        self._tail = 0
+        self._drops = 0
+        self._pending = False
+        self.overwrite = overwrite
+
+    # -- program-facing helper surface (called by the execution tiers) -----
+    def reserve_ref(self) -> Optional[bytearray]:
+        with self._lock:
+            if self._pending:
+                self._head += 1
+                self._pending = False
+            if self._head - self._tail >= self.max_entries:
+                self._drops += 1
+                self._version += 1
+                return None
+            self._pending = True
+            self._version += 1
+            return self._rows[self._head % self.max_entries]
+
+    def submit(self) -> int:
+        with self._lock:
+            if self._pending:
+                self._head += 1
+                self._pending = False
+            self._version += 1
+        return 0
+
+    def discard(self) -> int:
+        with self._lock:
+            self._pending = False
+            self._version += 1
+        return 0
+
+    # -- host producer/consumer surface ------------------------------------
+    def output(self, data: bytes) -> int:
+        """Host-side reserve+write+submit of one full record; in
+        ``overwrite`` mode a full ring evicts the oldest record (counted
+        as a drop) instead of rejecting the new one."""
+        data = bytes(data)
+        self._check_value(data)
+        with self._lock:
+            if self._pending:
+                self._head += 1
+                self._pending = False
+            if self._head - self._tail >= self.max_entries:
+                self._drops += 1
+                if not self.overwrite:
+                    self._version += 1
+                    return -1
+                self._tail += 1
+            self._rows[self._head % self.max_entries][:] = data
+            self._head += 1
+            self._version += 1
+        return 0
+
+    def drain(self, max_records: Optional[int] = None) -> List[bytes]:
+        """Consume up to ``max_records`` records, oldest first."""
+        with self._lock:
+            n = self._head - self._tail
+            if max_records is not None:
+                n = min(n, max_records)
+            out = [bytes(self._rows[(self._tail + i) % self.max_entries])
+                   for i in range(n)]
+            if n:
+                self._tail += n
+                self._version += 1
+            return out
+
+    def peek(self) -> List[bytes]:
+        """Non-destructive copy of every live record, oldest first."""
+        with self._lock:
+            return [bytes(self._rows[(self._tail + i) % self.max_entries])
+                    for i in range(self._head - self._tail)]
+
+    def record(self, i: int) -> bytes:
+        """Random access into the live window (negative = from newest)."""
+        with self._lock:
+            n = self._head - self._tail
+            if i < 0:
+                i += n
+            if not 0 <= i < n:
+                raise IndexError(f"ringbuf {self.name}: index out of range")
+            return bytes(self._rows[(self._tail + i) % self.max_entries])
+
+    def clear(self) -> None:
+        """Discard every live record (drop counters are cumulative and
+        survive a clear)."""
+        with self._lock:
+            self._tail = self._head
+            self._pending = False
+            self._version += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._head - self._tail
+
+    @property
+    def head(self) -> int:
+        return self._head
+
+    @property
+    def tail(self) -> int:
+        return self._tail
+
+    @property
+    def drops(self) -> int:
+        return self._drops
+
+    # -- keyed surface: a ringbuf has none ---------------------------------
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
+        raise MapError(f"ringbuf {self.name} has no keyed lookup; "
+                       "use reserve/submit and drain()")
+
+    def update(self, key: bytes, value: bytes) -> int:
+        raise MapError(f"ringbuf {self.name} has no keyed update; "
+                       "use output()")
+
+    def delete(self, key: bytes) -> int:
+        raise MapError(f"ringbuf {self.name} has no keyed delete")
+
+    def keys(self) -> Iterator[bytes]:
+        return iter(())
+
+    # -- in-graph device protocol ------------------------------------------
+    def _ctl_pos(self, w: int) -> tuple:
+        slots = self.value_size // 8
+        return (self.max_entries + w // slots, w % slots)
+
+    def to_device(self) -> np.ndarray:
+        rows, slots = self.device_shape()
+        with self._lock:
+            flat = b"".join(bytes(r) for r in self._rows)
+            arr = np.zeros((rows, slots), dtype="<u8")
+            arr[:self.max_entries] = np.frombuffer(flat, dtype="<u8").reshape(
+                self.max_entries, slots)
+            for w, v in enumerate((self._head, self._tail, self._drops,
+                                   1 if self._pending else 0)):
+                arr[self._ctl_pos(w)] = v
+        return arr
+
+    def from_device(self, arr) -> None:
+        a = np.ascontiguousarray(np.asarray(arr, dtype="<u8"))
+        vs = self.value_size
+        data = a[:self.max_entries].tobytes()
+        with self._lock:
+            for i, r in enumerate(self._rows):
+                r[:] = data[i * vs:(i + 1) * vs]
+            self._head = int(a[self._ctl_pos(0)])
+            # the device never consumes: its tail is the tail it was
+            # uploaded with.  The host may have drained since — keep the
+            # larger cursor so a host drain between upload and writeback
+            # is never un-consumed (clamped to head for safety).
+            self._tail = min(max(self._tail, int(a[self._ctl_pos(1)])),
+                             self._head)
+            self._drops = int(a[self._ctl_pos(2)])
+            self._pending = bool(int(a[self._ctl_pos(3)]))
+            self._version += 1
+
+
+class LruHashMap(BpfMap):
+    """Fixed-capacity hash with clock/LRU eviction (BPF_MAP_TYPE_LRU_HASH).
+
+    Storage is the device layout run on the host — ``max_entries`` rows
+    of ``[value, key, recency]`` plus a global clock — so every tier
+    executes the identical state machine and differential tests compare
+    bit-identical state:
+
+      * lookup scans for ``key`` among occupied rows (``recency > 0``);
+        a hit refreshes ``recency = ++clock`` (lookup MUTATES the map);
+      * update overwrites a hit in place, else claims the row with the
+        smallest recency — free rows have recency 0, so they win before
+        any occupied row, and ties break to the lowest index;
+      * delete frees the row (``recency = 0``); eviction means update
+        never fails for capacity.
+
+    Keys are the little-endian integer value of the declared key bytes
+    (key_size <= 8, so a key fits one u64 device cell)."""
+
+    kind = "lru_hash"
+
+    def __init__(self, name: str, key_size: int, value_size: int,
+                 max_entries: int):
+        if key_size not in (4, 8):
+            raise MapError(f"lru_hash {name}: key size must be 4 or 8")
+        super().__init__(name, key_size, value_size, max_entries)
+        self._key_ints = [0] * max_entries
+        self._vals = [bytearray(value_size) for _ in range(max_entries)]
+        self._rec = [0] * max_entries
+        self._clock = 0
+        # host acceleration only: key -> occupied row, so the hot lookup
+        # path is O(1) instead of a row scan.  The row arrays above stay
+        # the source of truth (they ARE the device layout); the index is
+        # rebuilt wholesale on from_device()
+        self._index: Dict[int, int] = {}
+
+    def _kint(self, key: bytes) -> int:
+        self._check_key(key)
+        return int.from_bytes(bytes(key), "little")
+
+    def _find(self, k: int) -> Optional[int]:
+        return self._index.get(k)
+
+    def lookup_ref(self, key: bytes) -> Optional[bytearray]:
+        k = self._kint(key)
+        with self._lock:
+            i = self._find(k)
+            if i is None:
+                return None
+            self._clock += 1
+            self._rec[i] = self._clock
+            self._version += 1
+            return self._vals[i]
+
+    def peek_ref(self, key: bytes) -> Optional[bytearray]:
+        """Lookup WITHOUT refreshing recency — host introspection that
+        must not perturb eviction order (snapshots, exporters)."""
+        k = self._kint(key)
+        with self._lock:
+            i = self._find(k)
+            return None if i is None else self._vals[i]
+
+    def update(self, key: bytes, value: bytes) -> int:
+        k = self._kint(key)
+        self._check_value(value)
+        with self._lock:
+            i = self._find(k)
+            if i is None:
+                # victim: smallest recency, lowest index on ties — free
+                # rows (recency 0) always win before any occupied row
+                i = min(range(self.max_entries), key=lambda j: self._rec[j])
+                if self._rec[i] > 0:
+                    self._index.pop(self._key_ints[i], None)
+                self._index[k] = i
+            self._key_ints[i] = k
+            self._vals[i][:] = value
+            self._clock += 1
+            self._rec[i] = self._clock
+            self._version += 1
+        return 0
+
+    def delete(self, key: bytes) -> int:
+        k = self._kint(key)
+        with self._lock:
+            i = self._find(k)
+            if i is None:
+                return -1
+            self._index.pop(k, None)
+            self._rec[i] = 0
+            self._key_ints[i] = 0
+            self._vals[i][:] = bytes(self.value_size)
+            self._version += 1
+            return 0
+
+    def keys(self) -> Iterator[bytes]:
+        with self._lock:
+            out = [self._key_ints[i].to_bytes(self.key_size, "little")
+                   for i in range(self.max_entries) if self._rec[i] > 0]
+        return iter(out)
+
+    def snapshot(self) -> Dict[bytes, bytes]:
+        # bypass lookup_ref: a snapshot must not refresh recency
+        with self._lock:
+            return {self._key_ints[i].to_bytes(self.key_size, "little"):
+                    bytes(self._vals[i])
+                    for i in range(self.max_entries) if self._rec[i] > 0}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(1 for r in self._rec if r > 0)
+
+    # -- in-graph device protocol ------------------------------------------
+    def to_device(self) -> np.ndarray:
+        rows, cols = self.device_shape()
+        slots = self.value_size // 8
+        with self._lock:
+            arr = np.zeros((rows, cols), dtype="<u8")
+            for i in range(self.max_entries):
+                arr[i, :slots] = np.frombuffer(bytes(self._vals[i]),
+                                               dtype="<u8")
+                arr[i, slots] = self._key_ints[i]
+                arr[i, slots + 1] = self._rec[i]
+            arr[self.max_entries, 0] = self._clock
+        return arr
+
+    def from_device(self, arr) -> None:
+        a = np.ascontiguousarray(np.asarray(arr, dtype="<u8"))
+        slots = self.value_size // 8
+        with self._lock:
+            for i in range(self.max_entries):
+                self._vals[i][:] = a[i, :slots].tobytes()
+                self._key_ints[i] = int(a[i, slots])
+                self._rec[i] = int(a[i, slots + 1])
+            self._clock = int(a[self.max_entries, 0])
+            self._index = {self._key_ints[i]: i
+                           for i in range(self.max_entries)
+                           if self._rec[i] > 0}
+            self._version += 1
+
+
+class RingView:
+    """Deque-like decoded view over a host-producer :class:`RingBufMap`.
+
+    The dogfooding adapter: the dispatcher's decision log keeps its
+    familiar ``decisions[-1]`` / ``len`` / ``clear`` surface while the
+    storage is the observability plane's ring (overwrite mode: a full
+    ring evicts the oldest record, like the deque it replaced).
+    ``maxlen`` echoes the configured bound (including 0 = log nothing),
+    and indexing decodes single records in O(1)."""
+
+    def __init__(self, capacity: Optional[int], record_size: int,
+                 encode, decode, *, name: str = "ring_view"):
+        # capacity None is the legacy "unbounded" spelling; the ring is
+        # the bound now, so it maps to the historical default
+        self.maxlen = capacity
+        cap = 4096 if capacity is None else max(int(capacity), 0)
+        self._enabled = cap > 0
+        self.ring = RingBufMap(name, record_size, max(cap, 1),
+                               overwrite=True)
+        self._enc = encode
+        self._dec = decode
+
+    def append(self, item) -> None:
+        if self._enabled:
+            self.ring.output(self._enc(item))
+
+    def clear(self) -> None:
+        self.ring.clear()
+
+    def __len__(self) -> int:
+        return len(self.ring) if self._enabled else 0
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __iter__(self):
+        return iter(self._dec(r) for r in self.ring.peek())
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._dec(r) for r in self.ring.peek()[i]]
+        return self._dec(self.ring.record(i))
+
+    @property
+    def drops(self) -> int:
+        return self.ring.drops
+
+
 MAP_KINDS = {
     "array": ArrayMap,
     "hash": HashMap,
     "percpu_array": PerCpuArrayMap,
+    "perdev_array": PerDeviceArrayMap,
+    "ringbuf": RingBufMap,
+    "lru_hash": LruHashMap,
 }
 
 
@@ -293,9 +816,11 @@ class MapRegistry:
     @staticmethod
     def _shape_of(kind: str, key_size: int, value_size: int,
                   max_entries: int) -> tuple:
-        # array-family maps force u32 keys regardless of the declaration
-        return (kind, key_size if kind == "hash" else 4, value_size,
-                max_entries)
+        # array-family (and keyless) maps force u32 keys regardless of
+        # the declaration; only the hash family keeps declared keys
+        return (kind,
+                key_size if kind in ("hash", "lru_hash") else 4,
+                value_size, max_entries)
 
     def validate(self, name: str, kind: str, *, key_size: int = 4,
                  value_size: int = 8, max_entries: int = 64) -> None:
@@ -319,9 +844,10 @@ class MapRegistry:
                         self._shape_of(kind, key_size, value_size, max_entries):
                     raise MapError(f"map {name}: redefinition with different shape")
                 return m
-            if kind == "hash":
-                m = HashMap(name, key_size, value_size, max_entries)
-            elif kind in ("array", "percpu_array"):
+            if kind in ("hash", "lru_hash"):
+                m = MAP_KINDS[kind](name, key_size, value_size, max_entries)
+            elif kind in ("array", "percpu_array", "perdev_array",
+                          "ringbuf"):
                 m = MAP_KINDS[kind](name, value_size, max_entries)
             else:
                 raise MapError(f"unknown map kind {kind!r}")

@@ -69,7 +69,7 @@ from .jaxc import (JaxcError, _Lowerer, array_to_map, check_supported,
 from .lower32 import (_Lowerer32, array32_to_map, compile_jax32,
                       ctx_to_vec32, map_to_array32, ret32_to_int,
                       vec32_to_bytes)
-from .maps import BpfMap
+from .maps import BpfMap, device_shape
 from .program import Program
 from .verifier import verify_with_info
 
@@ -140,6 +140,11 @@ def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
         vinfo = verify_with_info(prog)
     mode = _resolve_mode(mode)
     word_width = _resolve_word_width(word_width)
+    if word_width == 32 and any(d.kind == "lru_hash" for d in prog.maps):
+        raise PallascError(
+            f"policy '{prog.name}' uses an lru_hash map; the 32-bit-pair "
+            "tier does not lower LRU maps — use word_width=64 or a host "
+            "tier")
     names = [d.name for d in prog.maps]
 
     if mode == "jit":
@@ -187,8 +192,12 @@ def _build_pallas_fn(prog: Program, vinfo, interpret: bool) -> Callable:
             r[...] = maps_out[n]
 
     vec_spec = pl.BlockSpec((n_fields,), lambda i: (0,))
-    map_specs = [pl.BlockSpec((d.max_entries, d.value_size // 8),
-                              lambda i: (0, 0)) for d in decls]
+    # device_shape appends control/metadata rows (ringbuf cursors, LRU
+    # key/recency/clock) to the value rows — one rectangular VMEM tile
+    # per map regardless of kind
+    map_shapes = [device_shape(d.kind, d.value_size, d.max_entries)
+                  for d in decls]
+    map_specs = [pl.BlockSpec(s, lambda i: (0, 0)) for s in map_shapes]
     call = pl.pallas_call(
         kernel,
         grid=(1,),
@@ -197,9 +206,8 @@ def _build_pallas_fn(prog: Program, vinfo, interpret: bool) -> Callable:
                    *map_specs),
         out_shape=(jax.ShapeDtypeStruct((1,), jnp.uint64),
                    jax.ShapeDtypeStruct((n_fields,), jnp.uint64),
-                   *[jax.ShapeDtypeStruct((d.max_entries,
-                                           d.value_size // 8), jnp.uint64)
-                     for d in decls]),
+                   *[jax.ShapeDtypeStruct(s, jnp.uint64)
+                     for s in map_shapes]),
         interpret=interpret,
     )
 
@@ -237,8 +245,10 @@ def _build_pallas_fn32(prog: Program, vinfo, interpret: bool) -> Callable:
             r[...] = maps_out[n]
 
     vec_spec = pl.BlockSpec((n_fields, 2), lambda i: (0, 0))
-    map_specs = [pl.BlockSpec((d.max_entries, d.value_size // 8, 2),
-                              lambda i: (0, 0, 0)) for d in decls]
+    map_shapes = [device_shape(d.kind, d.value_size, d.max_entries)
+                  for d in decls]
+    map_specs = [pl.BlockSpec((*s, 2), lambda i: (0, 0, 0))
+                 for s in map_shapes]
     call = pl.pallas_call(
         kernel,
         grid=(1,),
@@ -247,10 +257,8 @@ def _build_pallas_fn32(prog: Program, vinfo, interpret: bool) -> Callable:
                    *map_specs),
         out_shape=(jax.ShapeDtypeStruct((2,), jnp.uint32),
                    jax.ShapeDtypeStruct((n_fields, 2), jnp.uint32),
-                   *[jax.ShapeDtypeStruct((d.max_entries,
-                                           d.value_size // 8, 2),
-                                          jnp.uint32)
-                     for d in decls]),
+                   *[jax.ShapeDtypeStruct((*s, 2), jnp.uint32)
+                     for s in map_shapes]),
         interpret=interpret,
     )
 

@@ -54,7 +54,7 @@ from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tu
 from . import faults as _faults
 from .context import CTX_TYPES, PolicyContextValues
 from .jit import compile_program
-from .maps import BpfMap, MapError, MapRegistry
+from .maps import BpfMap, MapError, MapRegistry, RingView
 from .program import Program
 from .verifier import VerifierError, verify_with_info
 from .vm import VM
@@ -301,11 +301,20 @@ class PolicyRuntime:
         self._deciders: Dict[str, List[Optional[PolicyLink]]] = {
             s: [None] for s in CTX_TYPES}
         self.use_interpreter = tier == "interp"
-        # bounded ring buffer — chatty policies on long-running jobs must
+        # bounded printk log — chatty policies on long-running jobs must
         # not leak memory through trace_printk (same leak class the
-        # decision log fixed in PR 1); maxlen=None keeps an unbounded log
-        self._printk_log: Deque[int] = collections.deque(
-            maxlen=printk_log_max)
+        # decision log fixed in PR 1).  Storage is the observability
+        # plane's ringbuf in overwrite mode (oldest value ages out, the
+        # eviction is counted in `drops`), decoded through RingView so
+        # the historical append/iter surface is unchanged
+        self._printk_log = RingView(
+            printk_log_max, 8,
+            lambda v: (int(v) & 0xFFFFFFFFFFFFFFFF).to_bytes(8, "little"),
+            lambda b: int.from_bytes(b, "little"),
+            name="printk_log")
+        # flight recorder registered by repro.obs (duck-typed: anything
+        # with a counters() dict), folded into health()
+        self._recorder = None
         # the link created/replaced by the legacy load()/reload() API, per
         # section — keeps single-program call sites working unchanged
         self._legacy: Dict[str, Optional[PolicyLink]] = {
@@ -548,7 +557,10 @@ class PolicyRuntime:
 
     def health(self) -> Dict[str, object]:
         """Operator introspection: per-link breaker state for every
-        section with links, plus runtime-wide fault totals."""
+        section with links, runtime-wide fault totals, aggregated
+        device-bridge counters, and the observability plane's loss
+        accounting (printk ring + registered flight recorder) — one
+        structured dict for the whole runtime."""
         sections: Dict[str, list] = {}
         total = 0
         quarantined = 0
@@ -567,7 +579,54 @@ class PolicyRuntime:
                 "sections": sections, "faults": total,
                 "quarantined": quarantined,
                 "breaker": dataclasses.asdict(self.breaker),
-                "stats": dataclasses.asdict(self.stats)}
+                "stats": dataclasses.asdict(self.stats),
+                "bridge": self.bridge_stats(),
+                "observability": self._obs_health()}
+
+    def bridge_stats(self) -> Dict[str, int]:
+        """Device-bridge counters summed across every attached link
+        (host-tier closures contribute nothing).  Keys mirror
+        :class:`~repro.core.pallasc.BridgeStats` plus ``n_bridges``."""
+        agg: Dict[str, int] = {"n_bridges": 0}
+        for ch in self._chains.values():
+            for link in ch.links:
+                st = getattr(link._loaded.fn, "stats", None)
+                if not dataclasses.is_dataclass(st):
+                    continue
+                agg["n_bridges"] += 1
+                for k, v in dataclasses.asdict(st).items():
+                    agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def _obs_health(self) -> Dict[str, object]:
+        obs: Dict[str, object] = {
+            "printk": {"stored": len(self._printk_log),
+                       "capacity": self._printk_log.maxlen,
+                       "drops": self._printk_log.drops},
+        }
+        rec = self._recorder
+        if rec is not None:
+            obs["recorder"] = rec.counters()
+        return obs
+
+    def attach_recorder(self, recorder) -> None:
+        """Publish a flight recorder (anything with ``counters()``) on
+        the runtime so :meth:`health` folds its drop/overflow accounting
+        into the observability section.  ``None`` unregisters."""
+        self._recorder = recorder
+
+    def flush_bridges(self, section: Optional[str] = None) -> None:
+        """Flush device-resident bridge state of every attached link (one
+        section, or all) back to host maps — the same contained writeback
+        the runtime performs at T3 attachment boundaries, exposed for
+        host-side consumers (flight-recorder drains, exporters) that need
+        in-graph map writes visible between boundaries.  No-op for
+        host-tier links; failures are counted, never raised."""
+        names = [self._check_section(section)] if section is not None \
+            else list(self._chains)
+        for s in names:
+            for link in self._chains[s].links:
+                self._flush_bridge(link._loaded)
 
     # ---- mutation internals (call with _load_lock held) -------------------
     def _flush_bridge(self, lp: Optional[LoadedProgram]) -> None:

@@ -1033,6 +1033,15 @@ class Verifier:
                     raise VerifierError(
                         f"{h.name}: R{argi} must be a map pointer, got {v.name()}", pc)
                 map_decl = self.map_decls[v.map_name]
+                # helper x map-kind contract: the keyed surface never
+                # runs on a ringbuf, the reserve/submit surface runs
+                # only on one
+                kinds = H.HELPER_MAP_KINDS.get(hid)
+                if kinds is not None and map_decl.kind not in kinds:
+                    raise VerifierError(
+                        f"{h.name}: map '{map_decl.name}' has kind "
+                        f"'{map_decl.kind}', not one of "
+                        f"{sorted(kinds)}", pc)
             elif argt in (H.ARG_STACK_KEY, H.ARG_STACK_VALUE):
                 need = (map_decl.key_size if argt == H.ARG_STACK_KEY
                         else map_decl.value_size) if map_decl else 8

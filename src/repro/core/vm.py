@@ -289,6 +289,25 @@ class VM:
         elif h.name == "trace_printk":
             self.printk(int(regs[1]) if not isinstance(regs[1], Ptr) else -1)
             regs[0] = 0
+        elif h.name == "ringbuf_reserve":
+            mp = regs[1]
+            if not (isinstance(mp, Ptr) and mp.kind == "map"):
+                raise VMError("ringbuf_reserve: r1 must be a map pointer")
+            m = mp.mem
+            if not hasattr(m, "reserve_ref"):
+                raise VMError(f"ringbuf_reserve on non-ringbuf map {m.name}")
+            v = m.reserve_ref()
+            regs[0] = 0 if v is None else Ptr("mapval", v, 0, m)
+        elif h.name == "ringbuf_submit":
+            mp = regs[1]
+            if not (isinstance(mp, Ptr) and mp.kind == "map"):
+                raise VMError("ringbuf_submit: r1 must be a map pointer")
+            regs[0] = u64(mp.mem.submit())
+        elif h.name == "ringbuf_discard":
+            mp = regs[1]
+            if not (isinstance(mp, Ptr) and mp.kind == "map"):
+                raise VMError("ringbuf_discard: r1 must be a map pointer")
+            regs[0] = u64(mp.mem.discard())
         elif h.name == "ema_update":
             mp, kp, sample, weight = regs[1], regs[2], regs[3], regs[4]
             if not (isinstance(mp, Ptr) and mp.kind == "map"):
