@@ -97,6 +97,43 @@ def run(report):
            note="CAS of one link inside a depth-2 chain; verify+JIT "
                 "dominates, the published-chain swap is the tail")
 
+    # ---- native tier: warm link.replace() through the object cache ------
+    from repro.core.cc import cache_stats, have_cc
+    if have_cc():
+        rt5 = PolicyRuntime(tier="native")
+        link5 = rt5.attach(static_override.program, priority=0)
+        rt5.attach(ring_mid_v2.program, priority=1)
+        # warm the compiled-object cache: the first replace of each
+        # program pays the cc round trip (~10-100 ms), every later swap
+        # rebinds the cached .so — that warm path is what a production
+        # tuner loop alternating between known-good policies would pay
+        link5.replace(bad_channels.program)
+        link5.replace(static_override.program)
+        before = cache_stats()
+        nswaps, ntotals = [], []
+        for i in range(200):
+            prog = (bad_channels.program if i % 2 == 0
+                    else static_override.program)
+            t0 = time.perf_counter_ns()
+            link5.replace(prog)
+            ntotals.append((time.perf_counter_ns() - t0) / 1e3)
+            nswaps.append(rt5.stats.swap_ns_last / 1e3)
+        after = cache_stats()
+        p50 = float(np.percentile(nswaps, 50))
+        report("hot_reload", "native_link_replace_warm",
+               swap_us_p50=p50,
+               swap_us_p99=float(np.percentile(nswaps, 99)),
+               total_replace_us_p50=float(np.percentile(ntotals, 50)),
+               compiles_during=after["compiles"] - before["compiles"],
+               cache_hits_during=after["cache_hits"] - before["cache_hits"],
+               swap_vs_paper=round(p50 / 1.07, 2),
+               paper="swap 1.07 us (verify+LLVM JIT, warm)",
+               note="200 warm swaps on the machine-code tier: every "
+                    "replace rebinds a cached .so, zero recompiles")
+    else:
+        report("hot_reload", "native_link_replace_warm",
+               skipped="no C toolchain on this host (have_cc)")
+
     # ---- load_bundle(): whole-chain transactional swap ------------------
     rt4 = PolicyRuntime()
     rt4.load_bundle([adapt_profiler.program, adapt_tuner.program])

@@ -15,6 +15,10 @@ histogram + straggler records in a valid JSON-lines batch), the
 differential (interp == v1 == v2 == jaxc == pallas, zero retraces), the
 ``table1_pallas32`` SIX-tier differential (+ the Mosaic-ready
 32-bit-pair lowering, whose leg runs without ``enable_x64``), the
+``table1_native_diff`` machine-code differential (native == interp on
+every policy, no eligibility gate), the ``BENCH_table1.json`` writer
+(ns/decision per tier per policy, gating the ISSUE-8 >=5x-median
+native-vs-v2 acceptance), the
 runtime fault-containment matrix (injected faults at every trust
 boundary x every tier must degrade to the cost-model default, never
 escape), then the tier-1 pytest suite; exit status is nonzero if any
@@ -79,7 +83,8 @@ def run_ci() -> int:
         print("CI: perf smoke FAILED", flush=True)
         failures += 1
 
-    for suite in ("pallas_differential", "pallas32_differential"):
+    for suite in ("pallas_differential", "pallas32_differential",
+                  "native_differential"):
         print(f"=== ci: table1_{suite.split('_')[0]} differential ===",
               flush=True)
         r = subprocess.run(
@@ -93,6 +98,19 @@ def run_ci() -> int:
         if r.returncode != 0:
             print(f"CI: {suite} FAILED", flush=True)
             failures += 1
+
+    print("=== ci: table1 ns/decision -> BENCH_table1.json ===", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.table1_overhead import ci_table1;"
+         "rec = ci_table1();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: table1 BENCH writer FAILED", flush=True)
+        failures += 1
 
     print("=== ci: observability export schema ===", flush=True)
     r = subprocess.run(

@@ -11,6 +11,11 @@ in-graph jaxc tier (whose marginal host cost is zero — it fuses into XLA).
 The ``table1_codegen`` section reports the legacy (v1 dispatcher-loop)
 and specializing (v2) generators side by side on every policy, plus the
 dispatch-layer decision cache (``table1_dispatch``).
+
+The ``table1_native`` section benches the machine-code tier (core/cc.py,
+C compiled via the system toolchain) against the v2 JIT on every policy
+and carries the ISSUE-8 acceptance summary: >= 5x median per-decision
+speedup.  ``native_differential`` is the matching correctness gate.
 """
 
 from __future__ import annotations
@@ -339,6 +344,163 @@ def pallas32_differential(report=None):
     return rec
 
 
+def native_differential(report=None):
+    """``table1_native_diff``: the machine-code tier is bit-identical to
+    the host ladder (return value, ctx out, map state) on EVERY Table-1
+    and loop policy.  No eligibility gate — unlike the in-graph tiers,
+    native walks the same CFG as the host JITs, so hash maps, bounded
+    loops and host helpers all compile.  Reused verbatim as a CI gate by
+    ``benchmarks.run --ci``; skips (ok) on compiler-less hosts."""
+    from repro.core.cc import get_meta, have_cc
+    from repro.policies.loops import LOOP_POLICIES
+
+    rec = {"suite": "table1_native_diff", "ok": True, "policies": {}}
+    if not have_cc():
+        rec["skipped"] = "no C toolchain on this host (have_cc)"
+        return rec
+    ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
+                   max_channels=32)
+    table1 = [(p.program, seed_maps) for p in
+              (T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+               T.latency_feedback, T.bandwidth_probe, T.slo_enforcer)]
+    loops = [(p.program, _seed_loop_maps) for p in LOOP_POLICIES]
+    for prog, seed_fn in table1 + loops:
+        host = _host_tier_results(prog, ctx, seed_fn)
+        rt = PolicyRuntime(tier="native")
+        lp = rt.load(prog)
+        seed_fn(rt)
+        buf = bytearray(ctx.buf)
+        ret = lp.fn(buf)
+        state = {d.name: [rt.maps.get(d.name).lookup_u64(k)
+                          for k in range(rt.maps.get(d.name).max_entries)]
+                 for d in prog.maps}
+        # pure programs bind the raw extension method (no attributes);
+        # get_meta carries the codegen tag for those
+        cg = (getattr(lp.fn, "__bpf_codegen__", None)
+              or get_meta(lp.fn).get("codegen"))
+        row = {"codegen": cg,
+               "ok": ((ret, bytes(buf), state) == host["interp"]
+                      and len(set(map(str, host.values()))) == 1
+                      and cg == "native")}
+        rec["policies"][prog.name] = row
+        rec["ok"] = rec["ok"] and row["ok"]
+        if report is not None:
+            report("table1_native_diff", prog.name, **row)
+    return rec
+
+
+def _run_native_section(report, ctx) -> None:
+    """``table1_native``: machine-code tier vs the v2 JIT per policy,
+    ending in the ISSUE-8 acceptance summary (>= 5x median speedup).
+    Direct-path policies (array maps, straight-line or loop code) run
+    entirely in C; hash-map policies cross the C<->Python helper
+    boundary per lookup and sit near parity — the median is carried by
+    the direct path, which is the paper's 80-130 ns/decision regime."""
+    from repro.core.cc import cache_stats, have_cc
+    if not have_cc():
+        report("table1_native", "summary",
+               skipped="no C toolchain on this host (have_cc)")
+        return
+    from benchmarks.perf_smoke import _bench
+    from repro.policies.loops import LOOP_POLICIES
+
+    rows = [(p, seed_maps, 50_000, 20_000) for p in
+            (T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+             T.latency_feedback, T.bandwidth_probe, T.slo_enforcer)]
+    # loop policies: ~100x costlier under v2, so the v2 leg gets the
+    # same reduced call count the loop section uses
+    rows += [(p, _seed_loop_maps, 20_000, 2_000) for p in LOOP_POLICIES]
+    speedups = []
+    for pol, seed_fn, n_native, n_v2 in rows:
+        fns = {}
+        for tier in ("native", "jit"):
+            rt = PolicyRuntime(tier=tier)
+            lp = rt.load(pol.program)
+            seed_fn(rt)
+            fns[tier] = lp.fn
+        p50_v2 = _bench(fns["jit"], bytearray(ctx.buf), n=n_v2)
+        p50_nat = _bench(fns["native"], bytearray(ctx.buf), n=n_native)
+        speedups.append(p50_v2 / p50_nat)
+        report("table1_native", pol.program.name,
+               p50_native_ns=p50_nat, p50_v2_ns=p50_v2,
+               speedup=p50_v2 / p50_nat)
+    report("table1_native", "summary",
+           median_speedup=float(np.median(speedups)),
+           min_speedup=float(np.min(speedups)),
+           max_speedup=float(np.max(speedups)),
+           target=">=5x median over JIT v2 (ISSUE 8)",
+           paper_native_ns="80..130 ns/decision (x86 LLVM JIT)",
+           **cache_stats())
+
+
+def ci_table1(out="BENCH_table1.json"):
+    """CI leg: ns/decision per tier per policy, written to ``out``.
+
+    Uses perf_smoke's light warm-then-mean timer — the CI time budget
+    can't pay bench_fn's chunked percentiles — and carries the
+    ``table1_native`` acceptance section: >= 5x median per-decision
+    speedup of the machine-code tier over the v2 JIT (ISSUE 8).  On
+    compiler-less hosts the native column and its gate are skipped and
+    the leg stays green."""
+    import json as _json
+
+    from benchmarks.perf_smoke import _bench
+    from repro.core.cc import have_cc
+    from repro.policies.loops import LOOP_POLICIES
+
+    ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
+                   max_channels=32)
+    rec = {"suite": "table1_ci",
+           "timer": "perf_smoke._bench (light warm-then-mean)",
+           "native_available": have_cc(),
+           "policies": {}}
+    # (policy, seeder, n_fast, n_v1, n_interp): loop policies are ~100x
+    # costlier on the slow tiers, so those legs get reduced call counts
+    rows = [(p, seed_maps, 20_000, 5_000, 2_000) for p in
+            (T.noop, T.static_override, T.size_aware, T.adaptive_channels,
+             T.latency_feedback, T.bandwidth_probe, T.slo_enforcer)]
+    rows += [(p, _seed_loop_maps, 2_000, 600, 60) for p in LOOP_POLICIES]
+    speedups = []
+    for pol, seed_fn, n_fast, n_v1, n_interp in rows:
+        row = {}
+        tiers = [("interp_ns", dict(use_interpreter=True), n_interp),
+                 ("jit_v2_ns", {}, n_fast)]
+        if have_cc():
+            tiers.append(("native_ns", dict(tier="native"), n_fast))
+        for col, kw, n in tiers:
+            rt = PolicyRuntime(**kw)
+            lp = rt.load(pol.program)
+            seed_fn(rt)
+            row[col] = _bench(lp.fn, bytearray(ctx.buf), n=n)
+        rt = PolicyRuntime()
+        rt.load(pol.program)
+        seed_fn(rt)
+        resolved = {d.name: rt.maps.get(d.name) for d in pol.program.maps}
+        fn_v1 = compile_program(pol.program, resolved, codegen="v1")
+        row["jit_v1_ns"] = _bench(fn_v1, bytearray(ctx.buf), n=n_v1)
+        if have_cc():
+            row["native_speedup_vs_v2"] = row["jit_v2_ns"] / row["native_ns"]
+            speedups.append(row["native_speedup_vs_v2"])
+        rec["policies"][pol.program.name] = row
+    if have_cc():
+        med = float(np.median(speedups))
+        rec["table1_native"] = {
+            "median_speedup_vs_v2": med,
+            "min_speedup_vs_v2": float(np.min(speedups)),
+            "max_speedup_vs_v2": float(np.max(speedups)),
+            "target": ">=5x median over JIT v2 (ISSUE 8)",
+            "paper_native_ns": "80..130 ns/decision (x86 LLVM JIT)",
+            "ok": med >= 5.0}
+        rec["ok"] = rec["table1_native"]["ok"]
+    else:
+        rec["table1_native"] = {"skipped":
+                                "no C toolchain on this host (have_cc)"}
+        rec["ok"] = True
+    with open(out, "w") as f:
+        _json.dump(rec, f, indent=1)
+    return rec
+
+
 def run(report):
     ctx = make_ctx("tuner", msg_size=8 * MiB, comm_id=0, n_ranks=8,
                    max_channels=32)
@@ -399,6 +561,11 @@ def run(report):
     # lowering (table1_pallas32; its pair leg runs without enable_x64)
     pallas_differential(report)
     pallas32_differential(report)
+
+    # the machine-code tier: correctness gate, then ns/decision vs v2
+    # with the ISSUE-8 >=5x-median acceptance summary
+    native_differential(report)
+    _run_native_section(report, ctx)
 
     # dispatch layer: cold full path vs epoch-keyed decision-cache hits
     rt = PolicyRuntime()

@@ -224,7 +224,13 @@ def _algo_fn(coll: int, algo: int) -> Callable:
 
 class CollectiveDispatcher:
     def __init__(self, runtime: Optional[PolicyRuntime] = None,
-                 config: Optional[DispatchConfig] = None):
+                 config: Optional[DispatchConfig] = None,
+                 tier: Optional[str] = None):
+        # tier="auto" resolves to the fastest available host tier
+        # (native when a C toolchain is present, else the v2 JIT);
+        # explicit runtime wins over tier
+        if runtime is None and tier is not None:
+            runtime = PolicyRuntime(tier=tier)
         self.runtime = runtime or global_runtime()
         self.config = config or DispatchConfig()
         self.cost_model = CostModel(self.config.hw)
@@ -731,9 +737,11 @@ def dispatcher() -> CollectiveDispatcher:
 
 
 def reset_dispatcher(config: Optional[DispatchConfig] = None,
-                     runtime: Optional[PolicyRuntime] = None
+                     runtime: Optional[PolicyRuntime] = None,
+                     tier: Optional[str] = None
                      ) -> CollectiveDispatcher:
     global _DISPATCHER
     with _DISPATCHER_LOCK:
-        _DISPATCHER = CollectiveDispatcher(runtime=runtime, config=config)
+        _DISPATCHER = CollectiveDispatcher(runtime=runtime, config=config,
+                                           tier=tier)
         return _DISPATCHER

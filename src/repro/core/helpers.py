@@ -10,6 +10,7 @@ Ids follow the kernel where the helper exists there.
 
 from __future__ import annotations
 
+import ctypes
 import dataclasses
 import time
 from typing import Tuple
@@ -91,7 +92,10 @@ def ktime_get_ns() -> int:
     return time.monotonic_ns()
 
 
-_PRNG_STATE = [0x853C49E6748FEA9B]
+# xorshift64* state in a ctypes cell: the native tier (core/cc.py)
+# advances the SAME generator in compiled code by writing this memory
+# directly, so interleaving native and Python tiers stays one stream
+_PRNG_STATE = (ctypes.c_uint64 * 1)(0x853C49E6748FEA9B)
 
 
 def get_prandom_u32() -> int:

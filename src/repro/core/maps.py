@@ -48,6 +48,7 @@ Concurrency — the mutation contract:
 
 from __future__ import annotations
 
+import ctypes
 import struct
 import threading
 from typing import Dict, Iterator, List, Optional
@@ -113,6 +114,11 @@ class BpfMap:
         # raw lookup_ref views; such writers call touch() /
         # bridge.invalidate() explicitly.
         self._version = 0
+        # native-tier mutation counter: compiled code bumps this cell with
+        # one machine increment at call exit (per dirty map) instead of
+        # calling back into Python.  ``version`` reads the sum, so bridge
+        # caches observe native mutations exactly like touch()ed ones.
+        self._native_bumps = (ctypes.c_uint64 * 1)(0)
 
     @property
     def lock(self) -> threading.RLock:
@@ -124,13 +130,19 @@ class BpfMap:
     def version(self) -> int:
         """Content version — changes iff the map was mutated through the
         tracked surface since last observed."""
-        return self._version
+        return self._version + self._native_bumps[0]
 
     def touch(self) -> None:
         """Mark the map contents changed (for mutations done through raw
         ``lookup_ref`` pointers that the tracked surface cannot see)."""
         with self._lock:
             self._version += 1
+
+    def native_view(self) -> "NativeMapView":
+        """Stable C-ABI view for the native tier (array family only);
+        other kinds route through Python helper handlers."""
+        raise MapError(
+            f"map {self.name} (kind {self.kind}) has no native view")
 
     # -- raw interface -----------------------------------------------------
     def lookup(self, key: bytes) -> Optional[bytearray]:
@@ -244,6 +256,13 @@ class ArrayMap(BpfMap):
         idx = struct.unpack("<I", key)[0]
         return idx if idx < self.max_entries else None
 
+    def native_view(self) -> "NativeMapView":
+        with self._lock:
+            v = getattr(self, "_native_view", None)
+            if v is None:
+                v = self._native_view = NativeMapView(self)
+            return v
+
     def lookup_ref(self, key: bytes) -> Optional[bytearray]:
         idx = self._index(key)
         return None if idx is None else self._slots[idx]
@@ -326,6 +345,11 @@ class PerCpuArrayMap(ArrayMap):
     def lookup_ref(self, key: bytes) -> Optional[bytearray]:
         idx = self._index(key)
         return None if idx is None else self._cpu_slots[self._cpu()][idx]
+
+    def native_view(self) -> "NativeMapView":
+        # slot selection is thread-dependent: no stable address table
+        raise MapError(
+            f"map {self.name}: percpu_array has no native view")
 
     def aggregate_u64(self, key: int, slot: int = 0) -> int:
         idx = struct.unpack("<I", struct.pack("<I", key))[0]
@@ -782,6 +806,63 @@ class RingView:
     @property
     def drops(self) -> int:
         return self.ring.drops
+
+
+class NativeMapView:
+    """Stable C-ABI view of array-family map storage for the native tier.
+
+    One contiguous **slot directory** per shard — a ``u64[max_entries]``
+    ctypes table holding the base address of every live slot bytearray.
+    Exporting each slot via the buffer protocol pins its backing memory
+    for the map's lifetime (a pinned bytearray cannot be resized, and
+    nothing on the structured surface resizes slots — ``update()`` /
+    ``from_device()`` are same-length slice assignments), so the
+    addresses the directory hands to compiled code stay valid while
+    Python-side tiers keep reading and writing the *same* bytes.  That
+    makes native and host mutations mutually visible with no copying in
+    either direction, preserving the VM's per-slot concurrency model.
+
+    The view is refused for ``value_size < 8`` maps: the VM's
+    ``ema_update`` can *grow* such slots by slice-assigning 8 bytes, and
+    pinning would turn that grow into a ``BufferError`` for every tier
+    sharing the map.  Version tracking: the native tier's exit path
+    increments the map's ``_native_bumps`` cell (one machine add, summed
+    into :attr:`BpfMap.version`), so DeviceBridge caches re-upload
+    exactly as they do for the VM/JIT tiers.
+    """
+
+    def __init__(self, m: BpfMap):
+        if m.kind not in ("array", "perdev_array"):
+            raise MapError(
+                f"map {m.name}: native view requires an array-family map")
+        if m.value_size < 8:
+            raise MapError(
+                f"map {m.name}: native view requires value_size >= 8 "
+                "(sub-8-byte slots can be grown by ema_update)")
+        self.map = m
+        with m.lock:
+            shards = m._dev_slots if isinstance(m, PerDeviceArrayMap) \
+                else [m._slots]
+            # exports pin slot buffers (block resize) and keep them alive
+            self._exports = [
+                [(ctypes.c_ubyte * len(s)).from_buffer(s) for s in shard]
+                for shard in shards]
+            self._dirs = [
+                (ctypes.c_uint64 * len(exps))(
+                    *[ctypes.addressof(e) for e in exps])
+                for exps in self._exports]
+            self.dir_addrs = tuple(ctypes.addressof(d) for d in self._dirs)
+
+    def dir_addr(self, shard: int = 0) -> int:
+        """Address of the slot directory for ``shard``."""
+        return self.dir_addrs[shard]
+
+    def slot_addr(self, idx: int, shard: Optional[int] = None) -> int:
+        """Address of slot ``idx``'s value bytes (current shard default)."""
+        if shard is None:
+            shard = self.map._current \
+                if isinstance(self.map, PerDeviceArrayMap) else 0
+        return self._dirs[shard][idx]
 
 
 MAP_KINDS = {

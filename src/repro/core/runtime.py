@@ -269,7 +269,7 @@ class PolicyRuntime:
     compiler the tier selects.  ``use_interpreter=True`` is the legacy
     spelling of ``tier="interp"``."""
 
-    TIERS = ("jit", "interp", "jaxc", "pallas", "pallas32")
+    TIERS = ("jit", "interp", "jaxc", "pallas", "pallas32", "native")
 
     def __init__(self, *, use_interpreter: bool = False,
                  tier: Optional[str] = None,
@@ -278,6 +278,11 @@ class PolicyRuntime:
                  breaker: Optional[BreakerConfig] = None):
         if tier is None:
             tier = "interp" if use_interpreter else "jit"
+        if tier == "auto":
+            # fastest available host tier: machine code when the box has
+            # a toolchain, else the v2 JIT closure
+            from .cc import have_cc
+            tier = "native" if have_cc() else "jit"
         if tier not in self.TIERS:
             raise ValueError(f"unknown tier {tier!r}; valid tiers: "
                              f"{', '.join(self.TIERS)}")
@@ -865,6 +870,20 @@ class PolicyRuntime:
                 from .pallasc import compile_host
                 fn = compile_host(program, resolved, vinfo, tier=self.tier,
                                   sync=self.bridge_sync)
+            elif self.tier == "native":
+                # machine code via the system toolchain; same verifier
+                # artifacts, third consumer.  Hosts without a compiler
+                # fall back to the v2 JIT closure — the tier degrades,
+                # it never rejects a program the JIT would accept
+                from .cc import compile_native, have_cc
+                if have_cc():
+                    fn = compile_native(
+                        program, resolved, vinfo,
+                        printk=self._printk_log.append)
+                else:
+                    fn = compile_program(program, resolved,
+                                         printk=self._printk_log.append,
+                                         info=vinfo)
             else:
                 # the verifier's region analysis feeds the specializing
                 # (v2) code generator — one static pass pays for both

@@ -21,9 +21,12 @@ from repro.core import faults as faults_mod
 from repro.core.context import Algo, CollType, Proto
 from repro.policies import table1 as T
 
+from repro.core.cc import have_cc
+
 MiB = 1 << 20
 ALL_TIERS = ["interp", "jit", "jaxc", "pallas32"] + \
-    (["pallas"] if have_x64() else [])
+    (["pallas"] if have_x64() else []) + \
+    (["native"] if have_cc() else [])
 
 
 def _decide(disp, size=8 * MiB):

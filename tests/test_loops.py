@@ -648,6 +648,18 @@ def test_loop_policy_identical_across_tiers(pol):
         results[tier] = (ret, bytes(ctx.buf), state)
     assert results["interp"] == results["v1"] == results["v2"]
 
+    from repro.core.cc import have_cc
+    if have_cc():
+        rt = PolicyRuntime(tier="native")
+        lp = rt.load(prog)
+        _seed_maps(rt)
+        ctx = make_ctx("tuner", **ctx_kw)
+        ret = lp.fn(ctx.buf)
+        state = {d.name: [rt.maps.get(d.name).lookup_u64(k)
+                          for k in range(rt.maps.get(d.name).max_entries)]
+                 for d in prog.maps}
+        assert (ret, bytes(ctx.buf), state) == results["interp"]
+
     jax, enable_x64, compile_jax, ctx_to_vec, map_to_array = _jaxc_or_skip()
     rt = PolicyRuntime(use_interpreter=True)
     rt.load(prog)
@@ -734,11 +746,17 @@ def test_random_bounded_loops_identical_across_tiers(seed):
     vinfo = verify_with_info(prog)  # must verify
     assert vinfo.loop_bounds
     buf = make_ctx("tuner", msg_size=1 << 20).buf
-    want = VM(prog.insns, {}).run(bytearray(buf))
+    b0 = bytearray(buf)
+    want = VM(prog.insns, {}).run(b0)
     f1 = compile_program(prog, {}, codegen="v1")
     f2 = compile_program(prog, {}, info=vinfo)
     assert f1(bytearray(buf)) == want
     assert f2(bytearray(buf)) == want
+    from repro.core.cc import compile_native, have_cc
+    if have_cc():
+        bn = bytearray(buf)
+        assert compile_native(prog, {}, vinfo)(bn) == want
+        assert bytes(bn) == bytes(b0)
 
 
 @pytest.mark.parametrize("seed", range(6))
@@ -863,6 +881,44 @@ def test_random_bounded_loops_match_pallas32(seed):
     got_state = [int(got[k, 0, 0]) | (int(got[k, 0, 1]) << 32)
                  for k in range(8)]
     assert got_state == want_state
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_map_loops_match_native(seed):
+    """interp == native on the SAME seeded map-loop programs the pallas
+    legs run: return value, ctx writeback, and map state bit-identical,
+    with in-loop pointer stores landing in live map storage."""
+    from repro.core.cc import compile_native, have_cc
+    from repro.core.maps import MapRegistry
+    if not have_cc():
+        pytest.skip("native tier needs a C toolchain (have_cc)")
+
+    rng = random.Random(0xD00D + seed)
+    prog = _random_map_loop_program(rng)
+    vinfo = verify_with_info(prog)  # must verify
+    assert vinfo.loop_bounds
+    buf = make_ctx("tuner", msg_size=1 << 20).buf
+
+    def seeded_map(rng_seed):
+        reg = MapRegistry()
+        m = reg.create("rand_loop_map", "array", value_size=8,
+                       max_entries=8)
+        r = random.Random(rng_seed)
+        for k in range(8):
+            m.update_u64(k, _bconst(r, 0, 1 << 30) % 2**64)
+        return m
+
+    m_i = seeded_map(seed)
+    b_i = bytearray(buf)
+    want = VM(prog.insns, {"rand_loop_map": m_i}).run(b_i)
+    want_state = [m_i.lookup_u64(k) for k in range(8)]
+
+    m_n = seeded_map(seed)
+    fn = compile_native(prog, {"rand_loop_map": m_n}, vinfo)
+    b_n = bytearray(buf)
+    assert fn(b_n) == want
+    assert bytes(b_n) == bytes(b_i)
+    assert [m_n.lookup_u64(k) for k in range(8)] == want_state
 
 
 # ---------------------------------------------------------------------------

@@ -104,10 +104,11 @@ def _seeded_ctx_kwargs(rng: random.Random) -> dict:
 
 @pytest.mark.parametrize("seed", range(24))
 def test_seeded_six_tier_differential(seed):
-    """interp == v1 == v2 == jaxc == pallas == pallas32 on >= 20 seeded
-    boundary-biased programs (ret AND ctx writeback).  The pallas32 leg
-    runs unconditionally — it needs no x64; the uint64 in-graph legs are
-    included whenever the build's x64 scope works."""
+    """interp == v1 == v2 == jaxc == pallas == pallas32 == native on
+    >= 20 seeded boundary-biased programs (ret AND ctx writeback).  The
+    pallas32 leg runs unconditionally — it needs no x64; the uint64
+    in-graph legs are included whenever the build's x64 scope works, the
+    native leg whenever the host has a C toolchain (have_cc)."""
     from repro.core.lower32 import (compile_jax32, ctx_to_vec32,
                                     ret32_to_int, vec32_to_bytes)
 
@@ -129,6 +130,14 @@ def test_seeded_six_tier_differential(seed):
     fn32, _ = compile_jax32(prog)
     ret32, vec32, _ = fn32(ctx_to_vec32(bytearray(buf0)), {})
     results["pallas32"] = (ret32_to_int(ret32), vec32_to_bytes(vec32))
+
+    # native: compiled machine code, whenever the host has a toolchain
+    from repro.core.cc import compile_native, have_cc
+    if have_cc():
+        from repro.core.verifier import verify_with_info
+        fn_n = compile_native(prog, {}, verify_with_info(prog))
+        b = bytearray(buf0)
+        results["native"] = (fn_n(b), bytes(b))
 
     from repro.compat import enable_x64, have_x64
     if have_x64():
