@@ -18,6 +18,79 @@ N_CALLS = 400_000
 N_THREADS = 4
 
 
+def pallas_reload_section(report=None):
+    """``hot_reload_pallas``: warm ``link.replace()`` on the pallas tier
+    with a hash-map + subroutine policy (the telemetry bucket tuner).
+
+    Asserts the T3 flush contract end-to-end: under ``deferred`` bridge
+    sync the device-resident hash table is NOT visible in host maps
+    between calls, and the first ``link.replace()`` — an attachment
+    boundary — flushes it back, so the successor policy (any tier)
+    starts from the state the outgoing one accumulated.  Also checks
+    the swap stays atomic (one epoch bump per replace, depth-1 chain
+    throughout) and reports warm swap latency.  Reused verbatim as a CI
+    gate by ``benchmarks.run --ci``."""
+    from repro.compat import have_x64
+    from repro.policies.telemetry import bucket_tuner
+
+    rec = {"suite": "hot_reload_pallas", "ok": True}
+    if not have_x64():
+        rec["skipped"] = "jax build lacks a working enable_x64"
+        if report is not None:
+            report("hot_reload", "pallas_link_replace_warm", **rec)
+        return rec
+
+    rt = PolicyRuntime(tier="pallas", bridge_sync="deferred")
+    link = rt.attach(bucket_tuner.program, priority=0)
+
+    def drive(n):
+        for _ in range(n):
+            ctx = make_ctx("tuner", coll_type=0, msg_size=4096, n_ranks=8,
+                           max_channels=32)
+            rt.invoke("tuner", ctx)
+
+    drive(5)
+    m = rt.maps.get("bucket_tune_state")
+    key = (0 << 8) | 12            # bucket_key(coll=0, log2(4096)=12)
+    stale = m.lookup_u64(key)      # deferred sync: host must be stale
+    rec["deferred_host_stale"] = stale is None
+
+    epoch0 = rt.epoch
+    swaps, totals = [], []
+    n_swaps = 10
+    for i in range(n_swaps):
+        prog = (static_override.program if i % 2 == 0
+                else bucket_tuner.program)
+        t0 = time.perf_counter_ns()
+        link.replace(prog)
+        totals.append((time.perf_counter_ns() - t0) / 1e3)
+        swaps.append(rt.stats.swap_ns_last / 1e3)
+        if i == 0:
+            # the first replace is a T3 boundary: the 5 warm-up decisions
+            # (insert count=1, then 4 hash-RMW hits) must have flushed
+            # from device hash state into the host map
+            rec["flushed_count"] = m.lookup_u64(key)
+            rec["flush_at_t3_ok"] = rec["flushed_count"] == 5
+        if prog is bucket_tuner.program:
+            drive(2)
+    # the last drive(2) is still device-resident (deferred sync); an
+    # explicit flush reconciles: 5 warm-up + 5 reattachments x 2 = 15
+    rt.flush_bridges("tuner")
+    rec["final_count"] = m.lookup_u64(key)
+    rec["final_count_ok"] = rec["final_count"] == 15
+    rec["atomic_ok"] = (rt.epoch - epoch0 == n_swaps
+                        and len(rt.chain("tuner")) == 1
+                        and rt.stats.replaces == n_swaps
+                        and rt.stats.flush_failures == 0)
+    rec["swap_us_p50"] = float(np.percentile(swaps, 50))
+    rec["total_replace_us_p50"] = float(np.percentile(totals, 50))
+    rec["ok"] = (rec["deferred_host_stale"] and rec["flush_at_t3_ok"]
+                 and rec["final_count_ok"] and rec["atomic_ok"])
+    if report is not None:
+        report("hot_reload", "pallas_link_replace_warm", **rec)
+    return rec
+
+
 def run(report):
     rt = PolicyRuntime()
     rt.load(static_override.program)
@@ -151,3 +224,6 @@ def run(report):
            epoch_bumps_per_bundle=1,
            note="verify-everything-then-swap-everything: two sections "
                 "(profiler+tuner) republish under a single epoch bump")
+
+    # ---- pallas tier: warm replace of a hash+subroutine policy ----------
+    pallas_reload_section(report)

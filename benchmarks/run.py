@@ -18,9 +18,13 @@ differential (interp == v1 == v2 == jaxc == pallas, zero retraces), the
 ``table1_native_diff`` machine-code differential (native == interp on
 every policy, no eligibility gate), the ``BENCH_table1.json`` writer
 (ns/decision per tier per policy, gating the ISSUE-8 >=5x-median
-native-vs-v2 acceptance), the
+native-vs-v2 acceptance AND the per-policy eligibility audit: zero
+unexplained ineligible policies on any tier at either word width), the
+warm pallas ``link.replace()`` leg (hash + subroutine policy swapped
+in place, T3 flush contract asserted end-to-end), the
 runtime fault-containment matrix (injected faults at every trust
-boundary x every tier must degrade to the cost-model default, never
+boundary — hash RMW and bpf-to-bpf call entry included — x every tier
+must degrade to the cost-model default, never
 escape), then the tier-1 pytest suite; exit status is nonzero if any
 leg fails.
 
@@ -123,6 +127,20 @@ def run_ci() -> int:
         cwd=repo, env=env)
     if r.returncode != 0:
         print("CI: observability export schema FAILED", flush=True)
+        failures += 1
+
+    print("=== ci: pallas warm link.replace (hash + subroutines) ===",
+          flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.hot_reload import pallas_reload_section;"
+         "rec = pallas_reload_section();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: pallas warm link.replace FAILED", flush=True)
         failures += 1
 
     print("=== ci: runtime fault containment ===", flush=True)

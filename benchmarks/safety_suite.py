@@ -40,19 +40,22 @@ def _fault_tiers():
     return tiers
 
 
-def _mk_dispatcher(tier):
+def _mk_dispatcher(tier, policy=None):
     """Runtime + dispatcher tuned for per-call observation: breakers and
     safe mode disabled so every injected fault exercises the per-call
-    fallback path rather than latching."""
+    fallback path rather than latching.  ``policy`` overrides the driven
+    tuner (default: the loop-heavy argmin tuner)."""
     from repro.collectives.dispatch import (CollectiveDispatcher,
                                             DispatchConfig)
     from repro.core import BreakerConfig
     from repro.policies.loops import latency_argmin_tuner
+    pol = policy if policy is not None else latency_argmin_tuner
     rt = PolicyRuntime(tier=tier, breaker=BreakerConfig(enabled=False))
-    rt.load(latency_argmin_tuner.program)
-    m = rt.maps.get("config_lat_map")
-    for k in range(0, m.max_entries, 5):
-        m.update_u64(k, 900 + 13 * k, slot=0)
+    rt.load(pol.program)
+    if "config_lat_map" in rt.maps.names():
+        m = rt.maps.get("config_lat_map")
+        for k in range(0, m.max_entries, 5):
+            m.update_u64(k, 900 + 13 * k, slot=0)
     disp = CollectiveDispatcher(runtime=rt, config=DispatchConfig(
         enable_decision_cache=False, safe_mode_threshold=1 << 30))
     return disp
@@ -82,33 +85,59 @@ def runtime_fault_section() -> dict:
                                 config=DispatchConfig())
     default_key = _decide(base).key()
 
+    def contain_row(name, disp, point, healthy_keys):
+        baseline = set(healthy_keys) | {default_key}
+        escaped = 0
+        bad_domain = 0
+        off_baseline = 0
+        with FaultInjector(seed=7).plan(point, prob=1.0) as inj:
+            for _ in range(8):
+                try:
+                    d = _decide(disp)
+                except Exception:
+                    escaped += 1
+                    continue
+                if (d.algo >= Algo.COUNT or d.proto >= Proto.COUNT
+                        or not 1 <= d.channels <= 32):
+                    bad_domain += 1
+                if d.key() not in baseline:
+                    off_baseline += 1
+            fired = inj.stats()[point]["fires"]
+        ok = escaped == bad_domain == off_baseline == 0
+        rec["rows"].append({
+            "name": name, "fired": fired,
+            "escaped": escaped, "bad_domain": bad_domain,
+            "off_baseline": off_baseline,
+            "fallbacks": disp.fault_stats.total, "ok": ok})
+        rec["ok"] = rec["ok"] and ok
+
+    def healthy_trajectory(mk):
+        """All decision keys a fault-free dispatcher produces across the
+        8-decide run — stateful policies (the telemetry tuner's hash
+        state evolves per decide) legitimately change their decision
+        mid-run, so the containment baseline is the whole trajectory."""
+        disp = mk()
+        return {_decide(disp).key() for _ in range(8)}
+
+    from repro.policies.telemetry import bucket_tuner
     for tier in _fault_tiers():
-        healthy_key = _decide(_mk_dispatcher(tier)).key()
+        healthy = healthy_trajectory(lambda: _mk_dispatcher(tier))
         for point in _MATRIX_POINTS:
-            disp = _mk_dispatcher(tier)
-            escaped = 0
-            bad_domain = 0
-            off_baseline = 0
-            with FaultInjector(seed=7).plan(point, prob=1.0) as inj:
-                for _ in range(8):
-                    try:
-                        d = _decide(disp)
-                    except Exception:
-                        escaped += 1
-                        continue
-                    if (d.algo >= Algo.COUNT or d.proto >= Proto.COUNT
-                            or not 1 <= d.channels <= 32):
-                        bad_domain += 1
-                    if d.key() not in (healthy_key, default_key):
-                        off_baseline += 1
-                fired = inj.stats()[point]["fires"]
-            ok = escaped == bad_domain == off_baseline == 0
-            rec["rows"].append({
-                "name": f"{tier}/{point}", "fired": fired,
-                "escaped": escaped, "bad_domain": bad_domain,
-                "off_baseline": off_baseline,
-                "fallbacks": disp.fault_stats.total, "ok": ok})
-            rec["ok"] = rec["ok"] and ok
+            contain_row(f"{tier}/{point}", _mk_dispatcher(tier), point,
+                        healthy)
+
+        # the tentpole's two new trust-boundary points, driven by the
+        # hash-keyed shared-subroutine telemetry tuner (the argmin tuner
+        # has neither hash maps nor bpf-to-bpf calls).  Host tiers fire
+        # at the Python boundary; in-graph tiers inline calls and lower
+        # hash RMW into the kernel, so their fire counts are 0 by
+        # design — the row still proves decide() stays contained
+        healthy_ht = healthy_trajectory(
+            lambda: _mk_dispatcher(tier, bucket_tuner))
+        for point in ("hash_rmw", "call_fn"):
+            contain_row(f"{tier}/{point}",
+                        _mk_dispatcher(tier, bucket_tuner), point,
+                        healthy_ht)
 
         # hot-reload atomicity: a compile fault during replace() must
         # leave the old chain attached, deciding, and epoch-coherent

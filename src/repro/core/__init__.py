@@ -16,7 +16,8 @@ from .asm import AsmError, assemble
 from .context import (Algo, AxisKind, CollType, PolicyContextValues,
                       ProfEvent, Proto, make_ctx)
 from .faults import FaultInjector, InjectedFault
-from .frontend import CompileError, compile_policy, map_decl, policy
+from .frontend import (CompileError, compile_policy, map_decl, policy,
+                       subroutine)
 from .isa import Insn
 from .maps import ArrayMap, BpfMap, HashMap, MapRegistry, PerCpuArrayMap
 from .program import MapDecl, Program
@@ -29,7 +30,8 @@ __all__ = [
     "AsmError", "assemble", "Algo", "AxisKind", "CollType",
     "PolicyContextValues", "ProfEvent", "Proto", "make_ctx",
     "FaultInjector", "InjectedFault",
-    "CompileError", "compile_policy", "map_decl", "policy", "Insn",
+    "CompileError", "compile_policy", "map_decl", "policy",
+    "subroutine", "Insn",
     "ArrayMap", "BpfMap", "HashMap", "MapRegistry", "PerCpuArrayMap",
     "MapDecl", "Program", "BreakerConfig", "LinkError", "LoadedProgram",
     "PolicyLink", "PolicyRuntime",

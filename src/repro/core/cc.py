@@ -247,12 +247,31 @@ def _direct_eligible(m: BpfMap) -> bool:
     return m.kind in ("array", "perdev_array") and m.value_size >= 8
 
 
+def _fn_table(prog: Program, vinfo) -> List[Tuple[int, List[Insn], object]]:
+    """``(base, insns, fninfo)`` per function — main first, then every
+    ``call_fn`` callee.  ``base`` is a cumulative pc offset so helper
+    call sites stay uniquely keyed across functions (the Python callback
+    dispatches on the *global* pc)."""
+    fns = list(getattr(vinfo, "fns", None) or [vinfo])
+    bodies = [list(prog.insns)] + [list(sp.insns) for sp in prog.subprogs]
+    out: List[Tuple[int, List[Insn], object]] = []
+    base = 0
+    for i, body in enumerate(bodies):
+        out.append((base, body, fns[i]))
+        base += len(body)
+    return out
+
+
 class _CGen:
     def __init__(self, prog: Program, vinfo, resolved: Dict[str, BpfMap]):
         self.prog = prog
         self.vinfo = vinfo
         self.resolved = resolved
-        self.blocks = getattr(vinfo, "cfg", None) or CFG(prog.insns)
+        self.fn_list = _fn_table(prog, vinfo)
+        # per-function emission state (set by generate() for each function)
+        self.base, self.insns, self.fninfo = self.fn_list[0]
+        self.in_sub = False
+        self.blocks = getattr(self.fninfo, "cfg", None) or CFG(self.insns)
         self.lines: List[str] = []
         self.indent = 1
         self._loops: List[Tuple[int, int]] = []
@@ -261,45 +280,57 @@ class _CGen:
             raise NativeCompileError("more than 63 maps (dirty bitmask)")
         self.map_index = {d.name: i for i, d in enumerate(prog.maps)}
         # call sites the callback must serve (all of them: fired mode
-        # routes every helper through Python so fault points fire)
-        self.call_pcs = sorted(pc for pc, insn in enumerate(prog.insns)
-                               if insn.op == "call"
-                               and pc in vinfo.call_map)
-        self.pure = not self.call_pcs
-        # direct maps, in prog.maps order -> arg position
+        # routes every helper through Python so fault points fire),
+        # keyed by global pc across every function
+        self.call_pcs = sorted(
+            base + pc
+            for base, body, fi in self.fn_list
+            for pc, insn in enumerate(body)
+            if insn.op == "call" and pc in fi.call_map)
+        # subprog-bearing programs always take the callback wrapper so the
+        # call_fn fault-injection point stays observable from Python
+        self.pure = not self.call_pcs and not prog.subprogs
+        # direct maps, in call-site order -> Env member position
         self.direct_maps: List[str] = []
-        for pc in self.call_pcs:
-            mname = vinfo.call_map[pc]
-            m = resolved.get(mname) if mname else None
-            if m is not None and _direct_eligible(m) \
-                    and mname not in self.direct_maps:
-                self.direct_maps.append(mname)
+        for base, body, fi in self.fn_list:
+            for pc, insn in enumerate(body):
+                if insn.op != "call" or pc not in fi.call_map:
+                    continue
+                mname = fi.call_map[pc]
+                m = resolved.get(mname) if mname else None
+                if m is not None and _direct_eligible(m) \
+                        and mname not in self.direct_maps:
+                    self.direct_maps.append(mname)
         self.direct_arg = {n: i for i, n in enumerate(self.direct_maps)}
         # prandom lowers to inline xorshift64* against the shared Python
         # PRNG cell (address passed as an argument) unless an injector
         # is armed
         self.uses_prandom = any(
-            insn.op == "call" and pc in vinfo.call_map
+            insn.op == "call" and pc in fi.call_map
             and H.HELPERS[insn.imm].name == "get_prandom_u32"
-            for pc, insn in enumerate(prog.insns))
+            for base, body, fi in self.fn_list
+            for pc, insn in enumerate(body))
         # maps whose dirty bit can be set this program: verified stores
-        # through map-value pointers plus direct update/ema sites.  Each
-        # gets a version-cell argument the exit path bumps with one C
-        # increment — no Python callback on the mutation-report path.
+        # through map-value pointers plus direct update/ema sites, in any
+        # function.  Each gets a version-cell argument the exit path bumps
+        # with one C increment — no Python callback on the mutation-report
+        # path.
         didx = set()
-        for pc, insn in enumerate(prog.insns):
-            if is_store(insn.op):
-                info = vinfo.mem_info.get(pc)
-                if info is not None and info[0] not in ("ctx", "stack") \
-                        and info[1] in self.map_index:
-                    didx.add(self.map_index[info[1]])
-            elif insn.op == "call" and pc in vinfo.call_map:
-                hname = H.HELPERS[insn.imm].name
-                mname = vinfo.call_map[pc]
-                m = resolved.get(mname) if mname else None
-                if hname in ("map_update_elem", "ema_update") \
-                        and m is not None and _direct_eligible(m):
-                    didx.add(self.map_index[mname])
+        for base, body, fi in self.fn_list:
+            for pc, insn in enumerate(body):
+                if is_store(insn.op):
+                    info = fi.mem_info.get(pc)
+                    if info is not None \
+                            and info[0] not in ("ctx", "stack") \
+                            and info[1] in self.map_index:
+                        didx.add(self.map_index[info[1]])
+                elif insn.op == "call" and pc in fi.call_map:
+                    hname = H.HELPERS[insn.imm].name
+                    mname = fi.call_map[pc]
+                    m = resolved.get(mname) if mname else None
+                    if hname in ("map_update_elem", "ema_update") \
+                            and m is not None and _direct_eligible(m):
+                        didx.add(self.map_index[mname])
         self.dirty_idx = sorted(didx)
         self.dirty_maps = [prog.maps[i].name for i in self.dirty_idx]
 
@@ -308,12 +339,14 @@ class _CGen:
         self.lines.append("    " * self.indent + line)
 
     def _exit_stmt(self) -> str:
+        if self.in_sub:
+            return "return r0;"
         return ("return PyLong_FromUnsignedLongLong(r0);" if self.pure
                 else "goto done;")
 
     # ---- expression helpers ----------------------------------------------
     def _dir(self, mname: str) -> str:
-        return f"((u64 *)(uintptr_t)D{self.direct_arg[mname]})"
+        return f"((u64 *)(uintptr_t)E->D{self.direct_arg[mname]})"
 
     def _cond(self, insn: Insn) -> Tuple[str, str]:
         base = jump_base(insn.op)
@@ -344,6 +377,9 @@ class _CGen:
             return
         if op == "call":
             self._emit_call(pc, insn)
+            return
+        if op == "call_fn":
+            self._emit_call_fn(pc, insn)
             return
         if is_alu(op):
             self._emit_alu(insn)
@@ -409,7 +445,7 @@ class _CGen:
             raise AssertionError(base)
 
     def _emit_load(self, pc: int, insn: Insn) -> None:
-        if self.vinfo.mem_info.get(pc) is None:
+        if self.fninfo.mem_info.get(pc) is None:
             self.w(f"r{insn.dst} = 0; /* unreachable */")
             return
         n = mem_size(insn.op)
@@ -419,7 +455,7 @@ class _CGen:
                f"r{insn.dst} = _t; }}")
 
     def _emit_store(self, pc: int, insn: Insn) -> None:
-        info = self.vinfo.mem_info.get(pc)
+        info = self.fninfo.mem_info.get(pc)
         if info is None:
             self.w("; /* unreachable store */")
             return
@@ -432,13 +468,16 @@ class _CGen:
         # the verifier proved which map this store writes through; flag it
         # so the exit-path callback bumps the content version
         if info[0] not in ("ctx", "stack") and info[1] in self.map_index:
-            self.w(f"dirty |= {_u64c(1 << self.map_index[info[1]])};")
+            self.w(f"E->dirty |= {_u64c(1 << self.map_index[info[1]])};")
 
     # ---- helper calls -----------------------------------------------------
     def _cb(self, pc: int) -> List[str]:
+        # pc is function-local: the callback dispatches on base + pc so
+        # sites in different functions never collide
+        gpc = self.base + pc
         return [
-            f"{{ PyObject *_res = PyObject_CallFunction(cb, \"KKKKKK\", "
-            f"(u64){pc}ULL, r1, r2, r3, r4, r5);",
+            f"{{ PyObject *_res = PyObject_CallFunction(E->cb, \"KKKKKK\", "
+            f"(u64){gpc}ULL, r1, r2, r3, r4, r5);",
             "  if (_res == NULL) goto fail;",
             "  r0 = PyLong_AsUnsignedLongLong(_res); Py_DECREF(_res);",
             "  if (r0 == (u64)-1 && PyErr_Occurred()) goto fail; }",
@@ -451,7 +490,7 @@ class _CGen:
     def _emit_fired_gate(self, pc: int, direct: List[str]) -> None:
         """`if (fired) { python path } else { direct path }` — fault
         injection needs every helper observable from Python."""
-        self.w("if (fired) {")
+        self.w("if (E->fired) {")
         self.indent += 1
         self._emit_cb(pc)
         self.indent -= 1
@@ -462,10 +501,25 @@ class _CGen:
         self.indent -= 1
         self.w("}")
 
+    def _emit_call_fn(self, pc: int, insn: Insn) -> None:
+        """bpf-to-bpf call: a sibling static C function with its own
+        frame.  In fired mode the Python callback runs first so the
+        call-entry fault point is observable (it may raise); the native
+        call then produces the real result."""
+        w = self.w
+        w("if (E->fired) {")
+        self.indent += 1
+        self._emit_cb(pc)
+        self.indent -= 1
+        w("}")
+        w(f"r0 = bpf_fn{insn.imm}(E, r1, r2, r3, r4, r5);")
+        w("if (E->err) goto fail;")
+        w("r1 = 0; r2 = 0; r3 = 0; r4 = 0; r5 = 0;")
+
     def _emit_call(self, pc: int, insn: Insn) -> None:
         h = H.HELPERS[insn.imm]
         w = self.w
-        if pc not in self.vinfo.call_map:
+        if pc not in self.fninfo.call_map:
             w("r0 = 0; /* unreachable call */")
             return
         name = h.name
@@ -480,7 +534,7 @@ class _CGen:
             # stream.  Bits 32..63 of the low-64 product equal the same
             # bits of Python's full-width product — return identical.
             self._emit_fired_gate(pc, [
-                "{ u64 *_ps = (u64 *)(uintptr_t)PR; u64 _x = *_ps;",
+                "{ u64 *_ps = (u64 *)(uintptr_t)E->PR; u64 _x = *_ps;",
                 "  _x ^= _x >> 12; _x ^= _x << 25; _x ^= _x >> 27;",
                 "  *_ps = _x;",
                 "  r0 = (_x * 0x2545F4914F6CDD1DULL >> 32) "
@@ -488,7 +542,7 @@ class _CGen:
         elif name == "trace_printk":
             self._emit_cb(pc)
         else:
-            mname = self.vinfo.call_map[pc]
+            mname = self.fninfo.call_map[pc]
             m = self.resolved.get(mname) if mname else None
             if m is None or not _direct_eligible(m):
                 self._emit_cb(pc)
@@ -534,7 +588,7 @@ class _CGen:
     # ---- block/terminator emission ---------------------------------------
     def _block_term(self, bi: int):
         start, end = self.blocks.ranges[bi]
-        insns = self.prog.insns
+        insns = self.insns
         last = insns[end - 1]
         body_end = end - 1 if (last.op in ("exit", "ja")
                                or is_jump_cond(last.op)) else end
@@ -676,8 +730,14 @@ class _CGen:
                 self.w(jump(f))
 
     # ---- whole-function assembly -----------------------------------------
-    def generate(self) -> Tuple[str, bool]:
-        """Return (source with @MOD@ placeholder, structured?)."""
+    def _gen_fn_body(self, fn_idx: int) -> Tuple[List[str], bool]:
+        """Emit one function's body into fresh lines (structured when the
+        shape allows, goto skeleton otherwise)."""
+        self.base, self.insns, self.fninfo = self.fn_list[fn_idx]
+        self.in_sub = fn_idx > 0
+        self.blocks = getattr(self.fninfo, "cfg", None) or CFG(self.insns)
+        self.lines = []
+        self.indent = 1
         structured = True
         try:
             self.emit_structured()
@@ -686,7 +746,37 @@ class _CGen:
             self.indent = 1
             structured = False
             self.emit_goto()
-        body = self.lines
+        return self.lines, structured
+
+    def _sub_sig(self, i: int) -> str:
+        return (f"static u64 bpf_fn{i}(Env *E, u64 r1, u64 r2, u64 r3, "
+                "u64 r4, u64 r5)")
+
+    def generate(self) -> Tuple[str, bool]:
+        """Return (source with @MOD@ placeholder, structured?)."""
+        structured = True
+        subs_text: List[str] = []
+        # callees first (index 1+ in fn_list); forward-declared so any
+        # DAG order of call_fn targets links
+        for i in range(len(self.prog.subprogs)):
+            body_i, st = self._gen_fn_body(1 + i)
+            structured = structured and st
+            subs_text += [
+                self._sub_sig(i) + " {",
+                "    u64 r0 = 0, r6 = 0, r7 = 0, r8 = 0, r9 = 0;",
+                f"    unsigned char fr[{STACK_SIZE}];",
+                f"    u64 r10 = (u64)(uintptr_t)(fr + {STACK_SIZE});",
+            ] + body_i + [
+                # helper-callback failure inside a callee: flag the shared
+                # Env and unwind; every call_fn site checks E->err
+                "fail:",
+                "    E->err = 1;",
+                "    return 0;",
+                "}",
+                "",
+            ]
+        body, st = self._gen_fn_body(0)
+        structured = structured and st
 
         nd = len(self.direct_maps)
         nv = len(self.dirty_idx)
@@ -701,6 +791,22 @@ class _CGen:
             "typedef unsigned long long u64;",
             "",
         ]
+        if not self.pure:
+            # shared per-invocation bindings, threaded through bpf-to-bpf
+            # calls so callees reach the callback / dirty mask / slot
+            # directories without globals (reentrant by construction)
+            members = ["long fired;", "PyObject *cb;", "u64 dirty;",
+                       "int err;"]
+            members += [f"u64 D{i};" for i in range(nd)]
+            if self.uses_prandom:
+                members.append("u64 PR;")
+            head += ["typedef struct { " + " ".join(members) + " } Env;",
+                     ""]
+            head += [self._sub_sig(i) + ";"
+                     for i in range(len(self.prog.subprogs))]
+            if self.prog.subprogs:
+                head.append("")
+        head += subs_text
         pro: List[str] = []
         if self.pure:
             head += ["static PyObject *bpf_run(PyObject *self, "
@@ -720,19 +826,21 @@ class _CGen:
                     "return NULL; }",
                     "    u64 r1 = (u64)(uintptr_t)PyByteArray_AS_STRING"
                     "(args[0]);",
-                    "    long fired = PyLong_AsLong(args[1]);"]
+                    "    Env _env; Env *E = &_env;",
+                    "    E->dirty = 0; E->err = 0;",
+                    "    E->fired = PyLong_AsLong(args[1]);"]
             for i in range(nd):
-                pro.append(f"    u64 D{i} = PyLong_AsUnsignedLongLong"
+                pro.append(f"    E->D{i} = PyLong_AsUnsignedLongLong"
                            f"(args[{2 + i}]);")
             for j in range(nv):
                 pro.append(f"    u64 V{j} = PyLong_AsUnsignedLongLong"
                            f"(args[{2 + nd + j}]);")
             if self.uses_prandom:
-                pro.append("    u64 PR = PyLong_AsUnsignedLongLong"
+                pro.append("    E->PR = PyLong_AsUnsignedLongLong"
                            f"(args[{2 + nd + nv}]);")
-            pro += [f"    PyObject *cb = args[{2 + nd + nv + npr}];",
-                    "    u64 dirty = 0;",
-                    "    if (fired == -1 && PyErr_Occurred()) return NULL;"]
+            pro += [f"    E->cb = args[{2 + nd + nv + npr}];",
+                    "    if (E->fired == -1 && PyErr_Occurred()) "
+                    "return NULL;"]
         pro += ["    u64 r0 = 0, r2 = 0, r3 = 0, r4 = 0, r5 = 0, "
                 "r6 = 0, r7 = 0, r8 = 0, r9 = 0;",
                 f"    unsigned char fr[{STACK_SIZE}];",
@@ -741,7 +849,7 @@ class _CGen:
         if not self.pure:
             # one machine increment per mutated map — the whole
             # mutation-report path, on success AND on helper failure
-            bumps = [f"    if (dirty & {_u64c(1 << idx)}) "
+            bumps = [f"    if (E->dirty & {_u64c(1 << idx)}) "
                      f"++*(u64 *)(uintptr_t)V{j};"
                      for j, idx in enumerate(self.dirty_idx)]
             tail += (["done:"] + bumps
@@ -794,16 +902,30 @@ def _make_handlers(prog: Program, vinfo, resolved: Dict[str, BpfMap],
                    views: Dict[str, object],
                    ka_get: Callable[[], list]) -> Dict[int, Callable]:
     """Per-call-site Python handlers: exact VM helper semantics, fire
-    points included, addresses in place of Ptr objects."""
+    points included, addresses in place of Ptr objects.  Keys are global
+    pcs (function base + local pc) so sites in call_fn callees never
+    collide with main's."""
     fire = _faults.fire
     string_at = ctypes.string_at
     handlers: Dict[int, Callable] = {}
 
-    for pc, insn in enumerate(prog.insns):
-        if insn.op != "call" or pc not in vinfo.call_map:
+    for base, body, fi in _fn_table(prog, vinfo):
+      for pc, insn in enumerate(body):
+        if insn.op == "call_fn":
+            # call-entry fault point: the C side invokes this before the
+            # native call when an injector is armed (fired mode); a raise
+            # here contains exactly like the VM's call_fn fire
+            spname = prog.subprogs[insn.imm].name
+
+            def h(r1, r2, r3, r4, r5, _n=spname):
+                fire("call_fn", _n)
+                return 0
+            handlers[base + pc] = h
+            continue
+        if insn.op != "call" or pc not in fi.call_map:
             continue
         hname = H.HELPERS[insn.imm].name
-        mname = vinfo.call_map[pc]
+        mname = fi.call_map[pc]
         m = resolved.get(mname) if mname else None
 
         if hname == "ktime_get_ns":
@@ -854,6 +976,8 @@ def _make_handlers(prog: Program, vinfo, resolved: Dict[str, BpfMap],
         elif hname == "map_update_elem":
             def h(r1, r2, r3, r4, r5, m=m, ks=m.key_size, vs=m.value_size):
                 fire("helper", "map_update_elem")
+                if m.kind == "hash":
+                    fire("hash_rmw", m.name)
                 return m.update(string_at(r2, ks), string_at(r3, vs)) & M64
         elif hname == "map_delete_elem":
             def h(r1, r2, r3, r4, r5, m=m, ks=m.key_size):
@@ -863,6 +987,8 @@ def _make_handlers(prog: Program, vinfo, resolved: Dict[str, BpfMap],
             def h(r1, r2, r3, r4, r5, m=m, ks=m.key_size):
                 fire("helper", "ema_update")
                 fire("map_rmw", m.name)
+                if m.kind == "hash":
+                    fire("hash_rmw", m.name)
                 key = string_at(r2, ks)
                 w = r4 if r4 > 1 else 1
                 with m.lock:    # lock-held RMW (maps.py mutation contract)
@@ -893,7 +1019,7 @@ def _make_handlers(prog: Program, vinfo, resolved: Dict[str, BpfMap],
                 return m.discard() & M64
         else:  # pragma: no cover — helper table is closed
             raise NativeCompileError(f"no handler for helper {hname}")
-        handlers[pc] = h
+        handlers[base + pc] = h
     return handlers
 
 
@@ -906,16 +1032,17 @@ def get_meta(fn) -> Dict[str, object]:
 
 
 def _needs_keepalive(prog: Program, vinfo, resolved, views) -> bool:
-    for pc, insn in enumerate(prog.insns):
-        if insn.op != "call" or pc not in vinfo.call_map:
-            continue
-        hname = H.HELPERS[insn.imm].name
-        if hname == "ringbuf_reserve":
-            return True
-        if hname == "map_lookup_elem":
-            mname = vinfo.call_map[pc]
-            if mname and mname not in views:
+    for base, body, fi in _fn_table(prog, vinfo):
+        for pc, insn in enumerate(body):
+            if insn.op != "call" or pc not in fi.call_map:
+                continue
+            hname = H.HELPERS[insn.imm].name
+            if hname == "ringbuf_reserve":
                 return True
+            if hname == "map_lookup_elem":
+                mname = fi.call_map[pc]
+                if mname and mname not in views:
+                    return True
     return False
 
 

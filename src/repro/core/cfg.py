@@ -259,3 +259,23 @@ class CFG:
             else:
                 a = self.ipdom[a]
         return a
+
+
+# ---- multi-function programs ----------------------------------------------
+# ``call_fn`` is a plain non-terminator (control always returns to the
+# next insn), so a bpf-to-bpf program is a *forest* of single-entry CFGs
+# — one per function — and the inter-function structure (call graph,
+# recursion/depth checks) lives in the verifier, not here.
+
+def program_cfgs(prog) -> List[CFG]:
+    """One CFG per function of a Program: index 0 is main, index
+    ``1 + i`` is ``prog.subprogs[i]`` (i.e. ``call_fn`` operand + 1)."""
+    out = [CFG(list(prog.insns))]
+    out.extend(CFG(list(sp.insns)) for sp in getattr(prog, "subprogs", ()))
+    return out
+
+
+def call_sites(insns: List[Insn]) -> List[Tuple[int, int]]:
+    """(pc, subprog index) of every ``call_fn`` in one function body."""
+    return [(pc, insn.imm) for pc, insn in enumerate(insns)
+            if insn.op == "call_fn"]

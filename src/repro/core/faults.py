@@ -25,6 +25,10 @@ points (``POINTS``):
 
 ``helper``           entering any helper from VM or JIT'd code
 ``map_rmw``          lock-held map read-modify-write (``ema_update``)
+``hash_rmw``         hash-table insert-or-update (``map_update_elem`` /
+                     ``ema_update`` against a hash map; detail is the
+                     map name)
+``call_fn``          bpf-to-bpf call entry (detail is the callee name)
 ``bridge_upload``    DeviceBridge host->device dirty-map upload
 ``bridge_download``  DeviceBridge device->host writeback
 ``bridge_flush``     DeviceBridge flush at a T3 boundary
@@ -46,6 +50,8 @@ from typing import Dict, Optional, Type
 POINTS = (
     "helper",
     "map_rmw",
+    "hash_rmw",
+    "call_fn",
     "bridge_upload",
     "bridge_download",
     "bridge_flush",

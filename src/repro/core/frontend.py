@@ -23,6 +23,13 @@ Supported subset (anything else -> CompileError):
 * ringbuf ops: ``e = rb.reserve()`` (NULL-checked like lookup);
   ``rb.submit()``; ``rb.discard()``
 * helpers: ``ktime_get_ns()``, ``prandom_u32()``
+* subroutines (bpf-to-bpf calls): ``def`` statements nested in the
+  policy body, and module-level functions marked ``@subroutine``,
+  compile into callee subprograms invoked via ``call_fn``.  Up to 5
+  scalar parameters, one scalar return; callees get a fresh 512-byte
+  frame and may use maps, but have no ctx (pass fields as arguments).
+  Like map ops, calls appear only as statements or simple-assignment
+  right-hand sides (``x = f(a, b)`` / ``return f(a)``)
 
 Semantics note: all arithmetic/comparison is **unsigned 64-bit** (eBPF
 default).  Names that resolve to integers in the function's globals are
@@ -38,7 +45,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .helpers import HELPER_IDS
 from .isa import Insn, STACK_SIZE
-from .program import MapDecl, Program
+from .maps import MAP_KINDS
+from .program import MapDecl, Program, SubProgram
 from .verifier import LOOP_FUEL_CAP as _LOOP_FUEL_CAP
 
 M64 = (1 << 64) - 1
@@ -54,9 +62,24 @@ def map_decl(name: str, *, kind: str = "array", key_size: int = 4,
     """Declare a map.  ``shared=True`` pins it into the registry's
     cross-plugin namespace at load time, so other programs (and host-side
     tooling) can reach the same state by name."""
+    if kind not in MAP_KINDS:
+        raise CompileError(
+            f"map {name!r}: unknown map kind {kind!r}; valid kinds: "
+            f"{', '.join(sorted(MAP_KINDS))}")
     if kind not in ("hash", "lru_hash"):
         key_size = 4
     return MapDecl(name, kind, key_size, value_size, max_entries, shared)
+
+
+def subroutine(fn):
+    """Mark a module-level function as a bpf-to-bpf callee.
+
+    Any policy that calls it (directly or through another subroutine)
+    compiles it into a :class:`SubProgram` invoked via ``call_fn`` —
+    one shared verified body per program instead of duplicated inline
+    bytecode.  Scalar params (max 5), scalar return, no ctx."""
+    fn._bpf_subroutine = True
+    return fn
 
 
 _CMP_OPS = {
@@ -89,7 +112,9 @@ class _Label:
 class _Compiler(ast.NodeVisitor):
     def __init__(self, fn_ast: ast.FunctionDef, section: str,
                  maps: List[MapDecl], consts: Dict[str, int],
-                 map_aliases: Dict[str, str] = None):
+                 map_aliases: Dict[str, str] = None,
+                 subprogs: Dict[str, Tuple[int, int]] = None,
+                 params: Optional[List[str]] = None):
         from .context import CTX_TYPES
         self.section = section
         self.ctx_type = CTX_TYPES[section]
@@ -101,20 +126,29 @@ class _Compiler(ast.NodeVisitor):
                 self.maps.setdefault(var, self.maps[mname])
         self.consts = consts
         self.fn = fn_ast
+        # subroutine name -> (subprog index, n_args)
+        self.subprogs: Dict[str, Tuple[int, int]] = subprogs or {}
 
         self.insns: List[object] = []      # Insn | ("jmp", op, dst, src/imm, label)
         self.scalars: Dict[str, int] = {}  # local name -> stack offset (fp-rel)
         self._loop_slots: Dict[str, int] = {}  # counter slots kept for reuse
         self._active_loops: set = set()        # loop vars currently live
+        self._call_parks: List[int] = []   # arg spill slots, reused per site
         self.ptrs: Dict[str, int] = {}     # local name -> callee-saved reg
         self.ptr_regs = list(_PTR_REGS)
         self.sp = 0                        # bytes of stack used (scratch grows down)
         self.ctx_reg: Optional[int] = None
 
         args = fn_ast.args.args
-        if len(args) != 1:
-            raise CompileError("policy must take exactly one argument (ctx)")
-        self.ctx_name = args[0].arg
+        if params is None:
+            if len(args) != 1:
+                raise CompileError("policy must take exactly one argument (ctx)")
+            self.ctx_name: Optional[str] = args[0].arg
+            self.params: Optional[List[str]] = None
+        else:
+            # subprogram mode: scalar params arrive in r1..rN, no ctx
+            self.ctx_name = None
+            self.params = list(params)
 
     # ---- low-level emission -------------------------------------------------
     def emit(self, op: str, dst: int = 0, src: int = 0, off: int = 0,
@@ -143,6 +177,14 @@ class _Compiler(ast.NodeVisitor):
         # keep ctx pointer in a callee-saved register (r1 is clobbered by calls)
         self.ctx_reg = self.ptr_regs.pop()
         self.emit("mov64", dst=self.ctx_reg, src=1)
+
+    def _args_setup(self) -> None:
+        # subprogram prologue: spill the scalar args r1..rN to stack
+        # slots so the body's temp registers (r2-r5) stay free
+        for i, name in enumerate(self.params, start=1):
+            slot = self.alloc_stack(8)
+            self.scalars[name] = slot
+            self.emit("stxdw", dst=10, src=i, off=slot - STACK_SIZE)
 
     # ---- expression compilation ----------------------------------------------
     def eval_expr(self, node: ast.AST, dst: int, temps: List[int]) -> None:
@@ -174,6 +216,10 @@ class _Compiler(ast.NodeVisitor):
                 f = self._ctx_field(node.attr)
                 self.emit("ldxdw", dst=dst, src=self.ctx_reg, off=f.offset)
                 return
+            if self.ctx_name is None:
+                raise CompileError(
+                    "subroutines have no ctx; pass the fields you need "
+                    "as scalar arguments from the caller")
             raise CompileError("only ctx.<field> attribute access is supported")
         if isinstance(node, ast.Subscript):
             base = node.value
@@ -257,9 +303,48 @@ class _Compiler(ast.NodeVisitor):
             if dst != 0:
                 self.emit("mov64", dst=dst, src=0)
             return
+        if fname in self.subprogs:
+            raise CompileError(
+                f"subroutine call {fname}() must be a statement or a "
+                "simple-assignment right-hand side (`x = f(...)`); split "
+                "the enclosing expression into locals")
         raise CompileError(
             f"call to {fname!r} not allowed here (map ops must be statements "
             "or simple-assignment right-hand sides)")
+
+    # ---- bpf-to-bpf calls ------------------------------------------------------
+    def _is_subcall(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in self.subprogs)
+
+    def _park_slot(self, i: int) -> int:
+        # arg spill slots are reused across call sites: each call parks
+        # its args, then immediately loads them into r1..rN
+        while len(self._call_parks) <= i:
+            self._call_parks.append(self.alloc_stack(8))
+        return self._call_parks[i]
+
+    def _emit_subcall(self, node: ast.Call) -> None:
+        """Compile ``f(a, b)`` against a known subroutine: park each
+        argument on the stack, load the parks into r1..rN, emit
+        ``call_fn``.  The result lands in r0 (r1-r5 are clobbered), so
+        callers must consume r0 immediately."""
+        fname = node.func.id
+        idx, n_args = self.subprogs[fname]
+        if node.keywords or len(node.args) != n_args:
+            raise CompileError(
+                f"subroutine {fname}() takes {n_args} positional "
+                f"argument(s); got {len(node.args)}"
+                + (" plus keywords" if node.keywords else ""))
+        for k, a in enumerate(node.args):
+            off = self._park_slot(k)
+            self.eval_expr(a, _TEMP_REGS[0], _TEMP_REGS[1:])
+            self.emit("stxdw", dst=10, src=_TEMP_REGS[0],
+                      off=off - STACK_SIZE)
+        for k in range(n_args):
+            self.emit("ldxdw", dst=1 + k, src=10,
+                      off=self._park_slot(k) - STACK_SIZE)
+        self.emit("call_fn", imm=idx)
 
     def _const_of(self, node: ast.AST) -> Optional[int]:
         if isinstance(node, ast.Constant) and isinstance(node.value, (int, bool)):
@@ -380,6 +465,8 @@ class _Compiler(ast.NodeVisitor):
         if isinstance(stmt, ast.Return):
             if stmt.value is None:
                 self._load_const(0, 0)
+            elif self._is_subcall(stmt.value):
+                self._emit_subcall(stmt.value)   # result is already in r0
             else:
                 self.eval_expr(stmt.value, 0, _TEMP_REGS)
             self.emit("exit")
@@ -578,6 +665,21 @@ class _Compiler(ast.NodeVisitor):
                 self.ptrs[name] = self.ptr_regs.pop()
             self.emit("mov64", dst=self.ptrs[name], src=0)
             return
+        # scalar-producing RHS: subroutine call f(a, b)
+        if self._is_subcall(value):
+            if not isinstance(tgt, ast.Name):
+                raise CompileError(
+                    "subroutine results must bind a simple name")
+            name = tgt.id
+            if name in self.ptrs:
+                raise CompileError(
+                    f"{name!r} already holds a map-value pointer")
+            if name not in self.scalars:
+                self.scalars[name] = self.alloc_stack(8)
+            self._emit_subcall(value)
+            self.emit("stxdw", dst=10, src=0,
+                      off=self.scalars[name] - STACK_SIZE)
+            return
         if isinstance(tgt, ast.Name):
             name = tgt.id
             if name in self.ptrs:
@@ -596,6 +698,10 @@ class _Compiler(ast.NodeVisitor):
                 self.emit("stxdw", dst=self.ctx_reg, src=_TEMP_REGS[0],
                           off=f.offset)
                 return
+            if self.ctx_name is None:
+                raise CompileError(
+                    "subroutines have no ctx; return the value and let "
+                    "the caller store it")
             raise CompileError("only ctx.<field> attribute stores supported")
         if isinstance(tgt, ast.Subscript):
             base = tgt.value
@@ -611,6 +717,9 @@ class _Compiler(ast.NodeVisitor):
     def _compile_call_stmt(self, node: ast.AST) -> None:
         if not isinstance(node, ast.Call):
             raise CompileError("expression statements must be calls")
+        if self._is_subcall(node):
+            self._emit_subcall(node)   # result in r0, discarded
+            return
         if isinstance(node.func, ast.Attribute):
             decl = self._map_of(node.func.value)
             meth = node.func.attr
@@ -711,21 +820,83 @@ class _Compiler(ast.NodeVisitor):
         return out
 
 
+def _fn_ast_of(fn) -> Tuple[str, ast.FunctionDef]:
+    src = textwrap.dedent(inspect.getsource(fn))
+    tree = ast.parse(src)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == fn.__name__:
+            return src, node
+    raise CompileError(f"could not find function {fn.__name__}")
+
+
+def _resolve_subroutine(name: str, env: Dict, owner):
+    """The function ``name`` refers to at a call site inside ``owner``,
+    if it is marked ``@subroutine``; else None."""
+    val = env.get(name)
+    if val is None and getattr(owner, "__closure__", None):
+        for fv, cell in zip(owner.__code__.co_freevars, owner.__closure__):
+            if fv == name:
+                try:
+                    val = cell.cell_contents
+                except ValueError:
+                    pass
+                break
+    if callable(val) and getattr(val, "_bpf_subroutine", False):
+        return val
+    return None
+
+
+def _collect_subroutines(fn, fn_ast: ast.FunctionDef):
+    """Subprogram specs ``(name, FunctionDef, defining fn or None)`` in
+    discovery order: ``def``s nested in the policy body first (compiled
+    in the policy's const/alias environment), then module-level
+    ``@subroutine`` functions reached transitively through call sites
+    (each compiled in its own module's environment)."""
+    subs: List[Tuple[str, ast.FunctionDef, Optional[object]]] = []
+    seen = set()
+    for s in fn_ast.body:
+        if isinstance(s, ast.FunctionDef):
+            subs.append((s.name, s, None))
+            seen.add(s.name)
+    work = [(fn_ast, getattr(fn, "__globals__", {}), fn)]
+    while work:
+        t, env, owner = work.pop()
+        for node in ast.walk(t):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)):
+                continue
+            nm = node.func.id
+            if nm in seen:
+                continue
+            sub_fn = _resolve_subroutine(nm, env, owner)
+            if sub_fn is None:
+                continue
+            _, fa = _fn_ast_of(sub_fn)
+            seen.add(nm)
+            subs.append((nm, fa, sub_fn))
+            work.append((fa, getattr(sub_fn, "__globals__", {}), sub_fn))
+    return subs
+
+
+def _check_sub_signature(nm: str, fa: ast.FunctionDef) -> None:
+    a = fa.args
+    if a.vararg or a.kwarg or a.kwonlyargs or a.defaults or a.posonlyargs:
+        raise CompileError(
+            f"subroutine {nm!r}: only plain positional parameters are "
+            "supported (no defaults, *args, **kwargs, keyword-only)")
+    if len(a.args) > 5:
+        raise CompileError(
+            f"subroutine {nm!r} takes {len(a.args)} parameters; "
+            "bpf-to-bpf calls pass at most 5 (r1..r5)")
+
+
 def compile_policy(fn, *, section: str, maps: List[MapDecl] = (),
                    extra_consts: Optional[Dict[str, int]] = None) -> Program:
     """Compile a restricted-Python function into a Program (NOT yet verified)."""
-    src = textwrap.dedent(inspect.getsource(fn))
-    tree = ast.parse(src)
-    fn_ast = None
-    for node in ast.walk(tree):
-        if isinstance(node, ast.FunctionDef) and node.name == fn.__name__:
-            fn_ast = node
-            break
-    if fn_ast is None:
-        raise CompileError(f"could not find function {fn.__name__}")
+    src, fn_ast = _fn_ast_of(fn)
+    g = getattr(fn, "__globals__", {})
 
     consts: Dict[str, int] = {}
-    g = getattr(fn, "__globals__", {})
     for name, val in list(g.items()):
         if isinstance(val, (int, bool)) and not name.startswith("__"):
             consts[name] = int(val)
@@ -753,12 +924,46 @@ def compile_policy(fn, *, section: str, maps: List[MapDecl] = (),
             except ValueError:
                 pass
 
-    c = _Compiler(fn_ast, section, list(maps), consts, map_aliases=aliases)
+    # bpf-to-bpf subprograms: nested defs + module-level @subroutine fns
+    sub_specs = _collect_subroutines(fn, fn_ast)
+    subprog_ids: Dict[str, Tuple[int, int]] = {}
+    for i, (nm, fa, _) in enumerate(sub_specs):
+        _check_sub_signature(nm, fa)
+        subprog_ids[nm] = (i, len(fa.args.args))
+    consts_snapshot = dict(consts)
+
+    main_body = [s for s in fn_ast.body if not isinstance(s, ast.FunctionDef)]
+    c = _Compiler(fn_ast, section, list(maps), consts, map_aliases=aliases,
+                  subprogs=subprog_ids)
     c._ctx_setup()
-    c.compile_body(fn_ast.body)
+    c.compile_body(main_body)
     insns = c.finalize()
+
+    subprogs = []
+    for nm, fa, sub_fn in sub_specs:
+        if sub_fn is None:
+            # nested def: shares the policy's consts and map aliases
+            sub_consts, sub_aliases = dict(consts_snapshot), dict(aliases)
+        else:
+            # module-level @subroutine: its own module's environment
+            sg = getattr(sub_fn, "__globals__", {})
+            sub_consts = {n: int(v) for n, v in list(sg.items())
+                          if isinstance(v, (int, bool))
+                          and not n.startswith("__")}
+            if extra_consts:
+                sub_consts.update(extra_consts)
+            sub_aliases = {n: v.name for n, v in list(sg.items())
+                           if isinstance(v, MapDecl)}
+        sc = _Compiler(fa, section, list(maps), sub_consts,
+                       map_aliases=sub_aliases, subprogs=subprog_ids,
+                       params=[a.arg for a in fa.args.args])
+        sc._args_setup()
+        sc.compile_body(fa.body)
+        subprogs.append(SubProgram(nm, tuple(sc.finalize()),
+                                   n_args=len(fa.args.args)))
+
     return Program(name=fn.__name__, section=section, insns=insns,
-                   maps=tuple(maps), source=src)
+                   maps=tuple(maps), source=src, subprogs=tuple(subprogs))
 
 
 def policy(*, section: str, maps: List[MapDecl] = (),

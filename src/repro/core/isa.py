@@ -79,11 +79,14 @@ STORE_REG_OPS = {f"stx{sz}": n for sz, n in MEM_SIZES.items()}
 STORE_IMM_OPS = {f"st{sz}": n for sz, n in MEM_SIZES.items()}
 
 # Pseudo instructions:
-#   lddw   — load 64-bit immediate (one slot in our IR, two in real eBPF)
-#   ldmap  — load map pointer by map name stored in imm-slot (string)
-#   call   — call helper by id (imm)
-#   exit   — return r0
-MISC_OPS = ("lddw", "ldmap", "call", "exit", "ja")
+#   lddw    — load 64-bit immediate (one slot in our IR, two in real eBPF)
+#   ldmap   — load map pointer by map name stored in imm-slot (string)
+#   call    — call helper by id (imm)
+#   call_fn — bpf-to-bpf call: imm indexes Program.subprogs; args in
+#             r1..r5, result in r0, r6..r9 preserved (fresh frame),
+#             r1..r5 clobbered to 0 on return
+#   exit    — return r0
+MISC_OPS = ("lddw", "ldmap", "call", "call_fn", "exit", "ja")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +106,8 @@ class Insn:
         parts.append(f"r{self.dst}")
         if self.op == "call":
             return f"call #{self.imm}"
+        if self.op == "call_fn":
+            return f"call_fn fn{self.imm}"
         if self.op == "ja":
             return f"ja +{self.off}"
         if self.op == "ldmap":

@@ -22,15 +22,19 @@ Why verification makes this possible:
     retraces across decisions
 
 Supported surface (JaxcError otherwise): ALU64/32, jumps, bounded loops,
-ctx loads/stores (8-byte fields), stack loads/stores (static or dynamic
-offset), ARRAY-family maps (u64-slot granularity; ``perdev_array``
-exposes its current shard), RINGBUF maps (reserve/submit/discard on the
-control words appended to the device array — see
-:func:`repro.core.maps.device_shape`), LRU_HASH maps (masked-scan
-lookup/update over ``[value, key, recency]`` rows plus a clock cell),
-helpers map_lookup_elem / map_update_elem / ema_update (array only) /
-ringbuf_reserve / ringbuf_submit / ringbuf_discard.  Plain hash maps and
-wall-clock helpers are host-tier-only.
+bpf-to-bpf calls (``call_fn`` — callees are inlined under the caller's
+predicate with a fresh frame, so zero-retrace and single-``fori_loop``
+structure survive), ctx loads/stores (8-byte fields), stack loads/stores
+(static or dynamic offset), ARRAY-family maps (u64-slot granularity;
+``perdev_array`` exposes its current shard), RINGBUF maps
+(reserve/submit/discard on the control words appended to the device
+array — see :func:`repro.core.maps.device_shape`), HASH maps
+(fixed-capacity open-addressing table, linear probing via a masked
+probe-distance scan; inserts fail with E2BIG when full, deletes stay
+host-side), LRU_HASH maps (masked-scan lookup/update over ``[value,
+key, recency]`` rows plus a clock cell), helpers map_lookup_elem /
+map_update_elem / ema_update / ringbuf_reserve / ringbuf_submit /
+ringbuf_discard.  Wall-clock helpers are host-tier-only.
 
 We pass ctx and maps as uint64 arrays under the scoped 64-bit context
 (``repro.compat.enable_x64``); the surrounding model code stays 32-bit.
@@ -75,24 +79,61 @@ def _map_tag(mi: int):
     return (16 + mi) << 56
 
 
-_INGRAPH_KINDS = ("array", "perdev_array", "ringbuf", "lru_hash")
+_INGRAPH_KINDS = ("array", "perdev_array", "ringbuf", "hash", "lru_hash")
 _INGRAPH_HIDS = (1, 2, 64, 65, 66, 67)
 
 
-def check_supported(prog: Program) -> None:
+def check_supported(prog: Program, *, word_width: int = 64) -> None:
+    """Raise JaxcError if ``prog`` cannot lower in-graph.
+
+    ``word_width=32`` additionally applies the 32-bit-pair tier's
+    restriction (no LRU recency/clock lowering), mirroring
+    :mod:`repro.core.pallasc`'s compile-time rejection so eligibility
+    probes agree with the compiler."""
+    if word_width == 32:
+        lru = [d.name for d in prog.maps if d.kind == "lru_hash"]
+        if lru:
+            raise JaxcError(
+                f"policy '{prog.name}' uses lru_hash map(s) "
+                f"{', '.join(repr(n) for n in lru)}; the 32-bit-pair tier "
+                "does not lower LRU recency/clock metadata.  Workarounds: "
+                "declare the map with kind=\"hash\", keep word_width=64, "
+                "or run on a host tier (interp/jit/native)")
     for d in prog.maps:
         if d.kind not in _INGRAPH_KINDS:
             raise JaxcError(
                 f"map '{d.name}' is {d.kind}; in-graph tier supports "
-                f"{'/'.join(_INGRAPH_KINDS)} maps only (hash maps live on "
-                "the host tier)")
+                f"{'/'.join(_INGRAPH_KINDS)} maps only")
         if d.value_size % 8:
             raise JaxcError(f"map '{d.name}': value_size must be 8-aligned")
-    for pc, insn in enumerate(prog.insns):
-        if insn.op == "call" and insn.imm not in _INGRAPH_HIDS:
+        if d.kind == "hash" and d.key_size not in (4, 8):
             raise JaxcError(
-                f"helper {H.HELPERS[insn.imm].name} (insn {pc}) is not "
-                "available in-graph")
+                f"hash map '{d.name}': in-graph probing needs a 4- or "
+                f"8-byte key (got {d.key_size})")
+    bodies = [("main", prog.insns)]
+    bodies += [(sp.name, sp.insns) for sp in prog.subprogs]
+    for fname, insns in bodies:
+        for pc, insn in enumerate(insns):
+            if insn.op == "call" and insn.imm not in _INGRAPH_HIDS:
+                hname = H.HELPERS[insn.imm].name
+                if hname == "map_delete_elem":
+                    raise JaxcError(
+                        f"map_delete_elem (insn {pc} in {fname}) is not "
+                        "available in-graph: deleting from a linear-"
+                        "probing table would need tombstones; delete "
+                        "from the host side instead (the bridge repacks "
+                        "the table canonically on the next upload)")
+                raise JaxcError(
+                    f"helper {hname} (insn {pc} in {fname}) is not "
+                    "available in-graph")
+
+
+def _fn_infos(vinfo):
+    """Per-function analysis artifacts: ``vinfo.fns`` when the verifier
+    ran multi-function, else the top-level object (which quacks the
+    same) as the sole entry."""
+    fns = getattr(vinfo, "fns", None)
+    return list(fns) if fns else [vinfo]
 
 
 def written_map_names(prog: Program, vinfo) -> frozenset:
@@ -102,23 +143,26 @@ def written_map_names(prog: Program, vinfo) -> frozenset:
     or a mutating helper (``map_update_elem`` / ``ema_update`` / any
     ringbuf helper — the control words advance) statically binds to it,
     or a ``map_lookup_elem`` binds to an LRU map (a hit refreshes
-    recency).  The host bridge uses this to sync back ONLY these maps
-    after a device call — lookup-only telemetry inputs never round-trip."""
+    recency; plain-hash lookups mutate nothing).  Subprogram bodies
+    count: a map a callee writes is written.  The host bridge uses this
+    to sync back ONLY these maps after a device call — lookup-only
+    telemetry inputs never round-trip."""
     kinds = {d.name: d.kind for d in prog.maps}
     out = set()
-    for pc, insn in enumerate(prog.insns):
-        if is_store(insn.op):
-            info = vinfo.mem_info.get(pc)
-            if info is not None and info[0] not in ("ctx", "stack"):
-                out.add(info[1])
-        elif insn.op == "call" and insn.imm in (2, 64, 65, 66, 67):
-            mname = vinfo.call_map.get(pc)
-            if mname is not None:
-                out.add(mname)
-        elif insn.op == "call" and insn.imm == 1:
-            mname = vinfo.call_map.get(pc)
-            if mname is not None and kinds.get(mname) == "lru_hash":
-                out.add(mname)
+    for fi in _fn_infos(vinfo):
+        for pc, insn in enumerate(fi.insns):
+            if is_store(insn.op):
+                info = fi.mem_info.get(pc)
+                if info is not None and info[0] not in ("ctx", "stack"):
+                    out.add(info[1])
+            elif insn.op == "call" and insn.imm in (2, 64, 65, 66, 67):
+                mname = fi.call_map.get(pc)
+                if mname is not None:
+                    out.add(mname)
+            elif insn.op == "call" and insn.imm == 1:
+                mname = fi.call_map.get(pc)
+                if mname is not None and kinds.get(mname) == "lru_hash":
+                    out.add(mname)
     return frozenset(out)
 
 
@@ -155,7 +199,13 @@ class _Lowerer:
     def __init__(self, prog: Program, vinfo, ctx_vec, map_arrays):
         self.prog = prog
         self.vinfo = vinfo
-        self.cfg: CFG = vinfo.cfg
+        # per-function analysis artifacts: bpf-to-bpf callees are
+        # *inlined* at lowering time (`_inline_call`), retargeting
+        # fninfo/cfg/insns at the callee for the duration of its body
+        self.fns = _fn_infos(vinfo)
+        self.fninfo = self.fns[0]
+        self.cfg: CFG = self.fninfo.cfg
+        self.insns = list(prog.insns)
         self.decls = list(prog.maps)
         self.map_index = {d.name: i for i, d in enumerate(self.decls)}
         self.map_names = [d.name for d in self.decls]
@@ -169,9 +219,13 @@ class _Lowerer:
         self.regs: List[jnp.ndarray] = [_u64(0)] * 11
         self.regs[1] = self._imm(_CTX_TAG)
         self.regs[FP_REG] = self._imm(_STACK_TAG | STACK_SIZE)
-        self.stack = jnp.zeros(STACK_SIZE // 8, jnp.uint64)  # u64 slots
+        self.stack = self._fresh_stack()
         self.done = jnp.asarray(False)
         self.ret = self._imm(0)
+
+    def _fresh_stack(self):
+        """A zeroed frame in the machine representation (u64 slots)."""
+        return jnp.zeros(STACK_SIZE // 8, jnp.uint64)
 
     def _imm(self, imm: int):
         """Materialize a 64-bit immediate in the machine representation."""
@@ -238,7 +292,7 @@ class _Lowerer:
         return out
 
     def _exec_block(self, b: int, P, route) -> None:
-        insns = self.prog.insns
+        insns = self.insns
         start, end = self.cfg.ranges[b]
         for pc in range(start, end):
             insn = insns[pc]
@@ -281,6 +335,9 @@ class _Lowerer:
             self._wreg(P, 0, ret)
             for r in (1, 2, 3, 4, 5):
                 self._wreg(P, r, self._imm(0))
+            return
+        if op == "call_fn":
+            self._inline_call(insn.imm, P)
             return
         if is_alu(op):
             a = self.regs[insn.dst]
@@ -330,7 +387,7 @@ class _Lowerer:
 
     def _exec_load(self, pc: int, insn: Insn, P) -> None:
         size = mem_size(insn.op)
-        region, mname, base = self.vinfo.mem_info[pc]
+        region, mname, base = self.fninfo.mem_info[pc]
         ptr = self.regs[insn.src] + jnp.uint64(insn.off & M64)
         if region == "ctx":
             off = base + insn.off  # static (verified)
@@ -349,7 +406,7 @@ class _Lowerer:
 
     def _exec_store(self, pc: int, insn: Insn, P) -> None:
         size = mem_size(insn.op)
-        region, mname, base = self.vinfo.mem_info[pc]
+        region, mname, base = self.fninfo.mem_info[pc]
         val = jnp.uint64(insn.imm & M64) if not insn.op.startswith("stx") \
             else self.regs[insn.src]
         ptr = self.regs[insn.dst] + jnp.uint64(insn.off & M64)
@@ -369,7 +426,7 @@ class _Lowerer:
     def _call(self, pc: int, insn: Insn, P):
         hid = insn.imm
         # the verifier proved exactly which map reaches this call site
-        mname = self.vinfo.call_map.get(pc)
+        mname = self.fninfo.call_map.get(pc)
         if mname is None:
             raise JaxcError(f"helper at insn {pc} has no static map binding")
         mi = self.map_index[mname]
@@ -378,6 +435,8 @@ class _Lowerer:
             return self._call_ringbuf(hid, mi, d, P)
         if d.kind == "lru_hash":
             return self._call_lru(hid, mi, d, P)
+        if d.kind == "hash":
+            return self._call_hash(hid, mi, d, P)
         key = self._stack_load(self.regs[2], d.key_size).astype(jnp.uint64)
         valid = key < jnp.uint64(d.max_entries)
         ki = jnp.minimum(key, jnp.uint64(d.max_entries - 1)).astype(jnp.int32)
@@ -498,6 +557,121 @@ class _Lowerer:
         self.maps[d.name] = arr
         return ret
 
+    def _hash_probe(self, arr, d, key):
+        """Open-addressing probe over the hash device layout
+        (``max_entries`` rows of ``[value slots..., key, used]`` plus the
+        occupancy cell at ``[max_entries, 0]`` — ``maps.device_shape``).
+
+        Linear probing in probe-distance order from ``hash_slot(key)``:
+        the scan stops at the first row that is a key match or empty,
+        exactly the sequential probe's termination — so the selected row
+        matches the host map's packing (``HashMap.to_device`` inserts by
+        the same probe sequence, and in-graph deletion is rejected, so
+        no tombstone can sit between the home slot and the key).
+
+        Returns ``(first, hit, can_claim)``: the stopping row index, a
+        key-match predicate, and whether a miss may claim ``first`` as a
+        fresh slot (False when the table is full and the key absent)."""
+        slots = d.value_size // 8
+        kcol, ucol = slots, slots + 1
+        cap = d.max_entries
+        keys = arr[:cap, kcol]
+        used = arr[:cap, ucol] > jnp.uint64(0)
+        h = ((key & jnp.uint64(0xFFFFFFFF)) ^ (key >> jnp.uint64(32))) \
+            % jnp.uint64(cap)
+        dist = (jnp.arange(cap, dtype=jnp.uint64) - h) % jnp.uint64(cap)
+        is_match = jnp.logical_and(used, keys == key)
+        stop = jnp.logical_or(is_match, jnp.logical_not(used))
+        first = jnp.argmin(
+            jnp.where(stop, dist, jnp.uint64(cap))).astype(jnp.int32)
+        has_stop = jnp.any(stop)
+        hit = jnp.logical_and(has_stop, is_match[first])
+        can_claim = jnp.logical_and(has_stop, jnp.logical_not(hit))
+        return first, hit, can_claim
+
+    def _call_hash(self, hid: int, mi: int, d, P):
+        """lookup/update/ema on the open-addressing hash layout.  A full
+        table rejects inserts with -1 (E2BIG), matching the host map;
+        lookups mutate nothing (unlike LRU there is no recency)."""
+        arr = self.maps[d.name]
+        slots = d.value_size // 8
+        cap = d.max_entries
+        key = self._stack_load(self.regs[2], d.key_size).astype(jnp.uint64)
+        first, hit, can_claim = self._hash_probe(arr, d, key)
+        if hid == 1:  # map_lookup_elem: encode the physical row index
+            enc = (jnp.uint64(_map_tag(mi))
+                   | (first.astype(jnp.uint64) << jnp.uint64(24)))
+            return jnp.where(hit, enc, jnp.uint64(0))
+        ok = jnp.logical_or(hit, can_claim)
+        oldrow = lax.dynamic_slice(
+            arr, (first, jnp.int32(0)), (1, arr.shape[1]))[0]
+        if hid == 2:  # map_update_elem: overwrite hit else claim a slot
+            newvals = jnp.stack(
+                [self._stack_load(self.regs[3] + jnp.uint64(8 * s), 8)
+                 for s in range(slots)])
+            ret = jnp.where(ok, jnp.uint64(0), jnp.uint64(M64))
+        elif hid == 64:  # ema_update: RMW slot 0 (miss seeds from old=0)
+            w = jnp.maximum(self.regs[4], jnp.uint64(1))
+            old = jnp.where(hit, oldrow[0], jnp.uint64(0))
+            new = (old * (w - jnp.uint64(1)) + self.regs[3]) // w
+            keep = jnp.where(hit, oldrow[:slots],
+                             jnp.zeros(slots, jnp.uint64))
+            newvals = keep.at[0].set(new)
+            ret = new
+        else:
+            raise JaxcError(f"helper {hid} on hash map '{d.name}'")
+        take = jnp.logical_and(P, ok)
+        full_new = jnp.concatenate(
+            [newvals, jnp.stack([key, jnp.uint64(1)])])
+        sel = jnp.where(take, full_new, oldrow)
+        arr = lax.dynamic_update_slice(
+            arr, sel[None, :], (first, jnp.int32(0)))
+        occ = arr[cap, 0]
+        arr = arr.at[cap, 0].set(jnp.where(
+            jnp.logical_and(P, can_claim), occ + jnp.uint64(1), occ))
+        self.maps[d.name] = arr
+        return ret
+
+    # ---- bpf-to-bpf calls ---------------------------------------------------
+    def _inline_call(self, idx: int, P) -> None:
+        """``call_fn``: inline the callee's lowered body under the
+        caller's predicate.  The callee gets a fresh frame — zeroed
+        stack, fresh regs with r1-r5 copied in — while ctx and maps stay
+        shared (writes inside the callee are already gated on ``P``
+        through its block predicates).  done/ret are callee-local, so a
+        callee ``exit`` returns to the caller's continuation instead of
+        ending the program.  Inlining (vs an out-of-line call) keeps the
+        whole program one straight trace: zero retraces, and loops
+        containing calls still lower to a single ``fori_loop``."""
+        callee = self.fns[1 + idx]
+        saved = (self.fninfo, self.cfg, self.insns, self.stack,
+                 self.regs, self.done, self.ret)
+        self.fninfo = callee
+        self.cfg = callee.cfg
+        self.insns = list(callee.insns)
+        self.stack = self._fresh_stack()
+        cregs = [self._imm(0)] * 11
+        for r in (1, 2, 3, 4, 5):
+            cregs[r] = saved[4][r]
+        cregs[FP_REG] = self._imm(_STACK_TAG | STACK_SIZE)
+        self.regs = cregs
+        self.done = jnp.asarray(False)
+        self.ret = self._imm(0)
+
+        top = {h for h, L in self.cfg.loops.items() if L.parent is None}
+        out = self._exec_region(list(range(self.cfg.n)), {0: [P]},
+                                expand=top)
+        if out:
+            raise JaxcError(
+                f"unrouted edges in subprogram '{callee.name}': "
+                f"{sorted(out)}")
+        ret = self.ret
+        (self.fninfo, self.cfg, self.insns, self.stack,
+         self.regs, self.done, self.ret) = saved
+        self._wreg(P, 0, ret)
+        for r in (1, 2, 3, 4, 5):
+            self._wreg(P, r, self._imm(0))
+
     # ---- loops -------------------------------------------------------------
     def _snapshot(self, active, exit_preds):
         return (active, tuple(self.regs), self.stack, self.ctx,
@@ -525,7 +699,7 @@ class _Lowerer:
         ``bound`` body passes plus one final header visit that takes the
         exit test."""
         h = L.header
-        bound = self.vinfo.loop_bounds[h]
+        bound = self.fninfo.loop_bounds[h]
         body_blocks = sorted(L.body)
         exit_targets = list(L.exit_targets)
         inner = {M.header for M in self.cfg.inner_loops(L)}

@@ -109,8 +109,11 @@ class _RegionTable(list):
 
 
 class _Gen:
-    def __init__(self, prog: Program):
+    def __init__(self, prog: Program, insns: Optional[List[Insn]] = None):
         self.prog = prog
+        # the function being generated: main by default, or a subprogram's
+        # body when compiling a call_fn callee
+        self.insns = list(prog.insns) if insns is None else list(insns)
         self.lines: List[str] = []
         self.indent = 2
 
@@ -138,6 +141,14 @@ class _Gen:
         if op == "call":
             h = H.HELPERS[insn.imm]
             w(f"r0 = _h_{h.name}(mems, r1, r2, r3, r4, r5)")
+            w("r1 = r2 = r3 = r4 = r5 = 0")
+            return False
+        if op == "call_fn":
+            # bpf-to-bpf call: the callee is a sibling generated function
+            # with its own frame; only scalars cross the boundary
+            sp = self.prog.subprogs[insn.imm]
+            w(f'_fire("call_fn", {sp.name!r})')
+            w(f"r0 = _sub{insn.imm}(r1, r2, r3, r4, r5)")
             w("r1 = r2 = r3 = r4 = r5 = 0")
             return False
         if is_alu(op):
@@ -262,9 +273,13 @@ def _mk_update(m: BpfMap):
     ks, vs = m.key_size, m.value_size
     update = m.update
     fire = _faults.fire
+    is_hash = m.kind == "hash"
+    mname = m.name
 
     def f(mems, kp, vp):
         fire("helper", "map_update_elem")
+        if is_hash:
+            fire("hash_rmw", mname)     # table insert-or-update (VM parity)
         ko = kp & M32
         vo = vp & M32
         return update(bytes(mems[kp >> 32][ko:ko + ks]),
@@ -292,10 +307,13 @@ def _mk_ema(m: BpfMap):
     lock = m.lock
     fire = _faults.fire
     mname = m.name
+    is_hash = m.kind == "hash"
 
     def f(mems, kp, sample, weight):
         fire("helper", "ema_update")
         fire("map_rmw", mname)
+        if is_hash:
+            fire("hash_rmw", mname)
         w = weight if weight > 1 else 1
         o = kp & M32
         key = bytes(mems[kp >> 32][o:o + ks])
@@ -362,13 +380,15 @@ _SPECIALIZERS = {
 class _GenV2(_Gen):
     """Specializing generator driven by the verifier's region analysis."""
 
-    def __init__(self, prog: Program, vinfo, resolved_maps: Dict[str, BpfMap]):
-        super().__init__(prog)
-        self.vinfo = vinfo
+    def __init__(self, prog: Program, vinfo, resolved_maps: Dict[str, BpfMap],
+                 insns: Optional[List[Insn]] = None, is_sub: bool = False):
+        super().__init__(prog, insns)
+        self.vinfo = vinfo      # main's Verifier, or a callee's FnInfo —
+        self.is_sub = is_sub    # both carry cfg/mem_info/call_map
         self.resolved = resolved_maps
         # the verifier already built the shared CFG; reuse it so both
         # tiers agree on block/loop structure by construction
-        self.blocks = getattr(vinfo, "cfg", None) or CFG(prog.insns)
+        self.blocks = getattr(vinfo, "cfg", None) or CFG(self.insns)
         self._loops: List[Tuple[int, int]] = []   # (header, exit) stack
         self.env_extra: Dict[str, object] = {}
         self.ctx_writes: Set[int] = set()
@@ -384,7 +404,7 @@ class _GenV2(_Gen):
         return info[2] + insn.off
 
     def _analyze(self) -> None:
-        insns = self.prog.insns
+        insns = self.insns
         self.stack_escape = False
         has_stack_access = False
         stack_ranges: Set[Tuple[int, int]] = set()
@@ -494,6 +514,14 @@ class _GenV2(_Gen):
             return
         if op == "call":
             self._emit_call(pc, insn)
+            return
+        if op == "call_fn":
+            # no r1-r5 zeroing needed: the verifier marks caller-saved
+            # registers unknown after the call, so verified code never
+            # reads them (same reasoning as helper calls above)
+            sp = self.prog.subprogs[insn.imm]
+            self.w(f'_fire("call_fn", {sp.name!r})')
+            self.w(f"r0 = _sub{insn.imm}(r1, r2, r3, r4, r5)")
             return
         if is_alu(op):
             self._emit_alu(insn)
@@ -685,7 +713,7 @@ class _GenV2(_Gen):
     def _block_term(self, bi: int):
         """Emit a block's body; return its terminator descriptor."""
         start, end = self.blocks.ranges[bi]
-        insns = self.prog.insns
+        insns = self.insns
         last = insns[end - 1]
         body_end = end - 1 if (last.op in ("exit", "ja")
                                or is_jump_cond(last.op)) else end
@@ -971,6 +999,8 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
     def _h_map_update_elem(mems, r1, r2, r3, r4, r5) -> int:
         fire("helper", "map_update_elem")
         m = map_by_handle[r1]
+        if m.kind == "hash":
+            fire("hash_rmw", m.name)
         key = _buf(mems, r2, m.key_size)
         val = _buf(mems, r3, m.value_size)
         return m.update(key, val) & M64
@@ -997,6 +1027,8 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
         fire("helper", "ema_update")
         m = map_by_handle[r1]
         fire("map_rmw", m.name)
+        if m.kind == "hash":
+            fire("hash_rmw", m.name)
         key = _buf(mems, r2, m.key_size)
         w = max(1, r4)
         with m.lock:        # lock-held RMW (maps.py mutation contract)
@@ -1061,22 +1093,29 @@ def _helper_env(prog: Program, resolved_maps: Dict[str, BpfMap],
     }
 
 
-def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
-                printk: Callable[[int], None]) -> Callable[[bytearray], int]:
-    """The original dispatcher-loop generator (baseline / fallback tier)."""
-    insns = prog.insns
+def _emit_v1_fn(g: _Gen, insns: List[Insn], fname: str, is_sub: bool) -> None:
+    """Emit one dispatcher-loop function (main or a call_fn callee)."""
     leaders = _leaders(insns)
     block_of: Dict[int, int] = {pc: i for i, pc in enumerate(leaders)}
 
-    g = _Gen(prog)
     g.indent = 0
-    g.w("def _run(ctx):")
-    g.indent = 1
-    g.w("r0 = r2 = r3 = r4 = r5 = r6 = r7 = r8 = r9 = 0")
-    g.w(f"stack = bytearray({STACK_SIZE})")
-    g.w("mems = _RegionTable([None, stack, ctx])")
-    g.w("_owners = mems.owners = [None, None, None]")
-    g.w(f"r1 = {2 << 32}")                      # ctx pointer: region 2
+    if is_sub:
+        # args arrive in r1..r5; fresh frame, no ctx region (the verifier
+        # rejects ctx access in callees, so region 2 stays a placeholder)
+        g.w(f"def {fname}(r1, r2, r3, r4, r5):")
+        g.indent = 1
+        g.w("r0 = r6 = r7 = r8 = r9 = 0")
+        g.w(f"stack = bytearray({STACK_SIZE})")
+        g.w("mems = _RegionTable([None, stack, None])")
+        g.w("_owners = mems.owners = [None, None, None]")
+    else:
+        g.w(f"def {fname}(ctx):")
+        g.indent = 1
+        g.w("r0 = r2 = r3 = r4 = r5 = r6 = r7 = r8 = r9 = 0")
+        g.w(f"stack = bytearray({STACK_SIZE})")
+        g.w("mems = _RegionTable([None, stack, ctx])")
+        g.w("_owners = mems.owners = [None, None, None]")
+        g.w(f"r1 = {2 << 32}")                  # ctx pointer: region 2
     g.w(f"r10 = {(1 << 32) | STACK_SIZE}")      # fp: region 1, offset 512
 
     single_block = len(leaders) == 1
@@ -1100,6 +1139,17 @@ def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
         if not single_block:
             g.indent -= 1
 
+
+def _compile_v1(prog: Program, resolved_maps: Dict[str, BpfMap],
+                printk: Callable[[int], None]) -> Callable[[bytearray], int]:
+    """The original dispatcher-loop generator (baseline / fallback tier)."""
+    g = _Gen(prog)
+    # callees first, main last — all live in one exec'd module so call_fn
+    # sites resolve _sub{i} through shared globals (any DAG order works)
+    for i, sp in enumerate(prog.subprogs):
+        _emit_v1_fn(g, list(sp.insns), f"_sub{i}", is_sub=True)
+    _emit_v1_fn(g, list(prog.insns), "_run", is_sub=False)
+
     src = "\n".join(g.lines)
     env = _helper_env(prog, resolved_maps, printk)
     env["_RegionTable"] = _RegionTable
@@ -1117,10 +1167,12 @@ def _build_prologue(g: _GenV2, body: List[str]) -> List[str]:
     pro: List[str] = []
     ind = "    "
     regs = sorted({int(r) for r in re.findall(r"\br(\d+)\b", text)})
-    plain = [r for r in regs if r not in (1, FP_REG)]
+    # subprograms receive r1..r5 as parameters; everything else zero-inits
+    skip = (1, 2, 3, 4, 5, FP_REG) if g.is_sub else (1, FP_REG)
+    plain = [r for r in regs if r not in skip]
     if plain:
         pro.append(ind + " = ".join(f"r{r}" for r in plain) + " = 0")
-    if 1 in regs:
+    if not g.is_sub and 1 in regs:
         pro.append(ind + f"r1 = {2 << 32}")     # encoded ctx pointer
     if FP_REG in regs:
         pro.append(ind + f"r10 = {(1 << 32) | STACK_SIZE}")
@@ -1150,10 +1202,20 @@ def _build_prologue(g: _GenV2, body: List[str]) -> List[str]:
     return pro
 
 
-def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
-                printk: Callable[[int], None], vinfo
-                ) -> Callable[[bytearray], int]:
-    g = _GenV2(prog, vinfo, resolved_maps)
+def _compile_fn_v2(prog: Program, insns: List[Insn], fninfo,
+                   resolved_maps: Dict[str, BpfMap],
+                   printk: Callable[[int], None], fname: str, is_sub: bool
+                   ) -> Tuple[Callable, Dict[str, object]]:
+    """Compile one function (main or callee) to a specialized closure.
+
+    Each function gets its own exec environment: specialized bindings
+    (``_hc{pc}``, ``_pool``, struct accessors) never collide across
+    functions, and pooled buffers stay homogeneous per closure.  Returns
+    ``(fn, env)`` so the caller can inject ``_sub{i}`` bindings after
+    every function exists (call_fn targets form a DAG in any index
+    order).
+    """
+    g = _GenV2(prog, fninfo, resolved_maps, insns=insns, is_sub=is_sub)
     g.indent = 1
     structured = True
     try:
@@ -1169,7 +1231,9 @@ def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
             g.emit_guard_chain()
 
     body = _fix_empty_blocks(_dce(g.lines))
-    lines = ["def _run(ctx):"] + _build_prologue(g, body) + body
+    header = (f"def {fname}(r1, r2, r3, r4, r5):" if is_sub
+              else f"def {fname}(ctx):")
+    lines = [header] + _build_prologue(g, body) + body
     src = "\n".join(lines)
 
     env = _helper_env(prog, resolved_maps, printk)
@@ -1177,14 +1241,36 @@ def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
     env["_ctxu"] = struct.Struct(f"<{nfields}Q").unpack
     env["_pool"] = []
     env.update(g.env_extra)
-    code = compile(src, f"<bpf-jit:{prog.name}>", "exec")
+    code = compile(src, f"<bpf-jit:{prog.name}:{fname}>", "exec")
     exec(code, env)  # noqa: S102 — generated from verified bytecode
-    fn = env["_run"]
+    fn = env[fname]
     fn.__bpf_source__ = src  # for debugging / tests
     fn.__bpf_codegen__ = "v2"
     fn.__bpf_structured__ = structured
     fn.__bpf_mode__ = ("scalar" if not (g.needs_stack or g.needs_mems)
                        else "buffered")
+    return fn, env
+
+
+def _compile_v2(prog: Program, resolved_maps: Dict[str, BpfMap],
+                printk: Callable[[int], None], vinfo
+                ) -> Callable[[bytearray], int]:
+    fns = list(getattr(vinfo, "fns", None) or [vinfo])
+    envs: List[Dict[str, object]] = []
+    subs: Dict[str, object] = {}
+    for i, sp in enumerate(prog.subprogs):
+        sub_fn, sub_env = _compile_fn_v2(
+            prog, list(sp.insns), fns[1 + i], resolved_maps, printk,
+            f"_sub{i}", is_sub=True)
+        subs[f"_sub{i}"] = sub_fn
+        envs.append(sub_env)
+    fn, env = _compile_fn_v2(prog, list(prog.insns), fns[0], resolved_maps,
+                             printk, "_run", is_sub=False)
+    envs.append(env)
+    for e in envs:
+        e.update(subs)
+    if subs:
+        fn.__bpf_subs__ = subs  # for debugging / tests
     return fn
 
 

@@ -42,6 +42,7 @@ from typing import Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .isa import FP_REG, STACK_SIZE, Insn, mem_size
 from .jaxc import (JaxcError, _CTX_TAG, _Lowerer, _STACK_TAG, _map_tag,
@@ -280,9 +281,12 @@ class _Lowerer32(_Lowerer):
         self.regs = [pair_const(0)] * 11
         self.regs[1] = pair_const(_CTX_TAG)
         self.regs[FP_REG] = pair_const(_STACK_TAG | STACK_SIZE)
-        self.stack = jnp.zeros((STACK_SIZE // 8, 2), jnp.uint32)
+        self.stack = self._fresh_stack()
         self.done = jnp.asarray(False)
         self.ret = pair_const(0)
+
+    def _fresh_stack(self):
+        return jnp.zeros((STACK_SIZE // 8, 2), jnp.uint32)
 
     def _imm(self, imm: int) -> Pair:
         return pair_const(imm)
@@ -337,7 +341,7 @@ class _Lowerer32(_Lowerer):
 
     def _exec_load(self, pc: int, insn: Insn, P) -> None:
         size = mem_size(insn.op)
-        region, mname, base = self.vinfo.mem_info[pc]
+        region, mname, base = self.fninfo.mem_info[pc]
         ptr = pair_add(self.regs[insn.src], pair_const(insn.off & M64))
         if region == "ctx":
             off = base + insn.off            # static (verified)
@@ -357,7 +361,7 @@ class _Lowerer32(_Lowerer):
 
     def _exec_store(self, pc: int, insn: Insn, P) -> None:
         size = mem_size(insn.op)
-        region, mname, base = self.vinfo.mem_info[pc]
+        region, mname, base = self.fninfo.mem_info[pc]
         val: Pair = pair_const(insn.imm & M64) \
             if not insn.op.startswith("stx") else self.regs[insn.src]
         ptr = pair_add(self.regs[insn.dst], pair_const(insn.off & M64))
@@ -380,13 +384,15 @@ class _Lowerer32(_Lowerer):
     # ---- helpers ---------------------------------------------------------
     def _call(self, pc: int, insn: Insn, P) -> Pair:
         hid = insn.imm
-        mname = self.vinfo.call_map.get(pc)
+        mname = self.fninfo.call_map.get(pc)
         if mname is None:
             raise JaxcError(f"helper at insn {pc} has no static map binding")
         mi = self.map_index[mname]
         d = self.decls[mi]
         if d.kind == "ringbuf":
             return self._call_ringbuf32(hid, mi, d, P)
+        if d.kind == "hash":
+            return self._call_hash32(hid, mi, d, P)
         key = self._stack_load(self.regs[2], d.key_size)   # hi lane is 0
         valid = key[0] < jnp.uint32(d.max_entries)
         ki = jnp.minimum(key[0], jnp.uint32(d.max_entries - 1)).astype(
@@ -420,6 +426,73 @@ class _Lowerer32(_Lowerer):
                 jnp.stack([sel[0], sel[1]]))
             return new
         raise JaxcError(f"helper {hid} not supported in-graph")
+
+    def _call_hash32(self, hid: int, mi: int, d, P) -> Pair:
+        """Pair-form open-addressing probe (see ``_Lowerer._call_hash``
+        for the layout and termination argument).  ``hash_slot`` folds
+        the key to 32 bits (``lo ^ hi``), so locating the probe origin
+        costs one uint32 modulo — no pair division anywhere on the scan,
+        and key equality is a two-lane compare."""
+        arr = self.maps[d.name]
+        slots = d.value_size // 8
+        kcol, ucol = slots, slots + 1
+        cap = d.max_entries
+        key = self._stack_load(self.regs[2], d.key_size)   # Pair
+        keys_lo = arr[:cap, kcol, 0]
+        keys_hi = arr[:cap, kcol, 1]
+        used = (arr[:cap, ucol, 0] | arr[:cap, ucol, 1]) > 0
+        h = (key[0] ^ key[1]) % jnp.uint32(cap)
+        dist = (jnp.arange(cap, dtype=jnp.uint32) - h) % jnp.uint32(cap)
+        is_match = used & (keys_lo == key[0]) & (keys_hi == key[1])
+        stop = is_match | jnp.logical_not(used)
+        first = jnp.argmin(
+            jnp.where(stop, dist, jnp.uint32(cap))).astype(jnp.int32)
+        has_stop = jnp.any(stop)
+        hit = jnp.logical_and(has_stop, is_match[first])
+        can_claim = jnp.logical_and(has_stop, jnp.logical_not(hit))
+        if hid == 1:  # map_lookup_elem: encode the physical row index
+            tag = pair_const(_map_tag(mi))
+            row: Pair = (first.astype(jnp.uint32), jnp.uint32(0))
+            sh = pair_lsh(row, pair_const(24))
+            enc: Pair = (tag[0] | sh[0], tag[1] | sh[1])
+            return pair_select(hit, enc, pair_const(0))
+        ok = jnp.logical_or(hit, can_claim)
+        oldrow = lax.dynamic_slice(
+            arr, (first, jnp.int32(0), jnp.int32(0)),
+            (1, arr.shape[1], 2))[0]
+        if hid == 2:  # map_update_elem: overwrite hit else claim a slot
+            vals = [self._stack_load(
+                pair_add(self.regs[3], pair_const(8 * s)), 8)
+                for s in range(slots)]
+            newvals = jnp.stack([jnp.stack([lo, hi]) for lo, hi in vals])
+            ret = pair_select(ok, pair_const(0), pair_const(M64))
+        elif hid == 64:  # ema_update: RMW slot 0 (miss seeds from old=0)
+            one = pair_const(1)
+            w = pair_select(pair_cmp("jgt", self.regs[4], one),
+                            self.regs[4], one)
+            old: Pair = (jnp.where(hit, oldrow[0, 0], jnp.uint32(0)),
+                         jnp.where(hit, oldrow[0, 1], jnp.uint32(0)))
+            acc = pair_add(pair_mul(old, pair_sub(w, one)), self.regs[3])
+            new = pair_divmod(acc, w)[0]
+            keep = jnp.where(hit, oldrow[:slots],
+                             jnp.zeros((slots, 2), jnp.uint32))
+            newvals = keep.at[0].set(jnp.stack([new[0], new[1]]))
+            ret = new
+        else:
+            raise JaxcError(f"helper {hid} on hash map '{d.name}'")
+        take = jnp.logical_and(P, ok)
+        tail = jnp.stack([jnp.stack([key[0], key[1]]),
+                          jnp.stack([jnp.uint32(1), jnp.uint32(0)])])
+        full_new = jnp.concatenate([newvals, tail])
+        sel = jnp.where(take, full_new, oldrow)
+        arr = lax.dynamic_update_slice(
+            arr, sel[None], (first, jnp.int32(0), jnp.int32(0)))
+        occ: Pair = (arr[cap, 0, 0], arr[cap, 0, 1])
+        occ1 = pair_select(jnp.logical_and(P, can_claim),
+                           pair_add(occ, pair_const(1)), occ)
+        arr = arr.at[cap, 0].set(jnp.stack([occ1[0], occ1[1]]))
+        self.maps[d.name] = arr
+        return ret
 
     def _call_ringbuf32(self, hid: int, mi: int, d, P) -> Pair:
         """reserve/submit/discard over the device layout's control words,

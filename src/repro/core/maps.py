@@ -69,6 +69,10 @@ def device_shape(kind: str, value_size: int, max_entries: int) -> tuple:
       * ringbuf — record rows plus control rows holding the four control
         words ``head, tail, drops, pending`` (packed ``value_size // 8``
         words per row)
+      * hash — fixed-capacity open-addressing table: each row is
+        ``[values..., key, used]`` (linear probing over
+        ``(key_lo ^ key_hi) % max_entries``, tombstone-free) and one
+        trailing control row holds the occupancy counter
       * lru_hash — each row is ``[values..., key, recency]`` and one
         trailing control row holds the clock
 
@@ -78,9 +82,18 @@ def device_shape(kind: str, value_size: int, max_entries: int) -> tuple:
     if kind == "ringbuf":
         ctl_rows = -(-4 // slots)           # ceil(4 / slots)
         return (max_entries + ctl_rows, slots)
-    if kind == "lru_hash":
+    if kind in ("hash", "lru_hash"):
         return (max_entries + 1, slots + 2)
     return (max_entries, slots)
+
+
+def hash_slot(key: int, max_entries: int) -> int:
+    """Home slot of ``key`` in the open-addressing device table.
+
+    Folding the halves keeps the modulus in 32 bits, so the pair-form
+    (lo, hi) lowering computes the identical slot with ONE uint32 mod:
+    ``(key_lo ^ key_hi) % max_entries``."""
+    return ((key & 0xFFFFFFFF) ^ (key >> 32)) % max_entries
 
 
 class MapError(Exception):
@@ -319,6 +332,50 @@ class HashMap(BpfMap):
 
     def keys(self) -> Iterator[bytes]:
         return iter(list(self._table.keys()))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._table)
+
+    # -- in-graph device protocol ------------------------------------------
+    # Open-addressing table: max_entries rows of [values..., key, used]
+    # plus a control row holding the occupancy count.  Upload repacks the
+    # host dict canonically (insertion order, each key at its home slot
+    # ``hash_slot(key, cap)`` then linear-probed to the first free row),
+    # so probe chains never contain holes: the host surface may delete,
+    # but in-graph execution is insert/update-only (tombstone-free) and
+    # every upload starts from a compacted table.
+    def to_device(self) -> np.ndarray:
+        rows, cols = self.device_shape()
+        slots = cols - 2
+        cap = self.max_entries
+        with self._lock:
+            arr = np.zeros((rows, cols), dtype="<u8")
+            for kb, val in self._table.items():
+                k = int.from_bytes(kb, "little")
+                i = hash_slot(k, cap)
+                while arr[i, slots + 1] != 0:
+                    i = (i + 1) % cap
+                arr[i, :slots] = np.frombuffer(bytes(val), dtype="<u8")
+                arr[i, slots] = k
+                arr[i, slots + 1] = 1
+            arr[cap, 0] = len(self._table)
+        return arr
+
+    def from_device(self, arr) -> None:
+        a = np.ascontiguousarray(np.asarray(arr, dtype="<u8"))
+        rows, cols = self.device_shape()
+        slots = cols - 2
+        with self._lock:
+            # the used flags are the source of truth; the occupancy
+            # control word is derived and recomputed here
+            table: Dict[bytes, bytearray] = {}
+            for i in range(self.max_entries):
+                if int(a[i, slots + 1]) != 0:
+                    kb = int(a[i, slots]).to_bytes(self.key_size, "little")
+                    table[kb] = bytearray(a[i, :slots].tobytes())
+            self._table = table
+            self._version += 1
 
 
 class PerCpuArrayMap(ArrayMap):

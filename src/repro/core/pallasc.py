@@ -140,11 +140,17 @@ def compile_pallas(prog: Program, vinfo=None, *, mode: Optional[str] = None,
         vinfo = verify_with_info(prog)
     mode = _resolve_mode(mode)
     word_width = _resolve_word_width(word_width)
-    if word_width == 32 and any(d.kind == "lru_hash" for d in prog.maps):
+    lru = [d.name for d in prog.maps if d.kind == "lru_hash"]
+    if word_width == 32 and lru:
         raise PallascError(
-            f"policy '{prog.name}' uses an lru_hash map; the 32-bit-pair "
-            "tier does not lower LRU maps — use word_width=64 or a host "
-            "tier")
+            f"policy '{prog.name}' uses lru_hash map(s) "
+            f"{', '.join(repr(n) for n in lru)}; the 32-bit-pair tier does "
+            "not lower LRU recency/clock metadata.  Workarounds: declare "
+            "the map with kind=\"hash\" (the fixed-capacity open-addressing "
+            "table lowers in-graph on every tier, including pallas32 — you "
+            "lose eviction, inserts fail with E2BIG when full), keep "
+            "word_width=64 (x64 emulation), or run this policy on a host "
+            "tier (interp/jit/native), where lru_hash is fully supported")
     names = [d.name for d in prog.maps]
 
     if mode == "jit":
@@ -458,7 +464,8 @@ class DeviceBridge:
         one."""
         if self._host_fn is None:
             from .vm import VM
-            self._host_fn = VM(self._prog.insns, self._maps).run
+            self._host_fn = VM(self._prog.insns, self._maps,
+                               subprogs=self._prog.subprogs).run
         return self._host_fn
 
     # -- the runtime host-closure contract ---------------------------------

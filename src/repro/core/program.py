@@ -28,6 +28,17 @@ class MapDecl:
     shared: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class SubProgram:
+    """A callee reachable via ``call_fn`` — the "static function in the
+    same ELF" analogue.  Arguments arrive in r1..r5 (scalars only, the
+    verifier enforces it), the result returns in r0, and each activation
+    gets a fresh 512-byte stack frame."""
+    name: str
+    insns: Tuple[Insn, ...]
+    n_args: int = 0
+
+
 @dataclasses.dataclass
 class Program:
     name: str
@@ -35,12 +46,24 @@ class Program:
     insns: List[Insn]
     maps: Tuple[MapDecl, ...] = ()
     source: Optional[str] = None   # original restricted-Python/asm text
+    subprogs: Tuple[SubProgram, ...] = ()
 
     def __post_init__(self):
         if self.section not in CTX_TYPES:
             raise ValueError(f"unknown section {self.section!r}")
         for i, insn in enumerate(self.insns):
             validate_insn(insn, i)
+            self._check_call_fn(insn, i, "main")
+        for sp in self.subprogs:
+            for i, insn in enumerate(sp.insns):
+                validate_insn(insn, i)
+                self._check_call_fn(insn, i, sp.name)
+
+    def _check_call_fn(self, insn: Insn, i: int, where: str) -> None:
+        if insn.op == "call_fn" and not (0 <= insn.imm < len(self.subprogs)):
+            raise ValueError(
+                f"{where} insn {i}: call_fn fn{insn.imm} out of range "
+                f"(program has {len(self.subprogs)} subprogram(s))")
 
     @property
     def ctx_type(self) -> CtxType:

@@ -861,7 +861,8 @@ class PolicyRuntime:
                 # interpreter tier only
                 fuel = max(4 * vinfo.max_steps, 4096)
                 vm = VM(program.insns, resolved,
-                        printk=self._printk_log.append, fuel=fuel)
+                        printk=self._printk_log.append, fuel=fuel,
+                        subprogs=program.subprogs)
                 fn = vm.run
             elif self.tier in ("jaxc", "pallas", "pallas32"):
                 # in-graph tiers behind the device-resident host bridge;

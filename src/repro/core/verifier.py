@@ -56,6 +56,9 @@ LOOP_FUEL_CAP = 1 << 16
 _WIDEN_AFTER = 2          # joins at one pc before widening kicks in
 _ANALYSIS_STEPS_PER_INSN = 256
 
+# bpf-to-bpf call limits (kernel: MAX_CALL_FRAMES / check_max_stack_depth)
+CALL_DEPTH_LIMIT = 8
+
 
 class VerifierError(Exception):
     """Load-time rejection.  ``.insn`` is the offending instruction index."""
@@ -273,11 +276,41 @@ def _or_upper(a: int, b: int) -> int:
 # Verifier
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class FnInfo:
+    """Per-function verifier artifacts.
+
+    Deliberately the same attribute surface the execution tiers already
+    read off the top-level :class:`Verifier` (whose attributes alias
+    ``fns[0]`` after verification) — a callee compiles/lowers by
+    swapping which info object drives codegen."""
+    index: int                     # 0 = main, 1 + i = subprogs[i]
+    name: str
+    insns: Tuple[Insn, ...]
+    n_args: int
+    cfg: Optional[CFG] = None
+    mem_info: Dict[int, Tuple[str, Optional[str], Optional[int]]] = \
+        dataclasses.field(default_factory=dict)
+    call_map: Dict[int, Optional[str]] = dataclasses.field(
+        default_factory=dict)
+    loop_bounds: Dict[int, int] = dataclasses.field(default_factory=dict)
+    max_steps: int = 0
+    stack_usage: int = 0           # deepest frame byte this fn touches
+    # joined unsigned interval of r0 across every exit
+    ret_lo: int = 0
+    ret_hi: int = U64_MAX
+    callees: Tuple[int, ...] = ()  # fn indices this fn call_fn's
+
+
 class Verifier:
     def __init__(self, program: Program):
         self.prog = program
         self.ctx: CtxType = program.ctx_type
         self.map_decls: Dict[str, MapDecl] = {d.name: d for d in program.maps}
+        # insns of the function currently under analysis (main's after
+        # verify() returns — every per-function helper below reads this,
+        # never prog.insns directly)
+        self.insns: List[Insn] = list(program.insns)
         # pc -> (region kind, map_name, const offset or None) for every
         # memory insn, and pc -> map_name for every helper call; consumed
         # by the JIT and jaxc, which need static region types.
@@ -290,15 +323,125 @@ class Verifier:
         self.cfg: Optional[CFG] = None
         self.loop_bounds: Dict[int, int] = {}
         self.max_steps: int = 0
+        # per-function artifacts: fns[0] = main, fns[1 + i] = subprogs[i]
+        self.fns: List[FnInfo] = []
+        self._min_stack = STACK_SIZE
 
     # -- public -------------------------------------------------------------
     def verify(self) -> None:
-        insns = self.prog.insns
-        if not insns:
+        if not self.prog.insns:
             raise VerifierError("empty program")
+        self.fns = [FnInfo(0, "main", tuple(self.prog.insns), 0)] + [
+            FnInfo(1 + i, sp.name, tuple(sp.insns), sp.n_args)
+            for i, sp in enumerate(self.prog.subprogs)]
+        order = self._check_call_graph()
+        for fi in order:              # callees strictly before callers
+            fn = self.fns[fi]
+            try:
+                self._verify_fn(fn)
+            except VerifierError as e:
+                if fi == 0:
+                    raise
+                raise VerifierError(
+                    f"in subprogram '{fn.name}': {e}") from None
+        self._check_stack_depth()
+        # top-level artifact surface = main's (backward compatible)
+        main = self.fns[0]
+        self.insns = list(main.insns)
+        self.cfg = main.cfg
+        self.mem_info = main.mem_info
+        self.call_map = main.call_map
+        self.loop_bounds = main.loop_bounds
+        self.max_steps = main.max_steps
+
+    # -- call graph (bpf-to-bpf) ---------------------------------------------
+    def _check_call_graph(self) -> List[int]:
+        """Validate the call_fn graph (a DAG, depth <= 8 frames) and
+        return the fn indices callees-first."""
+        for fn in self.fns:
+            fn.callees = tuple(sorted({
+                1 + insn.imm for insn in fn.insns if insn.op == "call_fn"}))
+        # DFS: cycle rejection + postorder (callees first) + frame depth
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = [WHITE] * len(self.fns)
+        post: List[int] = []
+        depth: Dict[int, int] = {}
+
+        def visit(fi: int, chain: List[int]) -> int:
+            if color[fi] == GREY:
+                cyc = chain[chain.index(fi):] + [fi]
+                names = " -> ".join(self.fns[c].name for c in cyc)
+                raise VerifierError(
+                    f"recursive bpf-to-bpf call cycle: {names}; calls "
+                    "must form a DAG — restructure the recursion into a "
+                    "bounded loop")
+            if color[fi] == BLACK:
+                return depth[fi]
+            color[fi] = GREY
+            chain.append(fi)
+            d = 1 + max([visit(c, chain) for c in self.fns[fi].callees]
+                        or [0])
+            chain.pop()
+            color[fi] = BLACK
+            depth[fi] = d
+            post.append(fi)
+            return d
+
+        for fi in range(len(self.fns)):
+            if color[fi] == WHITE:
+                d = visit(fi, [])
+                if fi == 0 and d > CALL_DEPTH_LIMIT:
+                    raise VerifierError(
+                        f"bpf-to-bpf call chain is {d} frames deep; the "
+                        f"limit is {CALL_DEPTH_LIMIT} (kernel "
+                        "MAX_CALL_FRAMES) — flatten the helper chain")
+        return post
+
+    def _check_stack_depth(self) -> None:
+        """Combined stack of the deepest call chain must fit one kernel
+        stack budget (check_max_stack_depth style): each frame is fresh,
+        but the total across frames is capped at STACK_SIZE."""
+        memo: Dict[int, int] = {}
+
+        def total(fi: int) -> int:
+            if fi not in memo:
+                fn = self.fns[fi]
+                memo[fi] = fn.stack_usage + max(
+                    [total(c) for c in fn.callees] or [0])
+            return memo[fi]
+
+        t = total(0)
+        if t > STACK_SIZE:
+            chain = []
+            fi = 0
+            while True:
+                chain.append(fi)
+                cs = self.fns[fi].callees
+                if not cs:
+                    break
+                fi = max(cs, key=total)
+            names = " -> ".join(
+                f"{self.fns[c].name}({self.fns[c].stack_usage}B)"
+                for c in chain)
+            raise VerifierError(
+                f"combined stack depth {t} bytes of call chain {names} "
+                f"exceeds the {STACK_SIZE}-byte budget; shrink per-"
+                "function stack use or flatten the call chain")
+
+    # -- per-function analysis ------------------------------------------------
+    def _verify_fn(self, fn: FnInfo) -> None:
+        insns = list(fn.insns)
+        if not insns:
+            raise VerifierError("empty function body")
+        # retarget the per-function helpers at this function's artifacts
+        self.insns = insns
+        self.mem_info = fn.mem_info
+        self.call_map = fn.call_map
+        self.loop_bounds = fn.loop_bounds
+        self._min_stack = STACK_SIZE
         self._check_structure(insns)
         try:
-            self.cfg = CFG(insns)
+            self.cfg = fn.cfg = CFG(insns)
         except IrreducibleError as e:
             raise VerifierError(
                 "back-edge detected: irreducible control flow (the edge "
@@ -306,7 +449,13 @@ class Verifier:
                 "proven); restructure into a single-entry loop", e.pc)
 
         init_regs = [AVal(UNINIT)] * 11
-        init_regs[1] = AVal(CTX, 0, 0)
+        if fn.index == 0:
+            init_regs[1] = AVal(CTX, 0, 0)
+        else:
+            # scalar arguments r1..r{n_args}; the rest of r1..r5 stay
+            # UNINIT so a callee reading an unpassed argument rejects
+            for argi in range(1, fn.n_args + 1):
+                init_regs[argi] = AVal.scalar()
         init_regs[FP_REG] = AVal(STACK, STACK_SIZE, STACK_SIZE)
         states: Dict[int, AState] = {0: AState(tuple(init_regs), 0)}
 
@@ -316,6 +465,7 @@ class Verifier:
         budget = _ANALYSIS_STEPS_PER_INSN * len(insns)
         joins: Dict[int, int] = {}
         exit_pcs = set()
+        ret_lo, ret_hi = None, None
         heap = [0]
         queued = {0}
         while heap:
@@ -330,6 +480,9 @@ class Verifier:
             for tgt, nst in self._step(pc, insns[pc], st):
                 if tgt == -1:
                     exit_pcs.add(pc)
+                    r0 = st.regs[0]
+                    ret_lo = r0.lo if ret_lo is None else min(ret_lo, r0.lo)
+                    ret_hi = r0.hi if ret_hi is None else max(ret_hi, r0.hi)
                     continue
                 if tgt >= len(insns):
                     raise VerifierError(
@@ -362,7 +515,10 @@ class Verifier:
         self._prove_loop_bounds(states)
         if not exit_pcs:
             raise VerifierError("no reachable exit instruction")
-        self.max_steps = self._step_bound()
+        fn.ret_lo = 0 if ret_lo is None else ret_lo
+        fn.ret_hi = U64_MAX if ret_hi is None else ret_hi
+        fn.stack_usage = STACK_SIZE - self._min_stack
+        fn.max_steps = self.max_steps = self._step_bound()
 
     # -- CFG structure -------------------------------------------------------
     def _check_structure(self, insns: List[Insn]) -> None:
@@ -435,7 +591,7 @@ class Verifier:
         tests the same monotone cell, and the +c only makes the tested
         value larger, so the ceil(limit/step) bound stays sound.  Never
         set for init/limit tracing, where the offset would be wrong."""
-        insns = self.prog.insns
+        insns = self.insns
         start = self.cfg.ranges[block][0]
         for pc in range(upto_pc - 1, start - 1, -1):
             insn = insns[pc]
@@ -466,7 +622,7 @@ class Verifier:
     @staticmethod
     def _writes_reg(insn: Insn, reg: int) -> bool:
         op = insn.op
-        if op == "call":
+        if op in ("call", "call_fn"):
             return reg in (0, 1, 2, 3, 4, 5)
         if op in ("lddw", "ldmap") or is_load(op) or is_alu(op):
             return insn.dst == reg
@@ -486,7 +642,7 @@ class Verifier:
     def _cell_steps(self, L: Loop, cell) -> Tuple[Optional[List[Tuple[int, int]]], str]:
         """All in-loop writes to the counter cell.  Returns (list of
         (block, step) increments, reason) — None list means disproven."""
-        insns = self.prog.insns
+        insns = self.insns
         incs: List[Tuple[int, int]] = []
         for b in sorted(L.body):
             for pc in self.cfg.block_insns(b):
@@ -524,7 +680,7 @@ class Verifier:
     def _slot_increment(self, block: int, store_pc: int,
                         cell_off: int) -> Optional[int]:
         """Match `ldxdw rX, [cell]; add64i rX, +c; stxdw [cell], rX`."""
-        insns = self.prog.insns
+        insns = self.insns
         insn = insns[store_pc]
         if insn.op != "stxdw":
             return None
@@ -560,7 +716,7 @@ class Verifier:
         if len(entries) != 1 or not cfg.dominates(entries[0], L.header):
             return None
         p = entries[0]
-        insns = self.prog.insns
+        insns = self.insns
         s, e = cfg.ranges[p]
         for pc in range(e - 1, s - 1, -1):
             insn = insns[pc]
@@ -581,7 +737,7 @@ class Verifier:
 
     def _prove_one_loop(self, L: Loop, states
                         ) -> Tuple[Optional[int], str]:
-        insns = self.prog.insns
+        insns = self.insns
         cfg = self.cfg
         # a latch the fixpoint never reached cannot re-enter the header
         # (e.g. a body that returns on every path): the back edge is dead
@@ -706,7 +862,9 @@ class Verifier:
                            "bounded limit")
 
     def _step_bound(self) -> int:
-        """Dynamic-step upper bound for the interpreter's fuel check."""
+        """Dynamic-step upper bound for the interpreter's fuel check.
+        ``call_fn`` sites add the callee's own bound (callees are
+        analyzed first), scaled by the enclosing loop multiplier."""
         cfg = self.cfg
         total = 0
         for b in range(cfg.n):
@@ -717,6 +875,9 @@ class Verifier:
                 h = cfg.loops[h].parent
             s, e = cfg.ranges[b]
             total += (e - s) * mult
+            for pc in range(s, e):
+                if self.insns[pc].op == "call_fn":
+                    total += self.fns[1 + self.insns[pc].imm].max_steps * mult
             if total > (1 << 31):
                 return 1 << 31
         return total + 16
@@ -747,6 +908,8 @@ class Verifier:
                 insn.dst, AVal(MAPPTR, 0, 0, insn.map_name)))]
         if op == "call":
             return [(pc + 1, self._check_call(pc, insn.imm, st))]
+        if op == "call_fn":
+            return [(pc + 1, self._check_call_fn(pc, insn.imm, st))]
         if is_alu(op):
             return [(pc + 1, self._alu(pc, insn, st))]
         if is_jump_cond(op):
@@ -969,6 +1132,8 @@ class Verifier:
                     f"stack access out of bounds: [{lo - STACK_SIZE},"
                     f"{hi + size - STACK_SIZE}) exceeds the 512-byte frame "
                     "(stack overflow)", pc)
+            if lo < self._min_stack:
+                self._min_stack = lo    # per-function depth accounting
         elif v.kind == MAPVAL:
             vs = self.map_decls[v.map_name].value_size
             if lo < 0 or hi + size > vs:
@@ -1069,6 +1234,33 @@ class Verifier:
             regs[0] = AVal(MAPVAL_OR_NULL, 0, 0, map_decl.name, next(_null_ids))
         else:
             regs[0] = AVal.scalar()
+        for r in (1, 2, 3, 4, 5):
+            regs[r] = AVal(UNINIT)
+        return AState(tuple(regs), st.stack_init)
+
+    # -- bpf-to-bpf calls ------------------------------------------------------
+    def _check_call_fn(self, pc: int, idx: int, st: AState) -> AState:
+        """Interval/region transfer across a call boundary: scalar args
+        only (the callee gets a fresh frame, so caller pointers would
+        dangle), r0 takes the callee's joined return interval, r1..r5
+        are clobbered, r6..r9 and the caller stack survive untouched."""
+        if not (0 <= idx < len(self.prog.subprogs)):
+            raise VerifierError(f"call_fn fn{idx} out of range", pc)
+        callee = self.fns[1 + idx]
+        for argi in range(1, callee.n_args + 1):
+            v = st.regs[argi]
+            if v.kind == UNINIT:
+                raise VerifierError(
+                    f"call to '{callee.name}': argument R{argi} is "
+                    "uninitialized", pc)
+            if v.is_ptr:
+                raise VerifierError(
+                    f"call to '{callee.name}': R{argi} is a {v.name()}; "
+                    "bpf-to-bpf calls take scalar arguments only (the "
+                    "callee's frame is fresh — pass offsets, keys, or "
+                    "loaded values as integers)", pc)
+        regs = list(st.regs)
+        regs[0] = AVal(SCALAR, callee.ret_lo, callee.ret_hi)
         for r in (1, 2, 3, 4, 5):
             regs[r] = AVal(UNINIT)
         return AState(tuple(regs), st.stack_init)

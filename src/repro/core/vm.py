@@ -121,37 +121,47 @@ def _cmp(base: str, a, b) -> bool:
 class VM:
     """Interprets one program against a ctx buffer and resolved maps."""
 
+    CALL_DEPTH_LIMIT = 8   # frames, kernel MAX_CALL_FRAMES
+
     def __init__(self, insns: List[Insn], resolved_maps: Dict[str, BpfMap],
                  *, printk: Optional[Callable[[int], None]] = None,
-                 fuel: Optional[int] = None):
+                 fuel: Optional[int] = None, subprogs=()):
         """``fuel`` caps dynamic instruction count.  The runtime passes the
         verifier's proven step bound here so that even with bounded loops
         accepted statically, the interpreter keeps a runtime
         defense-in-depth: a bug in the bound proof (or a hand-run
-        unverified program) trips the fuel check instead of spinning."""
+        unverified program) trips the fuel check instead of spinning.
+        ``subprogs`` are the program's ``call_fn`` callees (SubProgram
+        sequence); each activation runs in a fresh frame."""
         self.insns = insns
         self.maps = resolved_maps
         self.printk = printk or (lambda v: None)
         self.fuel = INSN_BUDGET if fuel is None else max(1, int(fuel))
+        self.subprogs = tuple(subprogs)
 
     def run(self, ctx_buf: bytearray) -> int:
         regs: List[object] = [0] * 11
         stack = bytearray(STACK_SIZE)
         regs[1] = Ptr("ctx", ctx_buf, 0)
         regs[FP_REG] = Ptr("stack", stack, STACK_SIZE)
+        # fuel is shared across every frame of the call tree (one global
+        # dynamic budget, kernel-style), so the counter travels by cell
+        return self._exec(self.insns, regs, stack, [0], 1)
+
+    def _exec(self, insns: List[Insn], regs: List[object],
+              stack: bytearray, steps: List[int], depth: int) -> int:
         pc = 0
-        steps = 0
         fuel = self.fuel
-        n = len(self.insns)
+        n = len(insns)
         while True:
-            steps += 1
-            if steps > fuel:
+            steps[0] += 1
+            if steps[0] > fuel:
                 raise VMError(
                     f"instruction budget exceeded ({fuel} steps): runaway "
                     "loop (verifier bound violated or unverified program)")
             if not (0 <= pc < n):
                 raise VMError(f"pc {pc} out of program bounds")
-            insn = self.insns[pc]
+            insn = insns[pc]
             op = insn.op
             if op == "exit":
                 r0 = regs[0]
@@ -171,6 +181,27 @@ class VM:
                 continue
             if op == "call":
                 self._call(insn.imm, regs, stack)
+                pc += 1
+                continue
+            if op == "call_fn":
+                if not (0 <= insn.imm < len(self.subprogs)):
+                    raise VMError(f"call_fn fn{insn.imm} out of range")
+                if depth >= self.CALL_DEPTH_LIMIT:
+                    raise VMError(
+                        f"call depth exceeds {self.CALL_DEPTH_LIMIT} frames")
+                sp = self.subprogs[insn.imm]
+                _faults.fire("call_fn", sp.name)
+                # fresh frame: args r1..r5 copy in, r6..r9 zero-init,
+                # own 512-byte stack; only r0 flows back
+                cstack = bytearray(STACK_SIZE)
+                cregs: List[object] = [0] * 11
+                for r in (1, 2, 3, 4, 5):
+                    cregs[r] = regs[r]
+                cregs[FP_REG] = Ptr("stack", cstack, STACK_SIZE)
+                regs[0] = self._exec(list(sp.insns), cregs, cstack,
+                                     steps, depth + 1)
+                for r in (1, 2, 3, 4, 5):
+                    regs[r] = 0   # caller-saved, like helper calls
                 pc += 1
                 continue
             if is_alu(op):
@@ -275,6 +306,8 @@ class VM:
                 value = bytes(vp.mem[vp.off:vp.off + m.value_size])
             else:
                 value = stack_bytes(vp, m.value_size)
+            if m.kind == "hash":
+                _faults.fire("hash_rmw", m.name)
             regs[0] = u64(m.update(key, value))
         elif h.name == "map_delete_elem":
             mp, kp = regs[1], regs[2]
@@ -315,6 +348,8 @@ class VM:
             m = mp.mem
             key = stack_bytes(kp, m.key_size)
             _faults.fire("map_rmw", m.name)
+            if m.kind == "hash":
+                _faults.fire("hash_rmw", m.name)
             w = max(1, int(weight) if not isinstance(weight, Ptr) else 1)
             # the read-modify-write must hold the map lock or a racing
             # update_u64/update loses its write between our read and store

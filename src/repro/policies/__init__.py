@@ -10,10 +10,12 @@ from .perf import (expert_chunked_a2a, grad_compress,
 from .table1 import (SAFE_POLICIES, adaptive_channels, bandwidth_probe,
                      latency_feedback, native_baseline, noop, size_aware,
                      slo_enforcer, static_override)
+from .telemetry import TELEMETRY_POLICIES, bucket_profiler, bucket_tuner
 from .unsafe import UNSAFE_PROGRAMS
 
 __all__ = [
-    "LOOP_POLICIES", "SAFE_POLICIES", "UNSAFE_PROGRAMS",
+    "LOOP_POLICIES", "SAFE_POLICIES", "TELEMETRY_POLICIES",
+    "UNSAFE_PROGRAMS", "bucket_profiler", "bucket_tuner",
     "adaptive_channels", "histogram_bucket_tuner", "latency_argmin_tuner",
     "adapt_map", "adapt_profiler", "adapt_tuner", "bad_channels",
     "bandwidth_probe", "env_defaults", "latency_feedback", "native_baseline",

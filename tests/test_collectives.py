@@ -106,6 +106,69 @@ def test_dispatch_invalid_algo_falls_back():
     assert d.algo == Algo.DEFAULT  # graceful cost-table fallback
 
 
+def test_telemetry_tuner_end_to_end_dispatch():
+    """The tentpole's hash-keyed shared-subroutine tuner through the
+    real dispatcher: first sighting of a (collective, size-bucket) key
+    defers to the cost-model default; once the EMA is warm, large
+    traffic flips to RING/SIMPLE with bucket-scaled channels, small
+    traffic to TREE/LL — and the per-key counts land in the hash map
+    under the packed composite key."""
+    from repro.policies.telemetry import bucket_tuner
+
+    rt = PolicyRuntime()
+    rt.load(bucket_tuner.program)
+    disp = reset_dispatcher(runtime=rt, config=DispatchConfig(
+        enable_decision_cache=False))
+    MiB = 1 << 20
+
+    d0 = disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+    assert not d0.from_policy          # hash miss: insert + defer
+
+    for _ in range(3):
+        d = disp.decide(CollType.ALL_REDUCE, 8 * MiB, 8, axis_name="dp")
+    assert d.from_policy               # warm EMA drives the decision
+    assert d.algo == Algo.RING and d.proto == Proto.SIMPLE
+    assert d.channels == 13            # clamp(log2(8 MiB) - 10, 2, 16)
+
+    ds = disp.decide(CollType.ALL_REDUCE, 4096, 8, axis_name="dp")
+    assert not ds.from_policy          # separate bucket: its own miss
+    ds = disp.decide(CollType.ALL_REDUCE, 4096, 8, axis_name="dp")
+    assert ds.from_policy
+    assert ds.algo == Algo.TREE and ds.proto == Proto.LL
+    assert ds.channels == 2            # clamp(12 - 10, 2, 16)
+
+    m = rt.maps.get("bucket_tune_state")
+    key_big = (int(CollType.ALL_REDUCE) << 8) | 23   # log2(8 MiB)
+    key_small = (int(CollType.ALL_REDUCE) << 8) | 12  # log2(4096)
+    assert m.lookup_u64(key_big) == 4                # one per decide
+    assert m.lookup_u64(key_small) == 2
+
+
+def test_telemetry_pair_shares_subroutine_library():
+    """tuner + profiler compile the SAME library subroutines into their
+    subprogram tables (the shared-subroutine acceptance criterion), and
+    the profiler accumulates per-key latency EMAs through the chain."""
+    from repro.core import make_ctx
+    from repro.policies.telemetry import bucket_profiler, bucket_tuner
+
+    tuner_subs = {s.name for s in bucket_tuner.program.subprogs}
+    prof_subs = {s.name for s in bucket_profiler.program.subprogs}
+    assert {"bucket_key", "log2_bucket", "ema_step"} <= tuner_subs
+    assert {"bucket_key", "log2_bucket", "ema_step"} <= prof_subs
+
+    rt = PolicyRuntime()
+    rt.load(bucket_profiler.program)
+    for lat in (1000, 2000, 3000):
+        ctx = make_ctx("profiler", event_type=1, coll_type=1,
+                       msg_size=1 << 20, comm_id=3, latency_ns=lat)
+        rt.invoke("profiler", ctx)
+    m = rt.maps.get("bucket_prof_state")
+    key = (1 << 8) | 20                 # log2(1 MiB)
+    assert m.lookup_u64(key, 0) == 3    # event count
+    # EMA(shift=3): 1000 -> (1000*7+2000)/8 = 1125 -> (1125*7+3000)/8
+    assert m.lookup_u64(key, 1) == (1125 * 7 + 3000) // 8
+
+
 def test_net_hook_accounting():
     from repro.policies import net_accounting
     rt = PolicyRuntime()

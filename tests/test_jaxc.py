@@ -116,10 +116,25 @@ def test_adaptive_policy_state_evolves_in_graph():
         assert int(np.asarray(arrays["adapt_map"])[5, 1]) == 4
 
 
-def test_hash_map_policy_rejected_in_graph():
+def test_hash_map_policy_runs_in_graph():
+    """Hash-keyed policies compile in-graph now (the old rejection is
+    gone): adaptive_channels' latency_map lookup lowers to a probe loop
+    over the device hash table, matching the host tier on both the
+    seeded-hit and the miss path."""
     from repro.policies import adaptive_channels  # uses a hash map
-    with pytest.raises(JaxcError, match="hash"):
-        compile_jax(adaptive_channels.program)
+    seed = {"latency_map": {5: [2_000_000, 7]}}
+    hctx, jvec, hret, jret = _run_both(
+        adaptive_channels, dict(msg_size=MiB, comm_id=5), seed_maps=seed)
+    assert hret == jret
+    for i, f in enumerate(FIELDS):
+        assert int(jvec[i]) == hctx[f], f"field {f} differs"
+    assert hctx["n_channels"] == 8          # st[1] + 1 on the hit path
+
+    hctx2, jvec2, hret2, jret2 = _run_both(
+        adaptive_channels, dict(msg_size=MiB, comm_id=9), seed_maps=seed)
+    assert hret2 == jret2
+    assert int(jvec2[FIELDS.index("n_channels")]) \
+        == hctx2["n_channels"] == 2         # unseeded key: miss path
 
 
 def test_jaxc_composes_with_outer_jit_32bit():

@@ -922,6 +922,121 @@ def test_random_map_loops_match_native(seed):
 
 
 # ---------------------------------------------------------------------------
+# Random REAL loops (above the unroll limit) with bpf-to-bpf calls and
+# hash-map read-modify-writes in the body — the loop x call x hash
+# interaction every tier must agree on (verifier proves the bound AND
+# the per-call stack accounting; in-graph tiers inline the call and
+# lower the hash RMW inside fori_loop)
+# ---------------------------------------------------------------------------
+
+import linecache
+
+from repro.core.maps import MapRegistry
+
+
+def _load_generated_loop(src, name, tag, extra_globals):
+    filename = f"<gen-{tag}>"
+    linecache.cache[filename] = (len(src), None, src.splitlines(True),
+                                 filename)
+    ns = dict(extra_globals)
+    exec(compile(src, filename, "exec"), ns)
+    return ns[name]
+
+
+def _random_loop_call_hash_policy(seed):
+    """A random restricted-Python policy whose `for` loop exceeds
+    _MAX_UNROLL (so the frontend emits a REAL back-edge, not an unroll)
+    and whose body both calls a subroutine and hash-RMWs a table smaller
+    than the key range (collisions + possible full-table E2BIG)."""
+    rng = random.Random(0x10C0 + seed)
+    n = rng.randint(_MAX_UNROLL + 1, _MAX_UNROLL + 24)
+    cap = rng.choice([3, 4])
+    decl = map_decl("loop_hash", kind="hash", key_size=8, value_size=16,
+                    max_entries=cap)
+    mul = rng.randrange(3, 1 << 12) | 1
+    sh = rng.choice([1, 3, 5])
+    nkeys = rng.randint(2, cap + 1)    # may exceed cap -> E2BIG in-loop
+    src = "\n".join([
+        "def loop_call(ctx):",
+        "    def mix(a, b):",
+        f"        a = (a * {mul} + b) & 0xffffffffffffffff",
+        f"        a = a ^ (a >> {sh})",
+        "        return a",
+        "    acc = ctx.msg_size & 0xffffff",
+        f"    for i in range({n}):",
+        "        t = mix(acc, i)",
+        "        acc = t",
+        f"        k = i % {nkeys}",
+        "        st = loop_hash.lookup(k)",
+        "        if st is None:",
+        "            loop_hash.update(k, (1, acc))",
+        "        else:",
+        "            st[0] = st[0] + 1",
+        "            st[1] = st[1] ^ acc",
+        "    return acc & 0xffffffff",
+    ]) + "\n"
+    fn = _load_generated_loop(src, "loop_call", f"loopcall-{seed}",
+                              {"loop_hash": decl})
+    return compile_policy(fn, section="tuner", maps=[decl]), nkeys
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_real_loop_with_call_and_hash_all_tiers(seed):
+    """interp == v1 == v2 == native == jaxc == pallas == pallas32 on
+    seeded real-loop programs calling a subroutine and hash-RMWing per
+    iteration: return value, ctx writeback, and decoded hash state
+    (both value slots, present and absent keys) bit-identical."""
+    from repro.compat import have_x64
+    from repro.core.cc import compile_native, have_cc
+    from repro.core.pallasc import compile_host
+
+    prog, nkeys = _random_loop_call_hash_policy(seed)
+    vinfo = verify_with_info(prog)
+    assert vinfo.loop_bounds          # really a loop, not an unroll
+    assert prog.subprogs              # really a call, not a fold
+    ctx_kw = dict(msg_size=(seed + 7) << 13, n_ranks=8)
+
+    def mk_maps():
+        reg = MapRegistry()
+        return {d.name: reg.create(d.name, d.kind, key_size=d.key_size,
+                                   value_size=d.value_size,
+                                   max_entries=d.max_entries)
+                for d in prog.maps}
+
+    def state(resolved):
+        return {nm: [(m.lookup_u64(k, 0), m.lookup_u64(k, 1))
+                     for k in range(nkeys + 1)]
+                for nm, m in resolved.items()}
+
+    maps_i = mk_maps()
+    ctx = make_ctx("tuner", **ctx_kw)
+    want_ret = VM(prog.insns, maps_i, subprogs=prog.subprogs).run(ctx.buf)
+    want = (want_ret, bytes(ctx.buf), state(maps_i))
+
+    builders = {
+        "v1": lambda p, m, v: compile_program(p, m, codegen="v1"),
+        "v2": lambda p, m, v: compile_program(p, m, info=v),
+        "pallas32": lambda p, m, v: compile_host(p, m, v, tier="pallas32"),
+    }
+    if have_cc():
+        builders["native"] = compile_native
+    if have_x64():
+        builders["jaxc"] = lambda p, m, v: compile_host(p, m, v,
+                                                        tier="jaxc")
+        builders["pallas"] = lambda p, m, v: compile_host(p, m, v,
+                                                          tier="pallas")
+    for tier, build in builders.items():
+        maps_t = mk_maps()
+        fn = build(prog, maps_t, vinfo)
+        ctx_t = make_ctx("tuner", **ctx_kw)
+        ret = fn(ctx_t.buf)
+        if hasattr(fn, "flush"):
+            fn.flush()
+        got = (ret, bytes(ctx_t.buf), state(maps_t))
+        assert got == want, (seed, tier, got[0], want[0])
+
+
+# ---------------------------------------------------------------------------
 # Signed-compare / wraparound trip bounds (interval-domain bugfix)
 # ---------------------------------------------------------------------------
 

@@ -431,3 +431,48 @@ def test_boundary_constant_soup(seed):
     lines += ["    xor64 r6, r7", "    add64 r6, r8",
               "    mov64 r0, r6", "    exit"]
     _assert_match(assemble("\n".join(lines)))
+
+
+# ---------------------------------------------------------------------------
+# lru_hash stays off this tier — actionable rejection with workarounds
+# ---------------------------------------------------------------------------
+
+def test_lru_hash_rejected_with_concrete_workarounds():
+    """lru_hash recency metadata does not lower to pair form: selecting
+    the 32-bit tier for such a policy must fail at load with the maps
+    named and every documented workaround spelled out (plain hash kind,
+    word_width=64, host tier) — plain `hash` maps on the same path load
+    fine."""
+    from repro.core.jaxc import JaxcError, check_supported
+    from repro.core.pallasc import PallascError, compile_pallas
+    from repro.core.verifier import verify_with_info
+    from repro.policies.profiler import straggler_trap
+
+    prog = straggler_trap.program
+    with pytest.raises(PallascError) as ei:
+        compile_pallas(prog, verify_with_info(prog), mode="jit",
+                       word_width=32)
+    msg = str(ei.value)
+    assert "lru_hash" in msg and "'ema_map'" in msg
+    assert 'kind="hash"' in msg              # workaround 1: plain hash
+    assert "word_width=64" in msg            # workaround 2: x64 emulation
+    assert "host tier" in msg                # workaround 3: interp/jit/native
+    # the eligibility probe agrees (it drives the BENCH audit + CI gate)
+    with pytest.raises(JaxcError, match="lru_hash"):
+        check_supported(prog, word_width=32)
+    # same policy, 64-bit path: eligible (no exception)
+    check_supported(prog, word_width=64)
+
+    plain = map_decl("plain_ok32", kind="hash", key_size=8, value_size=8,
+                     max_entries=4)
+    prog2 = assemble("""
+        stdw  [r10-8], 3
+        ldmap r1, plain_ok32
+        mov64 r2, r10
+        add64i r2, -8
+        call  map_lookup_elem
+        mov64 r0, 0
+        exit
+    """, section="tuner", maps=(plain,))
+    fn, names = compile_jax32(prog2)         # loads cleanly on the pair tier
+    assert "plain_ok32" in names

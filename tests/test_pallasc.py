@@ -104,13 +104,44 @@ def test_unknown_mode_rejected():
         pallasc.compile_pallas(latency_argmin_tuner.program, mode="mosaic")
 
 
-def test_hash_map_policy_rejected_actionably():
+def test_hash_map_policy_runs_in_kernel():
+    """Hash-keyed policies lower into the kernel now (the old actionable
+    rejection is gone): latency_feedback's probe-loop hash table runs
+    device-resident and matches the interpreter — return value, ctx
+    writeback, and decoded per-key state (insert on first sight, then
+    in-place RMW on the warm key)."""
     _, _, pallasc = _x64_or_skip()
+    from repro.core.maps import MapRegistry
+    from repro.core.verifier import verify_with_info
     from repro.policies import table1 as T
-    with pytest.raises(pallasc.PallascError) as ei:
-        pallasc.compile_pallas(T.latency_feedback.program)
-    msg = str(ei.value)
-    assert "pallas tier" in msg and "hash" in msg and "host tier" in msg
+
+    prog = T.latency_feedback.program
+    vinfo = verify_with_info(prog)
+
+    def mk_maps():
+        reg = MapRegistry()
+        return {d.name: reg.create(d.name, d.kind, key_size=d.key_size,
+                                   value_size=d.value_size,
+                                   max_entries=d.max_entries)
+                for d in prog.maps}
+
+    kw = dict(msg_size=8 << 20, comm_id=5, n_ranks=8, max_channels=32)
+    maps_i = mk_maps()
+    maps_p = mk_maps()
+    fn = pallasc.compile_host(prog, maps_p, vinfo, tier="pallas")
+    for _ in range(2):                  # insert path, then RMW-hit path
+        ctx_p = make_ctx("tuner", **kw)
+        ret = fn(ctx_p.buf)
+        ctx_i2 = make_ctx("tuner", **kw)
+        want = VM(prog.insns, maps_i, subprogs=prog.subprogs).run(ctx_i2.buf)
+        assert ret == want
+        assert bytes(ctx_p.buf) == bytes(ctx_i2.buf)
+    fn.flush()
+    for name, m in maps_p.items():
+        mi = maps_i[name]
+        for k in (5, 6):
+            assert (m.lookup_u64(k, 0), m.lookup_u64(k, 1)) == \
+                (mi.lookup_u64(k, 0), mi.lookup_u64(k, 1)), (name, k)
 
 
 # ---------------------------------------------------------------------------

@@ -160,6 +160,243 @@ def test_seeded_six_tier_differential(seed):
 
 
 # ---------------------------------------------------------------------------
+# Seeded source-level harness: random hash-map and bpf-to-bpf-call
+# policies through the SAME six-tier ladder (frontend -> verifier ->
+# every backend), interp as ground truth.  Generated restricted-Python
+# source is registered in linecache so inspect.getsource works on the
+# exec'd policy function.
+# ---------------------------------------------------------------------------
+
+import linecache
+
+from repro.core.frontend import compile_policy, map_decl
+from repro.core.maps import MapRegistry
+from repro.core.verifier import verify_with_info
+
+
+def _load_generated(src, name, tag, extra_globals):
+    filename = f"<gen-{tag}>"
+    linecache.cache[filename] = (len(src), None, src.splitlines(True),
+                                 filename)
+    ns = dict(extra_globals)
+    exec(compile(src, filename, "exec"), ns)
+    return ns[name]
+
+
+def _mk_resolved(prog):
+    reg = MapRegistry()
+    return {d.name: reg.create(d.name, d.kind, key_size=d.key_size,
+                               value_size=d.value_size,
+                               max_entries=d.max_entries)
+            for d in prog.maps}
+
+
+def _hash_state(resolved, keys):
+    """Full (slot0, slot1) value state per probed key — present AND
+    absent keys, so divergence in occupancy is caught, not just values."""
+    return {n: [(m.lookup_u64(k, 0), m.lookup_u64(k, 1)) for k in keys]
+            for n, m in resolved.items()}
+
+
+def _tier_builders():
+    """name -> fn(prog, resolved_maps, vinfo) -> callable(ctx_buf) for
+    every tier available in this environment beyond the interpreter.
+    In-graph tiers come wrapped in the real DeviceBridge (flush() after
+    the run reconciles device-resident hash state back to host maps)."""
+    from repro.compat import have_x64
+    from repro.core.cc import compile_native, have_cc
+    from repro.core.pallasc import compile_host
+    builders = {
+        "v1": lambda p, m, v: compile_program(p, m, codegen="v1"),
+        "v2": lambda p, m, v: compile_program(p, m, info=v),
+        "pallas32": lambda p, m, v: compile_host(p, m, v, tier="pallas32"),
+    }
+    if have_cc():
+        builders["native"] = compile_native
+    if have_x64():
+        builders["jaxc"] = lambda p, m, v: compile_host(p, m, v,
+                                                        tier="jaxc")
+        builders["pallas"] = lambda p, m, v: compile_host(p, m, v,
+                                                          tier="pallas")
+    return builders
+
+
+def _run_all_tiers(prog, ctx_kw, keys, seed_state=None):
+    """interp ground truth, then every tier builder; assert bit-identical
+    (ret, ctx writeback, decoded hash state by key)."""
+    vinfo = verify_with_info(prog)
+
+    def fresh_maps():
+        resolved = _mk_resolved(prog)
+        if seed_state:
+            for name, kvs in seed_state.items():
+                for k, (v0, v1) in kvs.items():
+                    resolved[name].update_u64(k, v0, slot=0)
+                    resolved[name].update_u64(k, v1, slot=1)
+        return resolved
+
+    maps_i = fresh_maps()
+    ctx = make_ctx("tuner", **ctx_kw)
+    want_ret = VM(prog.insns, maps_i, subprogs=prog.subprogs).run(ctx.buf)
+    want = (want_ret, bytes(ctx.buf), _hash_state(maps_i, keys))
+
+    for tier, build in _tier_builders().items():
+        maps_t = fresh_maps()
+        fn = build(prog, maps_t, vinfo)
+        ctx_t = make_ctx("tuner", **ctx_kw)
+        ret = fn(ctx_t.buf)
+        if hasattr(fn, "flush"):
+            fn.flush()
+        got = (ret, bytes(ctx_t.buf), _hash_state(maps_t, keys))
+        assert got == want, (
+            f"tier {tier} diverged:\n  ret {got[0]} != {want[0]}\n"
+            f"  state {got[2]} != {want[2]}\n{prog.disasm()}")
+    return want_ret
+
+
+def _gen_hash_policy(seed):
+    """Random hash-map soup over a DELIBERATELY tiny table: keys come in
+    same-residue collision clusters (k, k+cap share a probe slot), and
+    more distinct keys than capacity force the full-table E2BIG path.
+    Covers insert / lookup-hit / lookup-miss / in-place pointer update."""
+    rng = random.Random(0xA5E + seed)
+    cap = rng.choice([2, 3, 4])
+    decl = map_decl("soup_hash", kind="hash", key_size=8, value_size=16,
+                    max_entries=cap)
+    base = [rng.randrange(1, 1 << 31) for _ in range(3)]
+    keys = sorted({k + j * cap for k in base for j in range(2)})
+    lines = ["def gen_hash(ctx):", "    acc = ctx.n_ranks + 1"]
+    for i in range(rng.randint(5, 12)):
+        r = rng.random()
+        k = rng.choice(keys)
+        if r < 0.40:
+            lines += [f"    st = soup_hash.lookup({k})",
+                      "    if st is None:",
+                      f"        acc = acc + {rng.randrange(1, 50)}",
+                      "    else:",
+                      "        acc = acc + st[0] + st[1]"]
+        elif r < 0.80:
+            lines += [f"    soup_hash.update({k}, (acc, {i + 1}))"]
+        else:
+            lines += [f"    st = soup_hash.lookup({k})",
+                      "    if st is not None:",
+                      "        st[0] = st[0] + acc"]
+    lines.append("    return acc & 0xffffffff")
+    src = "\n".join(lines) + "\n"
+    fn = _load_generated(src, "gen_hash", f"hash-{seed}",
+                         {"soup_hash": decl})
+    return compile_policy(fn, section="tuner", maps=[decl]), keys
+
+
+_CALL_ALU = [
+    "{d} = ({d} * {c} + {o}) & 0xffffffffffffffff",
+    "{d} = {d} ^ ({o} << {s})",
+    "{d} = ({d} + {c}) & 0xffffffff",
+    "{d} = {d} >> {s}",
+    "{d} = {d} | ({c} & {o})",
+    "{d} = ({d} - {o}) & 0xffffffffffffffff",
+]
+
+
+def _gen_call_policy(seed):
+    """Random bpf-to-bpf-call soup: 2-3 nested subprograms of random
+    arity with ALU-soup bodies, random sub-to-sub call edges (depth > 1
+    call graph), calls inside an unrolled bounded loop, and a final call
+    to a random subprogram — all shapes the verifier's call-graph/stack
+    accounting must prove and every backend must agree on."""
+    rng = random.Random(0xCA11 + seed)
+    n_subs = rng.randint(2, 3)
+    arity = [rng.randint(1, 3) for _ in range(n_subs)]
+    lines = ["def gen_call(ctx):"]
+    for s in range(n_subs):
+        params = [f"a{j}" for j in range(arity[s])]
+        lines.append(f"    def s{s}({', '.join(params)}):")
+        for _ in range(rng.randint(2, 4)):
+            t = rng.choice(_CALL_ALU)
+            d = rng.choice(params)
+            o = rng.choice(params + [str(rng.randrange(1, 1 << 16))])
+            lines.append("        " + t.format(
+                d=d, o=o, c=rng.randrange(1, 1 << 16),
+                s=rng.choice([1, 3, 7, 13, 31])))
+        if s > 0 and rng.random() < 0.7:
+            callee = rng.randrange(s)
+            cargs = ", ".join(rng.choice(params)
+                              for _ in range(arity[callee]))
+            lines.append(f"        t = s{callee}({cargs})")
+            lines.append(f"        {params[0]} = {params[0]} ^ t")
+        ret = " + ".join(params)
+        lines.append(f"        return ({ret}) & 0xffffffffffffffff")
+    k = rng.randint(2, 5)
+    c0 = ", ".join(["acc"] + ["i"] * (arity[0] - 1))
+    lines += ["    acc = ctx.msg_size & 0xffff",
+              f"    for i in range({k}):",
+              f"        t = s0({c0})",
+              "        acc = (acc + t + i) & 0xffffffffffffffff"]
+    top = rng.randrange(n_subs)
+    ctop = ", ".join(
+        ["acc"] + [str(rng.randrange(1, 99))] * (arity[top] - 1))
+    lines += [f"    u = s{top}({ctop})",
+              "    return (acc ^ u) & 0xffffffff"]
+    src = "\n".join(lines) + "\n"
+    fn = _load_generated(src, "gen_call", f"call-{seed}", {})
+    return compile_policy(fn, section="tuner", maps=[])
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_seeded_hash_soup_six_tier(seed):
+    """Random hash-map programs (insert / lookup / in-place update /
+    collision chains / full-table E2BIG) bit-identical across every
+    tier, decoded state compared key-by-key including absent keys.
+    Half the seeds start from pre-seeded host state, so the in-graph
+    legs also cover the upload (host -> device) direction."""
+    prog, keys = _gen_hash_policy(seed)
+    seed_state = None
+    if seed % 2:
+        seed_state = {"soup_hash": {keys[0]: (7 + seed, 11),
+                                    keys[-1]: (3, 5 * seed + 1)}}
+    _run_all_tiers(prog, dict(n_ranks=4 + seed, msg_size=1 << 20),
+                   keys, seed_state)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_seeded_call_soup_six_tier(seed):
+    """Random call-using programs (2-3 subprograms, random call edges,
+    calls in bounded loops) bit-identical across every tier."""
+    prog = _gen_call_policy(seed)
+    _run_all_tiers(prog, dict(msg_size=(seed + 3) << 12, n_ranks=8),
+                   keys=[])
+
+
+def test_full_hash_table_e2big_everywhere():
+    """Directed: capacity-2 table, three colliding keys — the third
+    insert must fail with E2BIG on EVERY tier, leaving it absent, while
+    the two resident keys update in place."""
+    cap = 2
+    decl = map_decl("tiny_hash", kind="hash", key_size=8, value_size=16,
+                    max_entries=cap)
+    k0, k1, k2 = 10, 10 + cap, 10 + 2 * cap   # one probe chain
+    src = "\n".join([
+        "def tiny(ctx):",
+        f"    tiny_hash.update({k0}, (1, 2))",
+        f"    tiny_hash.update({k1}, (3, 4))",
+        f"    tiny_hash.update({k2}, (5, 6))",       # table full: E2BIG
+        f"    st = tiny_hash.lookup({k0})",
+        "    hit = 0",
+        "    if st is not None:",
+        "        st[1] = 99",
+        "        hit = hit + 1",
+        f"    st = tiny_hash.lookup({k2})",
+        "    if st is not None:",
+        "        hit = hit + 100",                   # must stay 0
+        "    return hit",
+    ]) + "\n"
+    fn = _load_generated(src, "tiny", "tiny-e2big", {"tiny_hash": decl})
+    prog = compile_policy(fn, section="tuner", maps=[decl])
+    ret = _run_all_tiers(prog, dict(n_ranks=2), keys=[k0, k1, k2])
+    assert ret == 1                                  # hit k0, never k2
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis harness (host tiers; boundary-biased constant pool)
 # ---------------------------------------------------------------------------
 
