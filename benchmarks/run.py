@@ -20,6 +20,9 @@ every policy, no eligibility gate), the ``BENCH_table1.json`` writer
 (ns/decision per tier per policy, gating the ISSUE-8 >=5x-median
 native-vs-v2 acceptance AND the per-policy eligibility audit: zero
 unexplained ineligible policies on any tier at either word width), the
+table2 closed-loop leg (8-device host-CPU mesh: per-device telemetry
+shards -> ``sync_telemetry()`` merge -> warm per-size policy choices,
+rows landed in ``BENCH_table1.json`` under ``table2_closed_loop``), the
 warm pallas ``link.replace()`` leg (hash + subroutine policy swapped
 in place, T3 flush contract asserted end-to-end), the
 runtime fault-containment matrix (injected faults at every trust
@@ -114,6 +117,20 @@ def run_ci() -> int:
         cwd=repo, env=env)
     if r.returncode != 0:
         print("CI: table1 BENCH writer FAILED", flush=True)
+        failures += 1
+
+    print("=== ci: table2 closed-loop 8-device mesh -> BENCH_table1.json "
+          "===", flush=True)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import json, sys;"
+         "from benchmarks.table2_allreduce import ci_closed_loop;"
+         "rec = ci_closed_loop();"
+         "print(json.dumps(rec, separators=(',', ':'), default=str));"
+         "sys.exit(0 if rec['ok'] else 1)"],
+        cwd=repo, env=env)
+    if r.returncode != 0:
+        print("CI: table2 closed loop FAILED", flush=True)
         failures += 1
 
     print("=== ci: observability export schema ===", flush=True)

@@ -36,7 +36,7 @@ module implements the host-side decision fast path:
    decision is a function of the ctx inputs only, so it is cached keyed on
    ``(epoch, chain_fingerprint, coll, size, n_ranks, axis_kind,
    dtype_bytes, comm_id)`` plus
-   the config knobs.  The **epoch** in the key is what preserves the
+   the config knobs and the mesh topology pair (``set_topology``).  The **epoch** in the key is what preserves the
    paper's T3 hot-reload semantics: every load/reload/detach bumps the
    runtime epoch, so the very next ``decide()`` after a swap *completes*
    misses the cache and re-runs the new policy.  The guarantee is exactly
@@ -165,6 +165,11 @@ class DispatchConfig:
     safe_mode_threshold: int = 8
     safe_mode_window: int = 64
     safe_mode_cooldown: int = 512
+    # --- mesh-scale telemetry -----------------------------------------
+    # auto-run sync_telemetry() every N decisions (0 = manual only):
+    # the all-gather merge step that reconciles per-device map shards
+    # back into the pinned host maps
+    telemetry_sync_every: int = 0
 
 
 @dataclasses.dataclass
@@ -267,7 +272,76 @@ class CollectiveDispatcher:
         self._fault_marks: Deque[int] = collections.deque()
         self._safe_mode = False
         self._safe_until = 0
+        # mesh topology fed into every policy ctx (0 = unknown: policies
+        # treat the mesh as one node); participates in the cache key
+        self._n_nodes = 0
+        self._ranks_per_node = 0
+        # mesh-telemetry merge plumbing: registered sync callbacks
+        # (multi-shard bridge flushes, in-graph state merges) plus the
+        # auto-trigger bookkeeping
+        self._mesh_syncs: List[Callable[[], object]] = []
+        self._decisions_since_sync = 0
+        self.telemetry_syncs = 0
         self._apply_env_plugin()
+
+    # ------------------------------------------------------------------
+    # mesh topology + sharded-telemetry merge
+    # ------------------------------------------------------------------
+    def set_topology(self, mesh=None, *, n_nodes: int = 0,
+                     ranks_per_node: int = 0) -> Tuple[int, int]:
+        """Feed mesh topology into every subsequent policy decision.
+
+        Pass a jax ``Mesh`` (facts derived via
+        :func:`repro.launch.mesh.mesh_topology`) or explicit counts.
+        The pair lands in the new ``n_nodes`` / ``ranks_per_node`` ctx
+        fields, so topology-aware policies (``policies.mesh.topo_tuner``)
+        can pick ring vs tree vs hierarchical schedules; it also joins
+        the decision-cache key — changing topology can never serve a
+        stale cached decision.  Returns the stored pair."""
+        if mesh is not None:
+            from ..launch.mesh import mesh_topology
+            topo = mesh_topology(mesh)
+            n_nodes = topo["n_nodes"]
+            ranks_per_node = topo["ranks_per_node"]
+        self._n_nodes = max(0, int(n_nodes))
+        self._ranks_per_node = max(0, int(ranks_per_node))
+        return self._n_nodes, self._ranks_per_node
+
+    @property
+    def topology(self) -> Tuple[int, int]:
+        """Current ``(n_nodes, ranks_per_node)`` fed to policies."""
+        return self._n_nodes, self._ranks_per_node
+
+    def register_mesh_sync(self, fn: Callable[[], object]) -> None:
+        """Register a callback :meth:`sync_telemetry` runs to pull
+        per-device telemetry shards home — typically a multi-shard
+        ``DeviceBridge.flush`` or an in-graph state merge closure."""
+        self._mesh_syncs.append(fn)
+
+    def sync_telemetry(self) -> int:
+        """The all-gather merge step: run every registered mesh-sync
+        callback (each reconciles its per-device map shards into the
+        pinned host maps via the deterministic shard merge), then flush
+        the runtime's own bridges so single-shard in-graph state lands
+        too.  Returns the number of registered callbacks run.
+        Auto-triggered every ``config.telemetry_sync_every`` decisions
+        when that knob is set; always safe to call manually."""
+        synced = 0
+        for fn in self._mesh_syncs:
+            fn()
+            synced += 1
+        self.runtime.flush_bridges()
+        self.telemetry_syncs += 1
+        self._decisions_since_sync = 0
+        return synced
+
+    def _maybe_auto_sync(self) -> None:
+        every = self.config.telemetry_sync_every
+        if every <= 0:
+            return
+        self._decisions_since_sync += 1
+        if self._decisions_since_sync >= every:
+            self.sync_telemetry()
 
     def apply_env(self, *, n_devices: int = 0, tp: int = 0,
                   dp: int = 0, n_pods: int = 1) -> bool:
@@ -400,7 +474,8 @@ class CollectiveDispatcher:
                    coll, size_bytes, n, axis_kind, dtype_bytes, cid,
                    cfg.default_algo, cfg.default_proto,
                    cfg.default_channels, cfg.max_channels,
-                   cfg.hw.n_links)  # topo_links is a policy ctx input
+                   cfg.hw.n_links,  # topo_links is a policy ctx input
+                   self._n_nodes, self._ranks_per_node)
             d = cache.get(key)
             if d is not None:
                 # memoization elides policy + cost-table work only; the
@@ -408,6 +483,7 @@ class CollectiveDispatcher:
                 self.cache_hits += 1
                 self.decisions.append(d)
                 self._net_hook(d)
+                self._maybe_auto_sync()
                 return d
             self.cache_misses += 1
         faulted = False
@@ -424,6 +500,7 @@ class CollectiveDispatcher:
                 axis_kind=axis_kind, dtype_bytes=dtype_bytes,
                 max_channels=cfg.max_channels, topo_links=cfg.hw.n_links,
                 algorithm=0, protocol=0, n_channels=0,
+                n_nodes=self._n_nodes, ranks_per_node=self._ranks_per_node,
             )
             lf_before = self.runtime.stats.link_faults if guards else 0
             try:
@@ -512,6 +589,7 @@ class CollectiveDispatcher:
                 cache[key] = d
         self.decisions.append(d)
         self._net_hook(d)
+        self._maybe_auto_sync()
         return d
 
     def _evict_oldest_half(self, cache: Dict[Tuple, Decision]) -> None:

@@ -61,6 +61,14 @@ TIERS = ("jaxc", "pallas", "pallas32")
 # hosts drain it at flush boundaries via :meth:`InGraphSelector.drain_faults`
 FAULT_KEY = "__fault_flags__"
 
+# per-shard write cursor: how many decide() calls have run against this
+# state copy (a uint32[1] leaf bumped in-graph).  Under ``shard_map``
+# every device threads its OWN state, so after a step each device's copy
+# diverged; the cursor is the version the deterministic shard merge
+# (:meth:`InGraphSelector.merge_shard_states`) uses for its
+# max-version-wins cells
+CURSOR_KEY = "__write_cursor__"
+
 
 class InGraphSelector:
     def __init__(self, program: Program, *, tier: str = "jaxc"):
@@ -83,6 +91,11 @@ class InGraphSelector:
         else:
             self._fn, self.map_names = compile_jax(program, vinfo)
             self.word_width = 64
+        from ..core.jaxc import written_map_names
+        # maps the verified program can write — the only leaves the
+        # shard merge ever reconciles (lookup-only state can't diverge)
+        self.written_names = written_map_names(program, vinfo) \
+            & set(self.map_names)
 
     def init_state(self, registry: Optional[MapRegistry] = None
                    ) -> Dict[str, jnp.ndarray]:
@@ -102,6 +115,7 @@ class InGraphSelector:
                            max_entries=d.max_entries)
             out[d.name] = to_array(m)
         out[FAULT_KEY] = jnp.zeros((1,), jnp.uint32)
+        out[CURSOR_KEY] = jnp.zeros((1,), jnp.uint32)
         return out
 
     def _ctx_vec(self, fields: Dict[str, object]) -> jnp.ndarray:
@@ -155,7 +169,9 @@ class InGraphSelector:
                 fields["dtype_bytes"] = latency_ns
             vec = self._ctx_vec(fields)
             flags = state.get(FAULT_KEY)
-            prog_state = {k: v for k, v in state.items() if k != FAULT_KEY}
+            cursor = state.get(CURSOR_KEY)
+            prog_state = {k: v for k, v in state.items()
+                          if k not in (FAULT_KEY, CURSOR_KEY)}
             _, vec_out, prog_state = self._fn(vec, prog_state)
             if self.word_width == 32:
                 raw_algo = vec_out[_IDX["algorithm"], 0].astype(jnp.int32)
@@ -172,6 +188,8 @@ class InGraphSelector:
         if flags is not None:
             bad = ((raw_algo != algo) | (raw_ch != ch)).astype(jnp.uint32)
             state[FAULT_KEY] = flags + bad
+        if cursor is not None:
+            state[CURSOR_KEY] = cursor + jnp.uint32(1)
         return algo, ch, state
 
     def drain_faults(self, state: Dict) -> Tuple[int, Dict]:
@@ -186,6 +204,73 @@ class InGraphSelector:
         state = dict(state)
         state[FAULT_KEY] = jnp.zeros((1,), jnp.uint32)
         return n, state
+
+    # ------------------------------------------------------------------
+    # mesh-scale state: per-device shards -> one merged host view
+    # ------------------------------------------------------------------
+    @staticmethod
+    def unstack_sharded(state: Dict) -> list:
+        """Split a state whose leaves carry a leading DEVICE axis (the
+        shape ``shard_map``/``jax.device_get`` hands back when every
+        device threads its own copy) into one per-device state list for
+        :meth:`merge_shard_states`."""
+        import numpy as np
+        leaves = {k: np.asarray(jax.device_get(v))
+                  for k, v in state.items()}
+        counts = {v.shape[0] for v in leaves.values()}
+        if len(counts) != 1:
+            raise ValueError(
+                f"inconsistent leading device axis across state leaves: "
+                f"{sorted(counts)}")
+        n = counts.pop()
+        return [{k: v[i] for k, v in leaves.items()} for i in range(n)]
+
+    def merge_shard_states(self, registry: MapRegistry,
+                           shard_states, base_state: Dict,
+                           stats: Optional[dict] = None) -> int:
+        """Publish per-device state shards back into the host maps.
+
+        ``shard_states`` is one state dict per device (use
+        :meth:`unstack_sharded` on a stacked state), each carrying the
+        diverged map leaves plus its ``CURSOR_KEY`` write count;
+        ``base_state`` is the state they were ALL seeded from (what
+        :meth:`init_state` returned).  Each written map reconciles via
+        the deterministic shard merge (:mod:`repro.core.shardmerge`):
+        counter slots sum per-shard deltas, ``merge="max"`` cells go to
+        the shard with the highest cursor, hash maps merge per key —
+        bit-identical for any device count and shard order.  Returns
+        the number of maps merged."""
+        import numpy as np
+        from ..core import shardmerge as _sm
+
+        def to64(arr):
+            a = np.asarray(jax.device_get(arr))
+            return _sm.pairs_to_u64(a) if self.word_width == 32 \
+                else a.astype("<u8", copy=False)
+
+        merged_maps = 0
+        for d in self.program.maps:
+            if d.name not in self.written_names:
+                continue
+            base64 = to64(base_state[d.name])
+            shards = []
+            for sid, st in enumerate(shard_states):
+                cur = st.get(CURSOR_KEY)
+                cur = int(np.asarray(jax.device_get(cur)).reshape(-1)[0]) \
+                    if cur is not None else 1
+                if cur == 0:
+                    continue
+                shards.append(_sm.Shard(sid, to64(st[d.name]), cur, base64))
+            if not shards:
+                continue
+            m = registry.create(d.name, d.kind, key_size=d.key_size,
+                                value_size=d.value_size,
+                                max_entries=d.max_entries)
+            with m.lock:
+                m.from_device(_sm.merge_map_shards(d, m.to_device(),
+                                                   shards, stats))
+            merged_maps += 1
+        return merged_maps
 
     def all_reduce(self, x, axis_name: str, state: Dict, *,
                    comm_id: int = 0, latency_ns=None):

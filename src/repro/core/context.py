@@ -67,6 +67,13 @@ POLICY_CONTEXT = CtxType(
         ("algorithm", True),
         ("protocol", True),
         ("n_channels", True),
+        # topology inputs (read-only) — appended AFTER the outputs so
+        # every pre-existing field keeps its offset (compiled programs
+        # bake offsets in).  Fed from launch/mesh.py::mesh_topology via
+        # CollectiveDispatcher.set_topology; both default to 0 = unknown
+        # (policies treat 0 ranks_per_node as "all ranks on one node").
+        ("n_nodes", False),        # distinct hosts/processes in the mesh
+        ("ranks_per_node", False),  # ranks co-located per host
     ],
 )
 

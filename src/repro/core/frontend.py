@@ -58,17 +58,35 @@ class CompileError(Exception):
 
 def map_decl(name: str, *, kind: str = "array", key_size: int = 4,
              value_size: int = 8, max_entries: int = 64,
-             shared: bool = False) -> MapDecl:
+             shared: bool = False, merge: tuple = ()) -> MapDecl:
     """Declare a map.  ``shared=True`` pins it into the registry's
     cross-plugin namespace at load time, so other programs (and host-side
-    tooling) can reach the same state by name."""
+    tooling) can reach the same state by name.
+
+    ``merge`` names the per-value-slot shard-merge reduce used when the
+    map is written on a multi-device mesh (core.shardmerge): ``"sum"``
+    for counters (per-shard deltas add, wrapping u64), ``"max"`` for
+    EMA/last-writer cells (the shard with the highest write cursor
+    wins).  Shorter tuples pad with ``"sum"``."""
     if kind not in MAP_KINDS:
         raise CompileError(
             f"map {name!r}: unknown map kind {kind!r}; valid kinds: "
             f"{', '.join(sorted(MAP_KINDS))}")
     if kind not in ("hash", "lru_hash"):
         key_size = 4
-    return MapDecl(name, kind, key_size, value_size, max_entries, shared)
+    merge = tuple(merge)
+    slots = max(1, value_size // 8)
+    if len(merge) > slots:
+        raise CompileError(
+            f"map {name!r}: merge spec has {len(merge)} entries but the "
+            f"value holds only {slots} u64 slot(s)")
+    for mode in merge:
+        if mode not in ("sum", "max"):
+            raise CompileError(
+                f"map {name!r}: unknown merge mode {mode!r}; "
+                "use 'sum' (counter) or 'max' (max-version-wins)")
+    return MapDecl(name, kind, key_size, value_size, max_entries, shared,
+                   merge)
 
 
 def subroutine(fn):

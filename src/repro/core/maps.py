@@ -368,13 +368,23 @@ class HashMap(BpfMap):
         slots = cols - 2
         with self._lock:
             # the used flags are the source of truth; the occupancy
-            # control word is derived and recomputed here
-            table: Dict[bytes, bytearray] = {}
+            # control word is derived and recomputed here.  The LIVE dict
+            # is mutated in place — the host-JIT fast path binds
+            # ``self._table.get`` at compile time (dict identity is part
+            # of the map's contract) and ``lookup_ref`` hands out value
+            # bytearrays, so both must survive a device writeback.
+            fresh = set()
             for i in range(self.max_entries):
                 if int(a[i, slots + 1]) != 0:
                     kb = int(a[i, slots]).to_bytes(self.key_size, "little")
-                    table[kb] = bytearray(a[i, :slots].tobytes())
-            self._table = table
+                    fresh.add(kb)
+                    slot = self._table.get(kb)
+                    if slot is None:
+                        self._table[kb] = bytearray(a[i, :slots].tobytes())
+                    else:
+                        slot[:] = a[i, :slots].tobytes()
+            for kb in [k for k in self._table if k not in fresh]:
+                del self._table[kb]
             self._version += 1
 
 

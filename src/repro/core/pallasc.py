@@ -289,6 +289,10 @@ class BridgeStats:
     map_uploads: int = 0
     map_downloads: int = 0
     flushes: int = 0
+    # multi-shard bridges: merged flushes performed and hash keys dropped
+    # to capacity (E2BIG) during a merge
+    shard_merges: int = 0
+    merge_dropped_keys: int = 0
     # fault containment: upload retries taken, calls served by the host
     # VM after retries ran dry, writebacks deferred after a download
     # failure, and out-of-domain tuner decisions observed device-side
@@ -340,14 +344,36 @@ class DeviceBridge:
     (``donate_argnums``) so repeat calls alias device buffers instead of
     copying; CPU/interpret CI skips donation (unsupported there, and
     jax would warn on every call).
+
+    Mesh mode (``n_shards > 1``): the bridge keeps one device-resident
+    state copy PER SHARD (device/rank index, selected with
+    :meth:`set_shard`), each seeded from the host maps at its own upload
+    time and carrying a per-map **write cursor** (kernel calls that
+    wrote the map on that shard).  Per-call writeback is meaningless
+    across shards, so mesh mode requires ``sync="deferred"``; ``flush()``
+    runs the versioned, conflict-free merge instead of a one-shard
+    overwrite: counter slots land as the sum of per-shard deltas, EMA
+    (``merge="max"``) slots go to the shard with the highest cursor, and
+    hash maps reconcile per key (:mod:`repro.core.shardmerge`).  The
+    merge result is bit-deterministic in shard count and order, and host
+    mutations made while shards were accumulating are never lost — each
+    shard contributes only deltas against its own seed snapshot.
     """
 
     def __init__(self, prog: Program, resolved_maps: Dict[str, BpfMap],
                  vinfo=None, *, tier: str = "pallas",
-                 mode: Optional[str] = None, sync: str = "step"):
+                 mode: Optional[str] = None, sync: str = "step",
+                 n_shards: int = 1):
         if sync not in ("step", "deferred"):
             raise PallascError(f"unknown bridge sync policy {sync!r}; "
                                "use 'step' or 'deferred'")
+        if n_shards < 1:
+            raise PallascError(f"n_shards must be >= 1, got {n_shards}")
+        if n_shards > 1 and sync != "deferred":
+            raise PallascError(
+                "multi-shard bridges accumulate per-shard deltas and merge "
+                "at flush(); per-call writeback cannot reconcile shards — "
+                "use sync='deferred'")
         if vinfo is None:
             vinfo = verify_with_info(prog)
         if tier == "pallas32":
@@ -390,13 +416,63 @@ class DeviceBridge:
         donate = jax.default_backend() in ("tpu", "gpu")
         self._jfn = jax.jit(fn, donate_argnums=(1,)) if donate \
             else jax.jit(fn)
-        self._dev: Dict[str, jnp.ndarray] = {}
-        self._seen: Dict[str, int] = {}
-        # maps possibly mutated by the kernel since their last writeback
-        # (deferred mode only; step mode writes back every call)
-        self._device_dirty: set = set()
+        self.n_shards = n_shards
+        if n_shards > 1:
+            from .shardmerge import MERGEABLE_KINDS
+            bad = sorted(n for n in self._written
+                         if prog.map_decl(n).kind not in MERGEABLE_KINDS)
+            if bad:
+                kinds = ", ".join(f"{n} ({prog.map_decl(n).kind})"
+                                  for n in bad)
+                raise PallascError(
+                    f"policy '{prog.name}' writes map(s) with no order-free "
+                    f"shard merge: {kinds}; mergeable kinds: "
+                    f"{', '.join(MERGEABLE_KINDS)}")
+        self._shard = 0
+        # one device-resident state copy per shard; single-shard bridges
+        # see the exact pre-mesh behavior through the property aliases
+        self._devs = [dict() for _ in range(n_shards)]
+        self._seens = [dict() for _ in range(n_shards)]
+        self._dirtys = [set() for _ in range(n_shards)]
+        # mesh mode only: per-shard seed snapshots (u64 host layout, for
+        # delta merges) and per-map write cursors
+        self._bases = [dict() for _ in range(n_shards)]
+        self._cursors = [dict() for _ in range(n_shards)]
         self._lock = threading.Lock()
         self.stats = BridgeStats()
+
+    # per-shard state, addressed through the currently-selected shard so
+    # the call path reads identically in single- and multi-shard mode
+    @property
+    def _dev(self) -> Dict[str, jnp.ndarray]:
+        return self._devs[self._shard]
+
+    @_dev.setter
+    def _dev(self, value: Dict[str, jnp.ndarray]) -> None:
+        self._devs[self._shard] = value
+
+    @property
+    def _seen(self) -> Dict[str, int]:
+        return self._seens[self._shard]
+
+    @property
+    def _device_dirty(self) -> set:
+        return self._dirtys[self._shard]
+
+    @_device_dirty.setter
+    def _device_dirty(self, value: set) -> None:
+        self._dirtys[self._shard] = value
+
+    def set_shard(self, shard: int) -> None:
+        """Select which shard (device/rank index) subsequent calls run
+        against.  Multi-process launches call this with their rank; the
+        closed-loop benchmark round-robins it to simulate per-device
+        in-kernel telemetry on a single host."""
+        if not 0 <= shard < self.n_shards:
+            raise PallascError(
+                f"shard {shard} out of range for n_shards={self.n_shards}")
+        with self._lock:
+            self._shard = shard
 
     # -- host map -> device ------------------------------------------------
     def _upload_dirty(self) -> None:
@@ -417,6 +493,12 @@ class DeviceBridge:
                                     if self.word_width == 32
                                     else map_to_array(m))
                     self._seen[n] = m.version
+                    if self.n_shards > 1 and n in self._written:
+                        # merge base: the u64 state THIS shard was seeded
+                        # from — its flush contribution is a delta (or a
+                        # changed-cell set) against exactly this snapshot
+                        self._bases[self._shard][n] = m.to_device()
+                        self._cursors[self._shard][n] = 0
                 self.stats.map_uploads += 1
 
     # -- device -> host map ------------------------------------------------
@@ -513,6 +595,10 @@ class DeviceBridge:
                     self._device_dirty |= self._written
             else:
                 self._device_dirty |= self._written
+                if self.n_shards > 1:
+                    cur = self._cursors[self._shard]
+                    for n in self._written:
+                        cur[n] = cur.get(n, 0) + 1
             return rv
 
     def flush(self) -> int:
@@ -524,35 +610,88 @@ class DeviceBridge:
         revert host mutations made since the last upload."""
         with self._lock:
             _faults.fire("bridge_flush", self.tier)
-            names = [n for n in self._names
-                     if n in self._dev and n in self._written]
-            self._writeback(names)
+            if self.n_shards > 1:
+                synced = self._merged_flush()
+            else:
+                names = [n for n in self._names
+                         if n in self._dev and n in self._written]
+                self._writeback(names)
+                synced = len(names)
             self.stats.flushes += 1
             # drain the per-call out-of-domain observations so the host
             # side sees kernel-tier fault events at T3 boundaries
             self.stats.domain_faults += self._pending_domain_faults
             self._pending_domain_faults = 0
-            return len(names)
+            return synced
+
+    def _merged_flush(self) -> int:
+        """Mesh-mode flush: reconcile every shard's copy of each written
+        map against the CURRENT host state with the deterministic shard
+        merge, then drop all shard copies so the next call per shard
+        re-seeds from the merged view.  Returns maps merged."""
+        import numpy as np
+        from . import shardmerge as _sm
+        synced = 0
+        for n in self._names:
+            if n not in self._written:
+                continue
+            decl = self._prog.map_decl(n)
+            shards = []
+            for s in range(self.n_shards):
+                arr = self._devs[s].get(n)
+                if arr is None or self._cursors[s].get(n, 0) == 0:
+                    continue  # never seeded, or seeded but never written
+                a64 = (_sm.pairs_to_u64(arr) if self.word_width == 32
+                       else np.asarray(jax.device_get(arr), dtype="<u8"))
+                shards.append(_sm.Shard(s, a64, self._cursors[s][n],
+                                        self._bases[s][n]))
+            if not shards:
+                continue
+            mstats: dict = {}
+            m = self._maps[n]
+            with m.lock:
+                merged = _sm.merge_map_shards(decl, m.to_device(), shards,
+                                              mstats)
+                m.from_device(merged)
+            self.stats.merge_dropped_keys += mstats.get("dropped_keys", 0)
+            self.stats.map_downloads += 1
+            synced += 1
+            # every shard copy is now stale relative to the merged host
+            # state; drop them so the next per-shard call re-seeds
+            for s in range(self.n_shards):
+                self._devs[s].pop(n, None)
+                self._seens[s].pop(n, None)
+                self._dirtys[s].discard(n)
+                self._bases[s].pop(n, None)
+                self._cursors[s].pop(n, None)
+        if synced:
+            self.stats.shard_merges += 1
+        return synced
 
     def invalidate(self, name: Optional[str] = None) -> None:
         """Drop the device copy of ``name`` (or all maps) so the next
         call re-uploads from the host — the escape hatch for host writes
         that bypass the versioned map mutation surface."""
         with self._lock:
-            if name is None:
-                self._dev.clear()
-                self._seen.clear()
-                self._device_dirty.clear()
-            else:
-                self._dev.pop(name, None)
-                self._seen.pop(name, None)
-                self._device_dirty.discard(name)
+            for s in range(self.n_shards):
+                if name is None:
+                    self._devs[s].clear()
+                    self._seens[s].clear()
+                    self._dirtys[s].clear()
+                    self._bases[s].clear()
+                    self._cursors[s].clear()
+                else:
+                    self._devs[s].pop(name, None)
+                    self._seens[s].pop(name, None)
+                    self._dirtys[s].discard(name)
+                    self._bases[s].pop(name, None)
+                    self._cursors[s].pop(name, None)
 
 
 def compile_host(prog: Program, resolved_maps: Dict[str, BpfMap],
                  vinfo=None, *, tier: str = "pallas",
                  mode: Optional[str] = None,
-                 sync: str = "step") -> DeviceBridge:
+                 sync: str = "step", n_shards: int = 1) -> DeviceBridge:
     """Wrap an in-graph tier (pallas / pallas32 / jaxc) behind the host
     closure signature ``fn(ctx_buf) -> int`` the runtime invokes.
 
@@ -562,6 +701,11 @@ def compile_host(prog: Program, resolved_maps: Dict[str, BpfMap],
     decisions replay the compiled kernel with zero retraces and, when
     host maps are clean, zero map uploads (``sync="deferred"`` also
     skips the per-call writeback of kernel-written maps; the state then
-    reaches host maps at ``flush()``/T3 boundaries)."""
+    reaches host maps at ``flush()``/T3 boundaries).
+
+    ``n_shards > 1`` builds a mesh-mode bridge (one device-resident
+    state copy per shard, selected with :meth:`DeviceBridge.set_shard`;
+    ``flush()`` runs the deterministic shard merge) — requires
+    ``sync="deferred"``."""
     return DeviceBridge(prog, resolved_maps, vinfo, tier=tier, mode=mode,
-                        sync=sync)
+                        sync=sync, n_shards=n_shards)

@@ -26,6 +26,12 @@ class MapDecl:
     # at load time (MapRegistry.get_pinned) — the paper's composability
     # substrate: profiler and tuner programs share state by name
     shared: bool = False
+    # per-value-slot shard-merge reduce for mesh-scale telemetry
+    # (core.shardmerge): "sum" merges per-shard deltas by wrapping u64
+    # addition (the counter idiom), "max" takes the cell from the shard
+    # with the highest write cursor (the EMA / last-writer idiom).
+    # Shorter tuples pad with "sum"; () means every slot is a counter.
+    merge: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)

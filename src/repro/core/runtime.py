@@ -274,6 +274,7 @@ class PolicyRuntime:
     def __init__(self, *, use_interpreter: bool = False,
                  tier: Optional[str] = None,
                  bridge_sync: str = "step",
+                 bridge_shards: int = 1,
                  printk_log_max: int = 4096,
                  breaker: Optional[BreakerConfig] = None):
         if tier is None:
@@ -289,10 +290,20 @@ class PolicyRuntime:
         if bridge_sync not in ("step", "deferred"):
             raise ValueError(f"unknown bridge_sync {bridge_sync!r}; "
                              "use 'step' or 'deferred'")
+        if bridge_shards < 1:
+            raise ValueError(f"bridge_shards must be >= 1, "
+                             f"got {bridge_shards}")
+        if bridge_shards > 1 and bridge_sync != "deferred":
+            raise ValueError("bridge_shards > 1 (mesh mode) requires "
+                             "bridge_sync='deferred': per-shard deltas "
+                             "merge at flush boundaries, not per call")
         self.tier = tier
         # in-graph tiers: when kernel-written maps sync back to host maps
         # ("step" = after every call; "deferred" = at flush/T3 boundaries)
         self.bridge_sync = bridge_sync
+        # in-graph tiers: device-resident map shards per bridge (mesh
+        # mode — one per device/rank, reconciled by the shard merge)
+        self.bridge_shards = bridge_shards
         self.maps = MapRegistry()
         self._chains: Dict[str, _Chain] = {s: _EMPTY_CHAIN for s in CTX_TYPES}
         self._epoch = 0
@@ -870,7 +881,8 @@ class PolicyRuntime:
                 # reused, never recomputed
                 from .pallasc import compile_host
                 fn = compile_host(program, resolved, vinfo, tier=self.tier,
-                                  sync=self.bridge_sync)
+                                  sync=self.bridge_sync,
+                                  n_shards=self.bridge_shards)
             elif self.tier == "native":
                 # machine code via the system toolchain; same verifier
                 # artifacts, third consumer.  Hosts without a compiler

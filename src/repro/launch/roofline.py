@@ -298,6 +298,67 @@ def aggregate(comps: Dict[str, Computation], mult: Dict[str, float],
     return flops, hbm, wire, by_op
 
 
+# ---------------------------------------------------------------------------
+# AllReduce algorithm predictor — the alpha-beta model behind topo_tuner
+# ---------------------------------------------------------------------------
+
+LINK_LATENCY_S = 2e-6        # per-hop launch/sync overhead (alpha)
+INTER_NODE_PENALTY = 4.0     # NIC vs ICI bandwidth ratio for cross-node hops
+TREE_BW_DERATE = 0.6         # halving/doubling strides use the fabric worse
+
+ALLREDUCE_ALGOS = ("ring", "tree", "bidir_ring")
+
+
+def predict_allreduce_time(algo: str, size_bytes: int, n_ranks: int, *,
+                           n_nodes: int = 1,
+                           link_bw: float = LINK_BW,
+                           alpha: float = LINK_LATENCY_S) -> float:
+    """Alpha-beta time estimate for one AllReduce, in seconds.
+
+    The same wire-byte formulas the HLO analysis above uses
+    (all-reduce moves ``2·(g-1)/g · S``), with per-algorithm latency
+    terms: a ring serializes ``2·(g-1)`` hops, a halving/doubling tree
+    takes ``2·log2(g)`` rounds at derated bandwidth, and ``bidir_ring``
+    stands in for the hierarchical 2D schedule — intra-node rings at
+    full bandwidth plus an inter-node ring over the per-node shard.
+    Flat ring/tree on a multi-node mesh pay the inter-node bandwidth
+    penalty on every hop (their schedules cross nodes constantly).
+    """
+    g = max(2, int(n_ranks))
+    s = float(size_bytes)
+    n_nodes = max(1, int(n_nodes))
+    wire = 2.0 * (g - 1) / g * s
+    cross = INTER_NODE_PENALTY if n_nodes > 1 else 1.0
+    if algo == "ring":
+        return 2.0 * (g - 1) * alpha + wire / (link_bw / cross)
+    if algo == "tree":
+        rounds = 2.0 * max(1, (g - 1).bit_length())
+        return rounds * alpha + wire / (TREE_BW_DERATE * link_bw / cross)
+    if algo == "bidir_ring":
+        if n_nodes == 1:
+            # degenerate: one node -> a plain ring with setup overhead
+            return 2.0 * (g - 1) * alpha + wire / link_bw + 2.0 * alpha
+        rpn = max(1, g // n_nodes)
+        intra = (2.0 * (rpn - 1) * alpha +
+                 2.0 * (rpn - 1) / rpn * s / link_bw)
+        s_node = s / rpn
+        inter = (2.0 * (n_nodes - 1) * alpha +
+                 2.0 * (n_nodes - 1) / n_nodes * s_node /
+                 (link_bw / INTER_NODE_PENALTY))
+        return intra + inter
+    raise ValueError(f"unknown allreduce algo {algo!r}; "
+                     f"algos: {ALLREDUCE_ALGOS}")
+
+
+def best_allreduce_algo(size_bytes: int, n_ranks: int, *,
+                        n_nodes: int = 1) -> str:
+    """Predictor argmin over :data:`ALLREDUCE_ALGOS` — what topo_tuner's
+    thresholds are validated against (tests/test_mesh_dispatch.py)."""
+    return min(ALLREDUCE_ALGOS,
+               key=lambda a: predict_allreduce_time(
+                   a, size_bytes, n_ranks, n_nodes=n_nodes))
+
+
 def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
     """6·N·D (train) or 2·N·D (fwd) with N = active params."""
     n_active = cfg.param_count(active_only=True)

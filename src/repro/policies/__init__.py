@@ -5,6 +5,7 @@ from .casestudies import (adapt_map, adapt_profiler, adapt_tuner,
                           net_stats, ring_mid_v2)
 from .loops import (LOOP_POLICIES, histogram_bucket_tuner,
                     latency_argmin_tuner)
+from .mesh import topo_tuner
 from .perf import (expert_chunked_a2a, grad_compress,
                    grad_compress_bidir, tpu_size_aware)
 from .table1 import (SAFE_POLICIES, adaptive_channels, bandwidth_probe,
@@ -22,5 +23,5 @@ __all__ = [
     "net_accounting", "net_stats", "noop", "ring_mid_v2", "size_aware",
     "expert_chunked_a2a", "grad_compress", "grad_compress_bidir",
     "tpu_size_aware",
-    "slo_enforcer", "static_override",
+    "slo_enforcer", "static_override", "topo_tuner",
 ]

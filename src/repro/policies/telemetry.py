@@ -36,11 +36,18 @@ PROTO_LL = Proto.LL
 EMA_SHIFT = 3               # ema_step weight 2**3: new = (old*7 + sample) / 8
 LARGE_EMA = 262144          # ring/simple at/above 256 KiB running size
 
-# (count, ema) per (coll_type, size-bucket) — u64 composite key
+# (count, ema) per (coll_type, size-bucket) — u64 composite key.  The
+# merge spec is what makes the state mesh-safe: on a multi-device run
+# each shard accumulates its own copy, and the shard merge
+# (core.shardmerge) sums the count deltas while the EMA cell goes to
+# the shard with the most writes (max-version-wins) instead of being
+# summed into nonsense
 tuner_state = map_decl("bucket_tune_state", kind="hash", key_size=8,
-                       value_size=16, max_entries=128)
+                       value_size=16, max_entries=128,
+                       merge=("sum", "max"))
 prof_state = map_decl("bucket_prof_state", kind="hash", key_size=8,
-                      value_size=16, max_entries=128)
+                      value_size=16, max_entries=128,
+                      merge=("sum", "max"))
 
 
 @policy(section="tuner", maps=[tuner_state])

@@ -1,0 +1,360 @@
+"""Mesh-scale dispatch: topology-aware decisions + sharded-telemetry sync.
+
+Covers the ISSUE-10 dispatcher surface:
+
+  * ``mesh_topology`` / ``make_host_mesh`` (which now RAISES on too few
+    devices instead of silently shrinking the mesh);
+  * ``set_topology`` feeding the new ``n_nodes``/``ranks_per_node`` ctx
+    fields into policies, and joining the decision-cache key;
+  * ``register_mesh_sync`` / ``sync_telemetry`` and the
+    ``telemetry_sync_every`` auto-trigger;
+  * ``topo_tuner`` agreeing with the alpha-beta predictor
+    (``launch.roofline.best_allreduce_algo``) across sizes and node
+    counts;
+  * ``_comm_id`` stability across mesh reconfiguration;
+  * the in-graph per-shard write cursor + ``merge_shard_states``
+    round-trip;
+  * the ``extract_decision`` falsy-zero regression and the table2
+    driver-failure gate (stderr tail surfaced, suite raises).
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.collectives.dispatch import (CollectiveDispatcher, DispatchConfig,
+                                        _comm_id)
+from repro.core import PolicyRuntime, make_ctx
+from repro.core.context import Algo, AxisKind, CollType, Proto
+from repro.core.maps import MapRegistry
+from repro.launch.mesh import make_host_mesh, mesh_topology
+from repro.launch.roofline import (ALLREDUCE_ALGOS, best_allreduce_algo,
+                                   predict_allreduce_time)
+from repro.policies.mesh import topo_tuner
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+KiB = 1 << 10
+MiB = 1 << 20
+
+
+def _disp(**cfg_kw):
+    rt = PolicyRuntime(tier="jit")
+    rt.load(topo_tuner.program)
+    return CollectiveDispatcher(runtime=rt, config=DispatchConfig(**cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# mesh facts
+# ---------------------------------------------------------------------------
+
+def test_make_host_mesh_raises_actionable_error():
+    """The old silent-shrink behavior produced meshes with a different
+    rank count than requested; the error must name requested vs
+    available and the XLA_FLAGS remedy."""
+    import jax
+    have = len(jax.devices())
+    with pytest.raises(ValueError) as ei:
+        make_host_mesh(have + 63)
+    msg = str(ei.value)
+    assert f"needs {have + 63} device(s)" in msg
+    assert f"has {have}" in msg
+    assert "xla_force_host_platform_device_count" in msg
+
+
+def test_make_host_mesh_ok_within_device_count():
+    mesh = make_host_mesh(1)
+    assert mesh.devices.size == 1
+
+
+def test_mesh_topology_facts_and_axis_validation():
+    mesh = make_host_mesh(1)
+    topo = mesh_topology(mesh)
+    assert topo["n_nodes"] == 1
+    assert topo["ranks_per_node"] == topo["n_devices"] == 1
+    assert topo["axis_sizes"] == {"data": 1, "model": 1}
+    assert mesh_topology(mesh, axis_name="model")["n_nodes"] == 1
+    with pytest.raises(ValueError, match="no axis 'x'"):
+        mesh_topology(mesh, axis_name="x")
+
+
+def test_set_topology_from_mesh_and_explicit():
+    disp = _disp()
+    assert disp.topology == (0, 0)                 # unknown until set
+    n_nodes, rpn = disp.set_topology(make_host_mesh(1))
+    assert (n_nodes, rpn) == (1, 1) == disp.topology
+    assert disp.set_topology(n_nodes=4, ranks_per_node=8) == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# topology-aware decisions
+# ---------------------------------------------------------------------------
+
+def test_topology_ctx_fields_reach_policies():
+    """topo_tuner reads ctx.n_nodes: the SAME (size, n_ranks) flips from
+    the single-node ring to the hierarchical 2D schedule when the
+    dispatcher learns the mesh spans nodes."""
+    disp = _disp()
+    disp.set_topology(n_nodes=1, ranks_per_node=8)
+    d = disp.decide(CollType.ALL_REDUCE, 4 * MiB, 8, axis_name="x")
+    assert d.from_policy and d.algo == Algo.RING
+
+    disp.set_topology(n_nodes=2, ranks_per_node=4)
+    d = disp.decide(CollType.ALL_REDUCE, 4 * MiB, 8, axis_name="x")
+    assert d.from_policy and d.algo == Algo.BIDIR_RING
+    # small message across nodes: latency-bound tree
+    d = disp.decide(CollType.ALL_REDUCE, 32 * KiB, 8, axis_name="x")
+    assert d.from_policy and d.algo == Algo.TREE and d.proto == Proto.LL
+
+
+def test_topology_joins_decision_cache_key():
+    """topo_tuner is pure (no helper calls), so decisions memoize — but
+    a topology change must never serve a stale cached decision."""
+    disp = _disp()
+    disp.set_topology(n_nodes=1, ranks_per_node=8)
+    args = (CollType.ALL_REDUCE, 4 * MiB, 8)
+    d1 = disp.decide(*args, axis_name="x")
+    assert disp.cache_misses == 1
+    d2 = disp.decide(*args, axis_name="x")
+    assert disp.cache_hits == 1 and d2.algo == d1.algo
+    disp.set_topology(n_nodes=2, ranks_per_node=4)
+    d3 = disp.decide(*args, axis_name="x")
+    assert disp.cache_misses == 2                  # key includes topology
+    assert d3.algo == Algo.BIDIR_RING != d1.algo
+
+
+def test_topo_tuner_matches_alpha_beta_predictor():
+    """The selection thresholds mirror launch.roofline's argmin: sweep
+    sizes x node counts and require agreement (the policy exists to
+    encode exactly this structure)."""
+    rt = PolicyRuntime(tier="jit")
+    rt.load(topo_tuner.program)
+    algo_name = {Algo.RING: "ring", Algo.TREE: "tree",
+                 Algo.BIDIR_RING: "bidir_ring"}
+    sizes = [16 * KiB, 64 * KiB, 256 * KiB, 1 * MiB, 4 * MiB, 32 * MiB]
+    for n_nodes, rpn in [(1, 8), (2, 2), (2, 4), (2, 8), (4, 4), (4, 8)]:
+        n_ranks = n_nodes * rpn
+        for size in sizes:
+            ctx = make_ctx("tuner", coll_type=CollType.ALL_REDUCE,
+                           msg_size=size, n_ranks=n_ranks, max_channels=16,
+                           n_nodes=n_nodes, ranks_per_node=rpn)
+            ret = rt.invoke("tuner", ctx)
+            assert ret == 1
+            got = algo_name[ctx["algorithm"]]
+            want = best_allreduce_algo(size, n_ranks, n_nodes=n_nodes)
+            # exact agreement, with a near-tie tolerance at crossovers
+            if got != want:
+                t_got = predict_allreduce_time(got, size, n_ranks,
+                                               n_nodes=n_nodes)
+                t_best = predict_allreduce_time(want, size, n_ranks,
+                                                n_nodes=n_nodes)
+                assert t_got <= 1.3 * t_best, (
+                    f"size={size} nodes={n_nodes}: policy {got} is "
+                    f"{t_got / t_best:.2f}x the predictor's {want}")
+
+
+def test_predictor_shape_sanity():
+    assert set(ALLREDUCE_ALGOS) == {"ring", "tree", "bidir_ring"}
+    # single-node degenerate 2D == ring + constant
+    assert predict_allreduce_time("bidir_ring", 1 * MiB, 8) >= \
+        predict_allreduce_time("ring", 1 * MiB, 8)
+    # latency regime favors tree, bandwidth regime favors ring
+    assert best_allreduce_algo(4 * KiB, 8) == "tree"
+    assert best_allreduce_algo(32 * MiB, 8) == "ring"
+
+
+def test_non_allreduce_defers():
+    disp = _disp()
+    disp.set_topology(n_nodes=1, ranks_per_node=8)
+    d = disp.decide(CollType.ALL_GATHER, 4 * MiB, 8, axis_name="x")
+    assert not d.from_policy
+
+
+# ---------------------------------------------------------------------------
+# telemetry sync plumbing
+# ---------------------------------------------------------------------------
+
+def test_sync_telemetry_runs_registered_callbacks():
+    disp = _disp()
+    calls = []
+    disp.register_mesh_sync(lambda: calls.append("a"))
+    disp.register_mesh_sync(lambda: calls.append("b"))
+    assert disp.sync_telemetry() == 2
+    assert calls == ["a", "b"]
+    assert disp.telemetry_syncs == 1
+
+
+def test_telemetry_sync_every_auto_triggers():
+    disp = _disp(telemetry_sync_every=3)
+    disp.set_topology(n_nodes=1, ranks_per_node=8)
+    calls = []
+    disp.register_mesh_sync(lambda: calls.append(1))
+    for i in range(7):
+        # distinct sizes AND repeats: the auto-trigger must count cache
+        # hits too (every dispatch is a decision)
+        disp.decide(CollType.ALL_REDUCE, (1 + i % 2) * MiB, 8,
+                    axis_name="x")
+    assert len(calls) == 2                        # after decisions 3 and 6
+    assert disp.telemetry_syncs == 2
+    disp.sync_telemetry()                         # manual is always allowed
+    assert len(calls) == 3
+
+
+# ---------------------------------------------------------------------------
+# communicator identity
+# ---------------------------------------------------------------------------
+
+def test_comm_id_stable_across_mesh_reconfiguration():
+    """The communicator hash depends only on the axis identity, never on
+    mesh/dispatcher object identity — telemetry keyed on comm_id must
+    survive a mesh rebuild."""
+    assert _comm_id("x", 8) == _comm_id("x", 8)
+    assert _comm_id("x", 8) != _comm_id("x", 4)
+    assert _comm_id("x", 8) != _comm_id("y", 8)
+
+    d1 = _disp()
+    d1.set_topology(n_nodes=1, ranks_per_node=8)
+    a = d1.decide(CollType.ALL_REDUCE, MiB, 8, axis_name="x")
+    # reconfigure: fresh dispatcher, fresh runtime, new topology object
+    d2 = _disp()
+    d2.set_topology(n_nodes=2, ranks_per_node=4)
+    b = d2.decide(CollType.ALL_REDUCE, MiB, 8, axis_name="x")
+    assert a.comm_id == b.comm_id
+
+
+# ---------------------------------------------------------------------------
+# in-graph shard state: write cursor + merge round-trip
+# ---------------------------------------------------------------------------
+
+def test_ingraph_cursor_counts_decides_and_merge_lands_in_host_maps():
+    from repro.collectives.ingraph import CURSOR_KEY, InGraphSelector
+    from repro.policies.telemetry import bucket_tuner
+
+    sel = InGraphSelector(bucket_tuner.program, tier="pallas32")
+    assert "bucket_tune_state" in sel.written_names
+    reg = MapRegistry()
+    base = sel.init_state(reg)
+    assert int(np.asarray(base[CURSOR_KEY])[0]) == 0
+
+    size = 1 * MiB
+
+    def run(state, times):
+        for _ in range(times):
+            _, _, state = sel.decide(state, coll=CollType.ALL_REDUCE,
+                                     msg_bytes=size, n=8)
+        return state
+
+    s0 = run(dict(base), 2)
+    s1 = run(dict(base), 3)
+    assert int(np.asarray(s0[CURSOR_KEY])[0]) == 2
+    assert int(np.asarray(s1[CURSOR_KEY])[0]) == 3
+
+    stats = {}
+    merged = sel.merge_shard_states(reg, [s0, s1], base, stats)
+    assert merged == 1
+    m = reg.get("bucket_tune_state")
+    (key_bytes,) = list(m.keys())
+    vals = np.frombuffer(bytes(m.lookup_ref(key_bytes)), dtype="<u8")
+    assert int(vals[0]) == 5                      # counts sum across shards
+    assert int(vals[1]) == size                   # EMA fixed point
+    assert stats.get("dropped_keys", 0) == 0
+    # merge independent of shard order
+    reg2 = MapRegistry()
+    base2 = sel.init_state(reg2)
+    sel.merge_shard_states(reg2, [s1, s0], base2)
+    m2 = reg2.get("bucket_tune_state")
+    assert np.array_equal(m.to_device(), m2.to_device())
+
+
+def test_ingraph_unstacked_shards_require_consistent_axis():
+    from repro.collectives.ingraph import InGraphSelector
+    from repro.policies.telemetry import bucket_tuner
+    sel = InGraphSelector(bucket_tuner.program, tier="pallas32")
+    good = {"a": np.zeros((2, 3)), "b": np.zeros((2,))}
+    assert len(sel.unstack_sharded(good)) == 2
+    with pytest.raises(ValueError, match="inconsistent"):
+        sel.unstack_sharded({"a": np.zeros((2, 3)), "b": np.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# benchmarks: extract_decision regression + driver-failure gate
+# ---------------------------------------------------------------------------
+
+def _table2():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import table2_allreduce
+    return table2_allreduce
+
+
+def test_extract_decision_distinguishes_default_from_deferral():
+    """The falsy-zero regression: ``Algo.DEFAULT == 0`` and
+    ``Proto.SIMPLE == 0``, so the old ``ctx["algorithm"] or
+    Algo.DEFAULT`` could not tell a policy that DECIDED the default
+    lowering from one that deferred — and ``ctx["n_channels"] or 8``
+    silently papered over an explicit 0-channel decision."""
+    t2 = _table2()
+
+    def ctx_of(algo, proto, ch):
+        return {"algorithm": algo, "protocol": proto, "n_channels": ch}
+
+    # no link ran -> deferred
+    assert t2.extract_decision(ctx_of(1, 0, 8), None)[3] is False
+    # all-outputs-zero sentinel -> deferred
+    assert t2.extract_decision(ctx_of(0, 0, 0), 1)[3] is False
+    # defaults apply on deferral
+    assert t2.extract_decision(ctx_of(0, 0, 0), None) == (
+        Algo.DEFAULT, Proto.SIMPLE, 8, False)
+    # an explicit (DEFAULT, SIMPLE, 8) decision is FROM the policy even
+    # though algorithm and protocol are both falsy
+    algo, proto, ch, fp = t2.extract_decision(ctx_of(0, 0, 8), 1)
+    assert (algo, proto, ch, fp) == (Algo.DEFAULT, Proto.SIMPLE, 8, True)
+    # an explicit ring/ll decision passes through untouched
+    assert t2.extract_decision(ctx_of(Algo.RING, Proto.LL, 4), 1) == (
+        Algo.RING, Proto.LL, 4, True)
+
+
+def test_driver_failure_surfaces_stderr_and_gates_suite(monkeypatch):
+    """A dead 8-device driver must fail the suite loudly — full stderr
+    tail in the report AND a raised error — never a silent skip."""
+    t2 = _table2()
+
+    class FakeProc:
+        returncode = 17
+        stdout = ""
+        stderr = "x" * 5000 + "RuntimeError: devices went away"
+
+    monkeypatch.setattr(t2, "_run_driver",
+                        lambda which, timeout=1200: (FakeProc(), []))
+    reports = []
+
+    def report(section, name, **kv):
+        reports.append((section, name, kv))
+
+    with pytest.raises(RuntimeError, match="devices went away"):
+        t2.run(report)
+    failed = [r for r in reports if r[1] == "driver_failed"]
+    assert len(failed) == 1
+    tail = failed[0][2]["stderr_tail"]
+    assert tail.endswith("devices went away")
+    assert len(tail) <= t2.STDERR_TAIL
+
+
+def test_ci_closed_loop_reports_failure_without_touching_bench_json(
+        monkeypatch, tmp_path):
+    t2 = _table2()
+
+    class FakeProc:
+        returncode = 3
+        stdout = ""
+        stderr = "boom"
+
+    monkeypatch.setattr(t2, "_run_driver",
+                        lambda which, timeout=1200: (FakeProc(), []))
+    out = tmp_path / "BENCH_table1.json"
+    rec = t2.ci_closed_loop(out=str(out))
+    assert rec["ok"] is False
+    assert rec["stderr_tail"] == "boom"
+    assert not out.exists()                       # failed runs don't write

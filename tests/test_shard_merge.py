@@ -1,0 +1,354 @@
+"""Deterministic shard merge (core.shardmerge) + mesh-mode DeviceBridge.
+
+Pins the ISSUE-10 contract:
+
+  * the merge is bit-deterministic in shard ARRIVAL ORDER (the engine
+    sorts on shard id internally) and in DEVICE COUNT — one shard doing
+    all the writes and eight shards splitting them produce bit-identical
+    merged host state for counter slots, and the EMA fixed point makes
+    the same hold for ``merge="max"`` cells under constant-size traffic;
+  * ``"sum"`` slots merge as base + per-shard deltas, so host mutations
+    made while shards were accumulating are never lost;
+  * ``"max"`` slots go to the writer with the highest cursor, ties to
+    the lowest shard id;
+  * hash maps merge per KEY (insertion order per shard is irrelevant),
+    re-encode canonically, and drop overflow keys counted in stats;
+  * ``HashMap.from_device`` mutates the LIVE dict in place — the host
+    JIT binds ``_table.get`` at compile time, so a merge that rebound
+    the dict would leave every host-tier policy reading pre-merge state
+    forever (the closed-loop warm-decision bug).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import PolicyRuntime, make_ctx
+from repro.core.maps import MapRegistry, hash_slot
+from repro.core.program import MapDecl
+from repro.core.shardmerge import (MERGEABLE_KINDS, Shard, ShardMergeError,
+                                   merge_array_shards, merge_hash_shards,
+                                   merge_map_shards, pairs_to_u64,
+                                   slot_merge_spec, u64_to_pairs)
+
+U64 = np.uint64
+
+
+def _arr_decl(name="m", value_size=16, max_entries=4, merge=("sum", "max")):
+    return MapDecl(name=name, kind="array", key_size=4,
+                   value_size=value_size, max_entries=max_entries,
+                   merge=merge)
+
+
+def _hash_decl(name="h", max_entries=8, merge=("sum", "max")):
+    return MapDecl(name=name, kind="hash", key_size=8, value_size=16,
+                   max_entries=max_entries, merge=merge)
+
+
+def test_slot_merge_spec_pads_with_sum():
+    d = MapDecl(name="m", kind="array", key_size=4, value_size=32,
+                max_entries=1, merge=("max",))
+    assert slot_merge_spec(d) == ("max", "sum", "sum", "sum")
+    assert slot_merge_spec(_arr_decl(merge=())) == ("sum", "sum")
+
+
+def test_pairs_roundtrip():
+    a = np.array([0, 1, 0xFFFFFFFF, 1 << 32, (1 << 64) - 1], dtype=U64)
+    assert np.array_equal(pairs_to_u64(u64_to_pairs(a)), a)
+
+
+def _mk_shards(base, writes):
+    """writes: {sid: (cursor, delta_array)} on top of `base`."""
+    out = []
+    for sid, (cursor, arr) in writes.items():
+        out.append(Shard(sid, arr, cursor, base))
+    return out
+
+
+def test_array_merge_independent_of_shard_order():
+    d = _arr_decl()
+    base = np.zeros((4, 2), dtype=U64)
+    rng = np.random.RandomState(7)
+    shards = []
+    for sid in range(8):
+        arr = base.copy()
+        arr[:, 0] += rng.randint(0, 100, size=4).astype(U64)   # counters
+        arr[:, 1] = rng.randint(0, 1 << 20, size=4).astype(U64)  # ema
+        shards.append(Shard(sid, arr, cursor=1 + sid, base=base))
+    ref = merge_array_shards(d, base, shards)
+    for perm in ([7, 0, 3, 1, 6, 2, 5, 4], list(reversed(range(8)))):
+        got = merge_array_shards(d, base, [shards[i] for i in perm])
+        assert np.array_equal(got, ref)
+
+
+def test_array_sum_is_delta_based_host_writes_survive():
+    d = _arr_decl(merge=("sum", "sum"))
+    seed = np.full((4, 2), 10, dtype=U64)
+    shards = []
+    for sid in range(3):
+        arr = seed.copy()
+        arr[:, 0] += U64(5)          # each shard adds 5 on top of its seed
+        shards.append(Shard(sid, arr, 1, seed))
+    # host advanced past every shard's seed while they accumulated
+    host = np.full((4, 2), 100, dtype=U64)
+    out = merge_array_shards(d, host, shards)
+    assert np.all(out[:, 0] == 115)  # 100 + 3*5, NOT 10 + ...
+
+
+def test_array_max_highest_cursor_wins_ties_to_lowest_sid():
+    d = _arr_decl(merge=("sum", "max"))
+    base = np.zeros((1, 2), dtype=U64)
+
+    def shard(sid, cursor, ema):
+        arr = base.copy()
+        arr[0, 1] = ema
+        return Shard(sid, arr, cursor, base)
+
+    out = merge_array_shards(d, base, [shard(0, 2, 111), shard(1, 9, 222),
+                                       shard(2, 4, 333)])
+    assert out[0, 1] == 222          # cursor 9 wins
+    # tie on cursor: lowest shard id wins regardless of arrival order
+    out = merge_array_shards(d, base, [shard(2, 5, 333), shard(0, 5, 111)])
+    assert out[0, 1] == 111
+    # a shard that never changed the cell is not a writer
+    out = merge_array_shards(d, base, [shard(1, 9, 0), shard(2, 1, 42)])
+    assert out[0, 1] == 42
+
+
+def test_array_sum_wraps_u64():
+    d = _arr_decl(merge=("sum",), value_size=8)
+    base = np.array([[(1 << 64) - 2]], dtype=U64)
+    arr = np.array([[(1 << 64) - 1]], dtype=U64)   # delta +1
+    with np.errstate(over="ignore"):
+        out = merge_array_shards(d, base.copy(),
+                                 [Shard(0, arr, 1, base),
+                                  Shard(1, arr, 1, base)])
+    assert out[0, 0] == 0            # (2^64-2) + 1 + 1 wraps to 0
+
+
+def _hash_device(decl, table):
+    """Encode {key: (v0, v1)} in the open-addressing device layout,
+    inserting in dict order (mirrors HashMap.to_device)."""
+    rows = decl.max_entries + 1
+    slots = decl.value_size // 8
+    arr = np.zeros((rows, slots + 2), dtype=U64)
+    for k, vals in table.items():
+        i = hash_slot(k, decl.max_entries)
+        while arr[i, slots + 1] != 0:
+            i = (i + 1) % decl.max_entries
+        arr[i, :slots] = vals
+        arr[i, slots] = k
+        arr[i, slots + 1] = 1
+    arr[decl.max_entries, 0] = len(table)
+    return arr
+
+
+def test_hash_merge_per_key_insert_order_irrelevant():
+    d = _hash_decl()
+    base = _hash_device(d, {})
+    # two shards insert the SAME keys in different orders
+    s0 = Shard(0, _hash_device(d, {7: (3, 64), 9: (1, 128)}), 4, base)
+    s1 = Shard(1, _hash_device(d, {9: (2, 128), 7: (1, 64)}), 3, base)
+    ref = merge_hash_shards(d, base, [s0, s1])
+    got = merge_hash_shards(d, base, [s1, s0])
+    assert np.array_equal(ref, got)
+    # counts summed per key; EMA to the higher-cursor writer (s0)
+    slots = d.value_size // 8
+    tab = {int(ref[i, slots]): ref[i, :slots]
+           for i in range(d.max_entries) if ref[i, slots + 1]}
+    assert tab[7][0] == 4 and tab[9][0] == 3
+    assert tab[7][1] == 64 and tab[9][1] == 128
+
+
+def test_hash_merge_overflow_drops_new_keys_and_counts_them():
+    d = _hash_decl(max_entries=4)
+    base = _hash_device(d, {1: (5, 0), 2: (5, 0)})
+    extra = _hash_device(d, {1: (6, 0), 11: (1, 0), 12: (1, 0), 13: (1, 0)})
+    stats = {}
+    out = merge_hash_shards(d, base, [Shard(0, extra, 1, base)], stats)
+    assert stats["dropped_keys"] == 1          # 5 keys into 4 slots
+    slots = d.value_size // 8
+    keys = {int(out[i, slots]) for i in range(d.max_entries)
+            if out[i, slots + 1]}
+    # base keys survive; the LAST key of the canonical order is dropped
+    assert keys == {1, 2, 11, 12}
+    assert int(out[d.max_entries, 0]) == 4     # control row occupancy
+
+
+def test_merge_map_shards_rejects_unmergeable_kind():
+    d = MapDecl(name="rb", kind="ringbuf", key_size=0, value_size=16,
+                max_entries=8)
+    assert d.kind not in MERGEABLE_KINDS
+    with pytest.raises(ShardMergeError, match="ringbuf"):
+        merge_map_shards(d, np.zeros((1, 1), dtype=U64), [])
+
+
+def test_duplicate_shard_ids_rejected():
+    d = _arr_decl()
+    base = np.zeros((4, 2), dtype=U64)
+    with pytest.raises(ShardMergeError, match="duplicate"):
+        merge_array_shards(d, base, [Shard(1, base, 1, base),
+                                     Shard(1, base, 1, base)])
+
+
+# ---------------------------------------------------------------------------
+# mesh-mode DeviceBridge
+# ---------------------------------------------------------------------------
+
+def _mk_bridge(n_shards, registry=None):
+    from repro.core.pallasc import compile_host
+    from repro.policies.telemetry import bucket_tuner
+    prog = bucket_tuner.program
+    reg = registry or MapRegistry()
+    resolved = {d.name: reg.create(d.name, d.kind, key_size=d.key_size,
+                                   value_size=d.value_size,
+                                   max_entries=d.max_entries)
+                for d in prog.maps}
+    bridge = compile_host(prog, resolved, tier="pallas32", mode="jit",
+                          sync="deferred", n_shards=n_shards)
+    return bridge, resolved["bucket_tune_state"]
+
+
+def _tuner_ctx(size):
+    from repro.core.context import CollType
+    return make_ctx("tuner", coll_type=CollType.ALL_REDUCE, msg_size=size,
+                    n_ranks=8, max_channels=32)
+
+
+def _table_snapshot(m):
+    return {int.from_bytes(bytes(k), "little"):
+            tuple(np.frombuffer(bytes(m.lookup_ref(k)), dtype="<u8"))
+            for k in m.keys()}
+
+
+@pytest.mark.parametrize("order", [list(range(8)),
+                                   [5, 2, 7, 0, 3, 6, 1, 4]])
+def test_bridge_1_vs_8_shards_bit_identical(order):
+    """The acceptance differential: N calls through ONE shard and the
+    same N calls round-robined over EIGHT shards (in any shard order)
+    land bit-identical merged host state.  Counter slots because sum is
+    order-free; the EMA slot because constant-size traffic makes it a
+    fixed point of ema_step."""
+    size = 1 << 20
+    b1, m1 = _mk_bridge(1)
+    for _ in range(24):
+        b1(_tuner_ctx(size).buf)
+    b1.flush()
+
+    b8, m8 = _mk_bridge(8)
+    for rep in range(3):
+        for shard in order:
+            b8.set_shard(shard)
+            b8(_tuner_ctx(size).buf)
+    b8.flush()
+
+    assert _table_snapshot(m1) == _table_snapshot(m8)
+    assert np.array_equal(m1.to_device(), m8.to_device())
+    assert b8.stats.shard_merges == 1
+    # post-merge the shard copies are dropped; the next flush is a no-op
+    assert b8.flush() == 0
+
+
+def test_bridge_shard_merge_sums_counts_across_shards():
+    size = 64 << 10
+    b, m = _mk_bridge(4)
+    for shard in range(4):
+        b.set_shard(shard)
+        for _ in range(3):
+            b(_tuner_ctx(size).buf)
+    b.flush()
+    (key, (count, ema)), = _table_snapshot(m).items()
+    assert count == 12               # 4 shards x 3 sightings
+    assert ema == size               # constant-size EMA fixed point
+
+
+def test_bridge_set_shard_validates_range():
+    from repro.core.pallasc import PallascError
+    b, _ = _mk_bridge(4)
+    with pytest.raises(PallascError, match="out of range"):
+        b.set_shard(4)
+    with pytest.raises(PallascError, match="out of range"):
+        b.set_shard(-1)
+
+
+def test_bridge_rejects_multi_shard_step_sync():
+    from repro.core.pallasc import PallascError, compile_host
+    from repro.policies.telemetry import bucket_tuner
+    with pytest.raises(PallascError, match="deferred"):
+        compile_host(bucket_tuner.program, {}, tier="pallas32",
+                     mode="jit", sync="step", n_shards=4)
+    with pytest.raises(PallascError, match="n_shards"):
+        compile_host(bucket_tuner.program, {}, tier="pallas32",
+                     mode="jit", sync="deferred", n_shards=0)
+
+
+def test_runtime_bridge_shards_knob_validated():
+    with pytest.raises(ValueError, match="deferred"):
+        PolicyRuntime(tier="pallas32", bridge_shards=4)   # default step
+    with pytest.raises(ValueError, match="bridge_shards"):
+        PolicyRuntime(tier="pallas32", bridge_sync="deferred",
+                      bridge_shards=0)
+
+
+# ---------------------------------------------------------------------------
+# HashMap.from_device identity (the closed-loop warm-decision regression)
+# ---------------------------------------------------------------------------
+
+def test_hash_from_device_preserves_dict_identity_and_live_refs():
+    reg = MapRegistry()
+    m = reg.create("idmap", "hash", key_size=8, value_size=16,
+                   max_entries=8)
+    m.update((1).to_bytes(8, "little"), bytes(16))
+    table_before = m._table
+    live_ref = m.lookup_ref((1).to_bytes(8, "little"))
+
+    arr = m.to_device()
+    slots = 2
+    # mutate key 1's value and add key 2 device-side, then write back
+    i1 = next(i for i in range(8) if int(arr[i, slots]) == 1)
+    arr[i1, 0] = 42
+    i2 = hash_slot(2, 8)
+    while arr[i2, slots + 1] != 0:
+        i2 = (i2 + 1) % 8
+    arr[i2, :slots] = (7, 9)
+    arr[i2, slots] = 2
+    arr[i2, slots + 1] = 1
+    arr[8, 0] = 2
+    m.from_device(arr)
+
+    assert m._table is table_before            # dict identity preserved
+    assert int.from_bytes(bytes(live_ref[:8]), "little") == 42  # in place
+    assert m.lookup_u64(2) == 7
+    # a key absent from the device array is deleted
+    arr[i2, slots + 1] = 0
+    m.from_device(arr)
+    assert m.lookup_ref((2).to_bytes(8, "little")) is None
+    assert m._table is table_before
+
+
+def test_host_jit_sees_keys_added_by_shard_merge():
+    """End-to-end regression for the closed-loop bug: a host-tier (jit)
+    policy chain and a mesh-mode bridge share one pinned hash map.  The
+    jit fast path binds the map's dict at load; after the bridge's
+    merged flush publishes NEW keys via ``from_device``, the host chain
+    must see them — with the old rebinding ``from_device`` it kept
+    reading the pre-merge dict and re-deciding cold forever."""
+    from repro.policies.telemetry import bucket_tuner
+    rt = PolicyRuntime(tier="jit")
+    rt.load(bucket_tuner.program)
+    bridge, m = _mk_bridge(4, registry=rt.maps)
+
+    size = 1 << 20
+    for shard in range(4):
+        bridge.set_shard(shard)
+        for _ in range(3):
+            bridge(_tuner_ctx(size).buf)
+    bridge.flush()                   # publishes the key via from_device
+    snap = _table_snapshot(m)
+    assert list(snap.values())[0][0] == 12
+
+    ctx = _tuner_ctx(size)
+    ret = rt.invoke("tuner", ctx)
+    # found the merged entry (count 12 -> 13) instead of re-inserting
+    assert ret == 13
+    from repro.core.context import Algo
+    assert ctx["algorithm"] == Algo.RING       # 1 MiB EMA >= 256 KiB
